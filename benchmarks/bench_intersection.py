@@ -1,0 +1,68 @@
+"""Paper Figures 7/8 (Appendix B): intersection estimator quality.
+
+Fig 8: |A| = |B| fixed, |A∩B| swept down — MLE should beat
+inclusion-exclusion by ~an order of magnitude, both degrading as the
+relative intersection shrinks.
+Fig 7: |A∩B|/|B| fixed at 10%, |B| swept down — domination frequency rises
+as |B| shrinks and estimates degrade.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core import hll, intersection
+from repro.core.hll import HLLConfig
+
+
+def _pair(rng, na, nb, nx, cfg):
+    base = rng.integers(0, 2 ** 30, size=na + nb + nx).astype(np.uint32)
+    A = np.concatenate([base[:na], base[na + nb:]])
+    B = base[na:]
+    ra = hll.insert(hll.empty(cfg), jnp.asarray(A), cfg)
+    rb = hll.insert(hll.empty(cfg), jnp.asarray(B), cfg)
+    return ra, rb
+
+
+def run(small: bool = True) -> None:
+    cfg = HLLConfig(p=12)
+    rng = np.random.default_rng(0)
+    trials = 3 if small else 10
+
+    # Fig 8: fixed set sizes, sweep intersection
+    nab = 100_000 if not small else 20_000
+    for frac in (0.5, 0.1, 0.02, 0.005):
+        nx = max(int(nab * frac), 1)
+        mle_err, ie_err = [], []
+        secs = 0.0
+        for _ in range(trials):
+            ra, rb = _pair(rng, nab - nx, nab - nx, nx, cfg)
+            (est,), dt = timer(lambda: np.asarray(
+                intersection.mle_intersection(ra[None], rb[None], cfg)))
+            secs += dt
+            ie = float(intersection.inclusion_exclusion(ra, rb, cfg))
+            mle_err.append(abs(float(est) - nx) / nx)
+            ie_err.append(abs(ie - nx) / nx)
+        emit(f"fig8_intersection/frac={frac}", secs / trials * 1e6,
+             f"mle_mre={np.mean(mle_err):.3f};ie_mre={np.mean(ie_err):.3f};"
+             f"ratio={np.mean(ie_err)/max(np.mean(mle_err),1e-9):.1f}")
+
+    # Fig 7: fixed 10% relative intersection, sweep |B| down; count dominations
+    na = 100_000 if not small else 50_000
+    for nb in (10_000, 1_000, 100):
+        nx = max(nb // 10, 1)
+        errs, doms = [], 0
+        for _ in range(trials):
+            ra, rb = _pair(rng, na - nx, nb - nx, nx, cfg)
+            dom, _ = intersection.domination_flags(ra, rb)
+            doms += int(dom)
+            est = float(intersection.mle_intersection(ra[None], rb[None],
+                                                      cfg)[0])
+            errs.append(abs(est - nx) / nx)
+        emit(f"fig7_domination/|B|={nb}", 0.0,
+             f"mle_mre={np.mean(errs):.3f};domination_rate={doms/trials:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: us/call for each Pallas kernel's op.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+emulation — timings are NOT representative of TPU), so the table times the
+jnp reference path (the XLA lowering a TPU would fuse) and reports the
+interpret-mode correctness check separately. TPU wall-times come from the
+roofline model (EXPERIMENTS.md §Roofline / kernels row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core.hll import HLLConfig
+from repro.kernels import ops
+
+
+def run(small: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    cfg = HLLConfig(p=8)
+    v, e = 4096, 1 << 14
+    regs = jnp.asarray(rng.integers(0, 30, size=(v, cfg.r)), jnp.uint8)
+    rows = jnp.asarray(rng.integers(0, v, size=e), jnp.int32)
+    keys = jnp.asarray(rng.integers(0, 2 ** 31, size=e), jnp.uint32)
+    src = jnp.asarray(rng.integers(0, v, size=e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, size=e), jnp.int32)
+
+    def j(fn, *a, **k):
+        out = fn(*a, **k)
+        jax.block_until_ready(out)
+        return out
+
+    _, t = timer(lambda: j(ops.accumulate, regs, rows, keys, cfg,
+                           impl="ref"), repeats=5)
+    emit("kernel/hll_accumulate", t * 1e6,
+         f"edges={e};edges_per_s={e/t:.2e};impl=ref(jnp)")
+    _, t = timer(lambda: j(ops.propagate, regs, src, dst, impl="ref"),
+                 repeats=5)
+    emit("kernel/hll_propagate", t * 1e6,
+         f"edges={e};rows_per_s={e/t:.2e};impl=ref(jnp)")
+    _, t = timer(lambda: j(ops.estimate, regs, cfg, impl="ref"), repeats=5)
+    emit("kernel/hll_estimate", t * 1e6,
+         f"sketches={v};sketches_per_s={v/t:.2e};impl=ref(jnp)")
+    a = jnp.asarray(rng.integers(0, 50, size=(512, cfg.r)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 50, size=(512, cfg.r)), jnp.uint8)
+    _, t = timer(lambda: j(ops.ertl_stats, a, b, cfg, impl="ref"), repeats=5)
+    emit("kernel/ertl_stats", t * 1e6,
+         f"pairs=512;pairs_per_s={512/t:.2e};impl=ref(jnp)")
+
+    # interpret-mode equivalence spot checks (correctness, not speed)
+    for name, ok in [
+        ("hll_accumulate", bool(jnp.all(
+            ops.accumulate(regs, rows[:512], keys[:512], cfg, impl="pallas")
+            == ops.accumulate(regs, rows[:512], keys[:512], cfg, impl="ref")))),
+        ("hll_estimate", bool(jnp.allclose(
+            ops.estimate(regs[:256], cfg, impl="pallas"),
+            ops.estimate(regs[:256], cfg, impl="ref")))),
+    ]:
+        emit(f"kernel_interpret_check/{name}", 0.0, f"match={ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Paper Figures 4/5/6: scaling.
+
+Fig 4/6 (weak/strong scaling vs processors): the accumulation +
+vertex-local HH pipeline on 1/2/4/8 simulated devices (subprocess per
+device count — XLA device count is locked at init). The paper's result:
+time roughly halves as processors double.
+
+Fig 5 (scaling vs graph size): time vs |E| at fixed resources — the paper's
+result: linear in m for both accumulation and estimation.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, graph_suite, timer
+from repro.core import degreesketch as dsk
+from repro.core.hll import HLLConfig
+from repro.graph import generators as gen
+
+_WORKER = r"""
+import os, sys, time
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax
+from repro.core.hll import HLLConfig
+from repro.distributed import sketch_dist as sd
+from repro.graph import generators as gen
+
+nd = int(sys.argv[1])
+edges = gen.rmat(11, 8, seed=9)
+n = int(edges.max()) + 1
+cfg = HLLConfig(p=8)
+mesh = jax.make_mesh((nd,), ("data",))
+plan = sd.build_plan(edges, n, nd)
+
+t0 = time.time()
+regs = sd.dist_accumulate(mesh, "data", plan, cfg)
+jax.block_until_ready(regs)
+acc_t = time.time() - t0
+
+t0 = time.time()
+tot, vals, ids = sd.dist_triangle_heavy_hitters(mesh, "data", plan, cfg, regs,
+                                                k=10, iters=20, mode="vertex")
+est_t = time.time() - t0
+print(f"RESULT,{nd},{acc_t:.3f},{est_t:.3f},{tot:.0f}")
+"""
+
+
+def run(small: bool = True) -> None:
+    # Fig 4/6: device scaling (subprocesses)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for nd in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        env.pop("XLA_FLAGS", None)
+        res = subprocess.run([sys.executable, "-c", _WORKER, str(nd)],
+                             capture_output=True, text=True, env=env,
+                             timeout=1800, cwd=root)
+        line = [l for l in res.stdout.splitlines() if l.startswith("RESULT")]
+        if not line:
+            emit(f"fig46_scaling/devices={nd}", 0.0,
+                 f"ERROR:{res.stderr.strip().splitlines()[-1][:120] if res.stderr.strip() else 'no output'}")
+            continue
+        _, nd_s, acc_t, est_t, tot = line[0].split(",")
+        emit(f"fig46_scaling/devices={nd}", float(acc_t) * 1e6,
+             f"accumulate_s={acc_t};estimate_s={est_t};tri_est={tot}")
+
+    # Fig 5: time vs |E| on fixed resources (single device)
+    cfg = HLLConfig(p=8)
+    for scale in (8, 9, 10, 11):
+        edges = gen.rmat(scale, 8, seed=5)
+        n = int(edges.max()) + 1
+        (_, acc_s) = timer(dsk.accumulate, edges, n, cfg)
+        sketch = dsk.accumulate(edges, n, cfg)
+        (_, est_s) = timer(dsk.edge_triangle_estimates, sketch,
+                           edges[: min(len(edges), 4096)], block=2048,
+                           iters=20)
+        emit(f"fig5_edges/m={len(edges)}", acc_s * 1e6,
+             f"accumulate_s={acc_s:.3f};tri_per_edge_us="
+             f"{est_s/min(len(edges),4096)*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

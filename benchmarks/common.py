@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: graph suite, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graph import generators as gen
+
+__all__ = ["graph_suite", "timer", "emit"]
+
+
+def graph_suite(small: bool = True) -> dict:
+    """Named test graphs mirroring the paper's suite structure:
+    SNAP-like power-law graphs (RMAT stand-ins) + nonstochastic Kronecker
+    products (Appendix C) + one citation-like denser graph."""
+    suite = {}
+    suite["rmat9"] = gen.rmat(9, 8, seed=1)
+    suite["rmat10"] = gen.rmat(10, 8, seed=2)
+    suite["er_dense"] = gen.erdos_renyi(400, 6000, seed=3)   # cit-Patents-ish
+    ke, _ = gen.kronecker_power("wheel16")
+    suite["kron_wheel"] = ke
+    ke2, _ = gen.kronecker_power("clique8")
+    suite["kron_clique"] = ke2
+    if not small:
+        suite["rmat12"] = gen.rmat(12, 8, seed=4)
+        ke3, _ = gen.kronecker_power("community24")
+        suite["kron_comm"] = ke3
+    return suite
+
+
+def timer(fn, *args, repeats: int = 1, **kw):
+    """(result, seconds_per_call) with a warmup call."""
+    fn(*args, **kw)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeats
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

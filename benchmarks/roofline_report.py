@@ -1,0 +1,54 @@
+"""§Roofline report: read dry-run artifacts -> per-cell three-term table.
+
+Emits one CSV row per (arch x shape) single-pod cell:
+  compute/memory/collective seconds, dominant term, useful-FLOPs ratio,
+  and the roofline fraction (compute term / binding term).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load_records(mesh: str = "single_pod") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(small: bool = True) -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline/NO_ARTIFACTS", 0.0,
+             "run scripts/run_dryruns.py first")
+        return
+    n_ok = n_skip = 0
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}"
+        if r.get("skipped"):
+            n_skip += 1
+            emit(f"roofline/{cell}", 0.0, "skipped=long-context-inapplicable")
+            continue
+        if not r.get("ok"):
+            emit(f"roofline/{cell}", 0.0, "FAILED")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        emit(f"roofline/{cell}", rl["bound_s"] * 1e6,
+             f"t_comp={rl['t_compute_s']:.2e};t_mem={rl['t_memory_s']:.2e};"
+             f"t_coll={rl['t_collective_s']:.2e};dom={rl['dominant']};"
+             f"roofline_frac={rl['compute_fraction']:.3f};"
+             f"useful_flops_ratio={r.get('flops_ratio_useful', 0):.3f}")
+    emit("roofline/summary", 0.0, f"cells_ok={n_ok};cells_skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+``python -m benchmarks.run [--full] [--only fig1,fig2,...]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger graphs / more trials")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig1,kernels")
+    args = ap.parse_args()
+    small = not args.full
+
+    from benchmarks import (
+        bench_density, bench_heavyhitters, bench_intersection,
+        bench_kernels, bench_neighborhood, bench_scaling, bench_theorem1,
+        roofline_report,
+    )
+    suites = {
+        "fig1": bench_neighborhood.run,
+        "fig2": bench_heavyhitters.run,
+        "fig3": bench_density.run,
+        "fig46+fig5": bench_scaling.run,
+        "fig78": bench_intersection.run,
+        "theorem1": bench_theorem1.run,
+        "kernels": bench_kernels.run,
+        "roofline": roofline_report.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in suites.items():
+        if only and not any(o in name for o in only):
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(small=small)
+        except Exception as e:  # keep the harness going; surface the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+    print(f"# total {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

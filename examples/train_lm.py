@@ -1,0 +1,84 @@
+"""End-to-end training driver: data -> model -> FT loop -> ckpt -> restore.
+
+Composes the full production stack at container scale: deterministic
+synthetic corpus, any --arch from the registry (reduced config on CPU),
+sharded AdamW, fault-tolerant loop with async checkpointing and straggler
+watchdog, then demonstrates restart-exactness by resuming from the written
+checkpoint. Loss should drop visibly (the corpus has Markov structure).
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b --steps 60
+    # ~100M-param variant (slower on 1 CPU core):
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b --steps 200 --width 512 --layers 8
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.data.pipeline import SyntheticCorpus
+from repro.data.telemetry import NGramSketch
+from repro.models import transformer as tfm
+from repro.models.steps import make_train_step
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.ft import FTConfig, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--width", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_example")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    cfg = ARCHS[args.arch].reduced(
+        d_model=args.width, d_ff=args.width * 4,
+        **({"num_layers": args.layers} if args.layers else {}))
+    params = tfm.init_params(jax.random.key(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"vocab={cfg.vocab_size} seq={args.seq}")
+
+    opt_cfg = AdamWConfig()
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, peak_lr=3e-3,
+                                      warmup=10, total_steps=args.steps))
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                             global_batch=args.batch, seed=1)
+
+    # data-pipeline sketch telemetry (the paper's technique, DESIGN.md §5)
+    ngrams = NGramSketch(n=2)
+    ngram_sketch = ngrams.init()
+
+    def to_device(b):
+        nonlocal ngram_sketch
+        ngram_sketch = ngrams.update(ngram_sketch, jnp.asarray(b["tokens"]))
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    ft = FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 3, 10))
+    params, opt_state, hist = train_loop(
+        step_fn=step_fn, params=params, opt_state=opt_state, corpus=corpus,
+        num_steps=args.steps, ft=ft, to_device=to_device, log_every=10)
+    print(f"loss: {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+          f"({'improved' if hist['loss'][-1] < hist['loss'][0] else 'FLAT'})")
+    print(f"distinct bigrams seen (sketch): {ngrams.distinct(ngram_sketch):,.0f}")
+
+    # restart-exactness: resume from the checkpoint for a few more steps
+    params2 = tfm.init_params(jax.random.key(0), cfg)  # fresh (wrong) state
+    opt2 = adamw_init(params2, opt_cfg)
+    _, _, hist2 = train_loop(
+        step_fn=step_fn, params=params2, opt_state=opt2, corpus=corpus,
+        num_steps=args.steps + 5, ft=ft, to_device=to_device, log_every=0)
+    print(f"restart: restored from step {hist2['restored_from']}, "
+          f"resumed loss {hist2['loss'][0]:.3f} "
+          f"(pre-crash final {hist['loss'][-1]:.3f})")
+
+
+if __name__ == "__main__":
+    main()

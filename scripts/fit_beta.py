@@ -1,0 +1,88 @@
+"""Fit LogLogBeta beta(r, z) coefficients by least squares (paper §4, Eq. 17).
+
+The paper: "we ... determined beta(r,z) as a 7th-degree polynomial of
+log(z), whose weights are set experimentally by solving a least-squares
+problem like in Section II.C of (Qin et al., 2016)". We do exactly that.
+
+Simulation shortcut (no hashing needed): HLL register values are exact
+functionals of the multinomial split of n items into r buckets and i.i.d.
+geometric rho draws; we sample register values directly from
+P(max rho <= k | c items) = (1 - 2^-k)^c via inverse-CDF sampling. This is
+distribution-exact for an ideal hash.
+
+Rearranging Eq. 17 at the true cardinality n gives the target
+    beta* = alpha_r * r * (r - z) / n - sum_i 2^{-M_i},
+and we solve weighted least squares over the design
+    [z, zl, zl^2, ..., zl^7],  zl = log(z + 1),
+with weights n/A (A = alpha_r * r * (r-z)) so that squared *relative*
+cardinality error is minimized (d est/est = -(n/A) d beta).
+
+Writes src/repro/core/_beta_coeffs.py. Deterministic (seeded).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+from repro.core.hll import alpha  # noqa: E402
+
+
+def simulate_registers(n: int, r: int, q: int, trials: int, rng: np.random.Generator) -> np.ndarray:
+    """Sample ``trials`` register vectors uint8[trials, r] for cardinality n."""
+    counts = rng.multinomial(n, [1.0 / r] * r, size=trials)  # (trials, r)
+    u = rng.random(size=counts.shape)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        # P(max <= k) = (1 - 2^-k)^c  =>  k = ceil(-log2(1 - u^(1/c)))
+        t = 1.0 - u ** (1.0 / np.maximum(counts, 1))
+        k = np.ceil(-np.log2(np.maximum(t, 1e-300)))
+    k = np.clip(k, 1, q + 1)
+    k = np.where(counts == 0, 0, k)
+    return k.astype(np.uint8)
+
+
+def fit_p(p: int, rng: np.random.Generator, trials: int = 120, points: int = 160) -> list[float]:
+    r, q = 1 << p, 64 - p
+    a = alpha(r)
+    ns = np.unique(np.round(np.geomspace(1, 12 * r, points)).astype(int))
+    rows, targets, weights = [], [], []
+    for n in ns:
+        regs = simulate_registers(int(n), r, q, trials, rng)
+        s = np.sum(np.exp2(-regs.astype(np.float64)), axis=-1)
+        z = np.sum(regs == 0, axis=-1).astype(np.float64)
+        mask = z > 0  # beta is identically 0 at z == 0 by construction
+        if not mask.any():
+            continue
+        s, z = s[mask], z[mask]
+        A = a * r * (r - z)
+        beta_star = A / n - s
+        zl = np.log(z + 1.0)
+        design = np.stack([z] + [zl ** k for k in range(1, 8)], axis=-1)
+        w = n / np.maximum(A, 1e-9)
+        rows.append(design * w[:, None])
+        targets.append(beta_star * w)
+    X = np.concatenate(rows)
+    y = np.concatenate(targets)
+    coeffs, *_ = np.linalg.lstsq(X, y, rcond=None)
+    return [float(c) for c in coeffs]
+
+
+def main() -> None:
+    rng = np.random.default_rng(0xD5EE7)
+    out = {}
+    for p in (6, 8, 10, 12, 14):
+        out[p] = fit_p(p, rng)
+        print(f"p={p}: {out[p]}")
+    with open("src/repro/core/_beta_coeffs.py", "w") as f:
+        f.write('"""LogLogBeta coefficients fitted by scripts/fit_beta.py '
+                '(deterministic, seed 0xD5EE7)."""\n\n')
+        f.write("BETA_COEFFS = {\n")
+        for p, cs in out.items():
+            f.write(f"    {p}: {cs},\n")
+        f.write("}\n")
+    print("wrote src/repro/core/_beta_coeffs.py")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+artifacts/dryrun/*.json. Prints markdown to stdout."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+ART = "artifacts/dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def load(mesh):
+    recs = {}
+    for p in glob.glob(os.path.join(ART, f"*__{mesh}.json")):
+        d = json.load(open(p))
+        recs[(d["arch"], d["shape"])] = d
+    return recs
+
+
+def improvement_note(arch, shape, rl, rec):
+    dom = rl["dominant"]
+    per_kind = rec.get("collectives", {}).get("per_kind_wire_bytes", {})
+    if dom == "collective":
+        top = max(per_kind, key=per_kind.get) if per_kind else "?"
+        return (f"cut {top} wire (dominant collective); see §Perf" )
+    if dom == "memory":
+        import sys
+        sys.path.insert(0, "src")
+        from repro.configs import ARCHS
+        if ARCHS[arch].kv_cache_dtype == "int8":
+            return ("bandwidth-bound with int8 KV already (§Perf A-3); "
+                    "next: larger batch / speculative decoding")
+        return "decode is weight/cache-bandwidth bound; quantize KV or batch more"
+    frac = rec.get("flops_ratio_useful") or 0
+    if frac < 0.9:
+        return f"recover padding/capacity waste (useful={frac:.2f})"
+    return "compute-bound near roofline; overlap remaining collectives"
+
+
+def main():
+    single = load("single_pod")
+    multi = load("multi_pod")
+
+    print("### §Dry-run (80 cells: 40 single-pod + 40 multi-pod)\n")
+    print("| arch | shape | mesh | status | compile_s | args GiB/dev | temps GiB/dev | collectives | wire GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for mesh_name, recs in (("single", single), ("multi", multi)):
+        for (arch, shape) in sorted(recs):
+            if shape not in SHAPE_ORDER:
+                continue
+            r = recs[(arch, shape)]
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | {mesh_name} | SKIP (long-context "
+                      f"inapplicable: full attention) | - | - | - | - | - |")
+                continue
+            mem = r.get("memory", {})
+            coll = r.get("collectives", {})
+            print(f"| {arch} | {shape} | {mesh_name} | OK | "
+                  f"{r.get('compile_s', '-')} | "
+                  f"{_fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+                  f"{_fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+                  f"{coll.get('count', '-')} | "
+                  f"{_fmt_bytes(coll.get('total_wire_bytes_per_dev'))} |")
+
+    print("\n### §Roofline (single-pod 16x16 = 256 chips; v5e: 197 TF bf16, "
+          "819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | t_compute s | t_memory s | t_collective s | "
+          "dominant | roofline frac | useful/HLO flops | params | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape) in sorted(single):
+        if shape not in SHAPE_ORDER:
+            continue
+        r = single[(arch, shape)]
+        if r.get("skipped"):
+            print(f"| {arch} | {shape} | - | - | - | skipped | - | - | - | "
+                  f"long-context cell inapplicable to full attention |")
+            continue
+        rl = r["roofline"]
+        note = improvement_note(arch, shape, rl, r)
+        print(f"| {arch} | {shape} | {rl['t_compute_s']:.2e} | "
+              f"{rl['t_memory_s']:.2e} | {rl['t_collective_s']:.2e} | "
+              f"{rl['dominant']} | {rl['compute_fraction']:.2f} | "
+              f"{r.get('flops_ratio_useful', 0):.2f} | "
+              f"{r.get('params_total', 0)/1e9:.1f}B | {note} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Sweep driver: every (arch x shape x mesh) dry-run cell in a subprocess.
+
+Each cell is its own process (XLA device count is set in dryrun.py's first
+lines; isolation also contains any compile failure). Resumable: existing
+artifact JSONs are skipped unless --force. Run from the repo root:
+
+    PYTHONPATH=src python scripts/run_dryruns.py [--mesh both|single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, "src")
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+
+OUT = "artifacts/dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, force: bool) -> str:
+    mesh = "multi_pod" if multi_pod else "single_pod"
+    path = os.path.join(OUT, f"{arch}__{shape}__{mesh}.json")
+    if not force and os.path.exists(path):
+        rec = json.load(open(path))
+        if rec.get("ok"):
+            return "cached"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", OUT]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    t0 = time.time()
+    res = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=3600)
+    dt = time.time() - t0
+    ok = res.returncode == 0
+    status = "OK" if ok else "FAIL"
+    print(f"{status:5s} {arch:22s} {shape:12s} {mesh:10s} {dt:7.1f}s",
+          flush=True)
+    if not ok:
+        tail = (res.stdout + res.stderr).strip().splitlines()[-12:]
+        print("      " + "\n      ".join(tail), flush=True)
+    return status
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["both", "single", "multi"],
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    meshes = {"both": [False, True], "single": [False], "multi": [True]}
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    t0 = time.time()
+    n_fail = 0
+    for multi in meshes[args.mesh]:
+        for arch in archs:
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                status = run_cell(arch, shape, multi, args.force)
+                n_fail += status == "FAIL"
+    print(f"TOTAL {time.time() - t0:.0f}s, failures: {n_fail}")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Micro-repro for the XLA crash blocking §Perf iteration B-3.
+
+jax 0.8.2 / bundled XLA, CPU backend with forced host devices:
+differentiating a partial-manual shard_map (axis_names = a subset of mesh
+axes) whose body contains a data-dependent scatter crashes the compiler:
+
+    F ... hlo_instruction.cc:1558] Invalid binary instruction opcode copy
+
+The same body compiles fine forward-only, and fully outside shard_map.
+This blocks the manual-SPMD MoE dispatch (local-per-shard routing scatter),
+which is the standard fix for GSPMD globalizing data-dependent scatters.
+
+    python scripts/xla_shardmap_bug_repro.py          # crashes at compile
+    python scripts/xla_shardmap_bug_repro.py fwd      # forward-only: OK
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def main() -> None:
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    def inner(x, w):
+        def body(x_l, w_l):
+            idx = (x_l[:, 0] > 0).astype(jnp.int32)      # data-dependent
+            buf = jnp.zeros((4, x_l.shape[1]), x_l.dtype).at[idx].add(x_l)
+            return buf @ w_l
+        return jax.shard_map(body, mesh=mesh, axis_names={"data"},
+                             in_specs=(P("data", None), P()),
+                             out_specs=P("data", None),
+                             check_vma=False)(x, w)
+
+    def loss(x, w):
+        def sbody(c, w_i):
+            y = inner(c, w_i)
+            return c + y[: c.shape[0]], None
+        c, _ = jax.lax.scan(sbody, x, w)
+        return c.sum()
+
+    x = jnp.ones((16, 8))
+    ws = jnp.ones((3, 8, 8))
+    fn = loss if len(sys.argv) < 2 else (lambda x, w: inner(x, w[0]).sum())
+    jax.jit(jax.grad(fn) if len(sys.argv) < 2 else fn,
+            in_shardings=(NamedSharding(mesh, P("data", None)), None)
+            ).lower(x, ws).compile()
+    print("COMPILED OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.analysis.hlo import parse_collectives, collective_wire_bytes  # noqa: F401
+from repro.analysis.roofline import roofline_terms, HW  # noqa: F401

@@ -1,0 +1,82 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Target hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (constants from the assignment). The three terms, in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = wire_bytes_per_device / link_bw
+
+cost_analysis() of the SPMD-partitioned executable reports the per-device
+program, so no further division by chip count is needed (verified against
+hand counts in tests/test_roofline.py). MODEL_FLOPS uses the 6*N*D rule
+(N = params, active params for MoE; D = tokens; 2x extra for attention
+terms ignored — reported separately as a ratio diagnostic).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["HW", "roofline_terms", "model_flops", "active_params"]
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s
+    link_bw: float = 50e9             # bytes/s/link ICI
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, hw: HW = HW()) -> dict:
+    t_comp = flops_per_dev / hw.peak_flops
+    t_mem = bytes_per_dev / hw.hbm_bw
+    t_coll = wire_bytes_per_dev / hw.link_bw
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        # fraction of the bound the compute term occupies = how close the
+        # cell is to being compute-limited (the "roofline fraction")
+        "compute_fraction": t_comp / bound if bound > 0 else 0.0,
+    }
+
+
+def active_params(cfg) -> float:
+    """Active parameter count (MoE: top-k experts only) for 6*N*D."""
+    d, v = cfg.d_model, cfg.vocab_padded
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+    for kind in cfg.layer_pattern:
+        n_layer = cfg.num_periods
+        if "mamba" in kind:
+            di, h, n = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state
+            total += n_layer * (d * (2 * di + 2 * n + h) + di * d)
+        else:
+            hd = cfg.head_dim
+            total += n_layer * (d * cfg.num_heads * hd
+                                + 2 * d * cfg.num_kv_heads * hd
+                                + cfg.num_heads * hd * d)
+            if cfg.is_enc_dec:  # cross-attention
+                total += n_layer * 2 * (d * cfg.num_heads * hd
+                                        + d * cfg.num_kv_heads * hd)
+        if kind.endswith("_moe") or kind == "attn_moe":
+            total += n_layer * 3 * d * cfg.moe_d_ff * cfg.num_experts_per_tok
+        elif "mamba" != kind and not kind.endswith("_moe"):
+            if cfg.d_ff:
+                total += n_layer * 3 * d * cfg.d_ff
+    if cfg.is_enc_dec:
+        total += cfg.encoder_layers * (4 * d * cfg.num_heads * cfg.head_dim
+                                       + 3 * d * cfg.d_ff)
+    return float(total)
+
+
+def model_flops(cfg, tokens: float, kind: str) -> float:
+    """6*N_active*D (train) / 2*N_active*D (forward-only) useful FLOPs."""
+    n = active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

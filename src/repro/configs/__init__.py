@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCHS, get_config  # noqa: F401
+from repro.models.config import SHAPES, ShapeConfig  # noqa: F401

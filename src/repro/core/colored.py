@@ -1,0 +1,96 @@
+"""Colored DegreeSketch — the paper's §6 (Conclusions) future-work queries.
+
+"A simple generalization ... allows us to estimate interesting queries of
+the form 'how many of x's t-neighbors are both red and green?' or 'how many
+of x's t-neighbors are not blue?'"
+
+Realization: one register table per color class. Algorithm 1 inserts
+neighbor y only into the table of y's color; Algorithm 2 propagates each
+color plane independently (the planes never mix — a color-c sketch of
+vertex x always summarizes {y : d(x,y) <= t, color(y) = c}).
+
+Queries on an accumulated ColoredDegreeSketch:
+  count(x, c)            ~ |{y in N_t(x) : color(y) = c}|       (plane c)
+  count_not(x, c)        ~ |union of all planes != c|            (closed ∪̃)
+  count_union(x, cs)     ~ |N_t(x) restricted to colors in cs|
+  count_and(x, c1, c2)   ~ |plane c1 ∩ plane c2| via Ertl MLE — for
+                           *multi-label* colorings (a vertex may be both
+                           red and green); identically 0 for partitions.
+
+Space: |colors| * n * r bytes — still polyloglinear per color class.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll, intersection
+from repro.core.degreesketch import pad_vertices
+from repro.core.hll import HLLConfig
+
+__all__ = ["ColoredDegreeSketch", "colored_accumulate", "colored_pass"]
+
+
+@dataclass(frozen=True)
+class ColoredDegreeSketch:
+    """regs: uint8[num_colors, n_pad, r] — one sketch plane per color."""
+    regs: jax.Array
+    n: int
+    num_colors: int
+    cfg: HLLConfig
+
+    def count(self, x: int, color: int) -> float:
+        """~|{y : y reachable, color(y) = color}| for the accumulated t."""
+        return float(hll.estimate(self.regs[color, x], self.cfg))
+
+    def count_union(self, x: int, colors) -> float:
+        merged = jnp.max(self.regs[jnp.asarray(list(colors)), x], axis=0)
+        return float(hll.estimate(merged, self.cfg))
+
+    def count_not(self, x: int, color: int) -> float:
+        others = [c for c in range(self.num_colors) if c != color]
+        return self.count_union(x, others)
+
+    def count_and(self, x: int, c1: int, c2: int) -> float:
+        """Multi-label intersection query (Ertl MLE; heavy-hitter caveats
+        of Appendix B apply)."""
+        return float(intersection.mle_intersection(
+            self.regs[c1, x][None], self.regs[c2, x][None], self.cfg)[0])
+
+
+def colored_accumulate(edges: np.ndarray, colors: np.ndarray, n: int,
+                       cfg: HLLConfig, num_colors: int | None = None,
+                       ) -> ColoredDegreeSketch:
+    """Algorithm 1 with color planes: INSERT(D[color(y)][x], y)."""
+    num_colors = num_colors or int(colors.max()) + 1
+    n_pad = pad_vertices(n, 8)
+    regs = jnp.zeros((num_colors, n_pad, cfg.r), jnp.uint8)
+    directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    dst = jnp.asarray(directed[:, 0])
+    nbr = jnp.asarray(directed[:, 1].astype(np.uint32))
+    plane = jnp.asarray(colors[directed[:, 1]])
+    from repro.core.hashing import bucket_rho
+    bucket, rho = bucket_rho(nbr, cfg.p, cfg.seed)
+    regs = regs.at[plane, dst, bucket].max(rho)
+    return ColoredDegreeSketch(regs=regs, n=n, num_colors=num_colors, cfg=cfg)
+
+
+@jax.jit
+def colored_pass(regs: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """One Algorithm 2 pass applied to every color plane independently."""
+    return jax.vmap(lambda plane: plane.at[dst].max(plane[src]))(regs)
+
+
+def colored_neighborhood(sketch: ColoredDegreeSketch, edges: np.ndarray,
+                         t_max: int) -> ColoredDegreeSketch:
+    """Advance an accumulated colored sketch to D^{t_max}."""
+    src = jnp.asarray(np.concatenate([edges[:, 0], edges[:, 1]]))
+    dst = jnp.asarray(np.concatenate([edges[:, 1], edges[:, 0]]))
+    regs = sketch.regs
+    for _ in range(2, t_max + 1):
+        regs = colored_pass(regs, src, dst)
+    return ColoredDegreeSketch(regs=regs, n=sketch.n,
+                               num_colors=sketch.num_colors, cfg=sketch.cfg)

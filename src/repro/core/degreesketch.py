@@ -1,0 +1,186 @@
+"""DegreeSketch (paper §3): vertex-centric cardinality sketch table + queries.
+
+Single-device reference implementations of Algorithm 1 (accumulation),
+Algorithm 2 (neighborhood approximation) and Algorithms 3-5 (triangle-count
+heavy hitters). The distributed shard_map versions live in
+``repro.distributed.sketch_dist`` and are tested for equivalence against
+these — the single-device path IS the semantics; distribution only changes
+the schedule (DESIGN.md §2).
+
+Layout: ``regs: uint8[n_pad, r]`` — one HLL row per vertex.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll, intersection
+from repro.core.hll import HLLConfig
+
+__all__ = [
+    "DegreeSketch", "accumulate", "neighborhood_pass", "neighborhood_estimates",
+    "edge_triangle_estimates", "triangle_heavy_hitters",
+    "vertex_triangle_estimates", "vertex_heavy_hitters", "pad_vertices",
+]
+
+
+def pad_vertices(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class DegreeSketch:
+    """A queryable accumulated sketch table (the paper's leave-behind D)."""
+    regs: jax.Array          # uint8[n_pad, r]
+    n: int                   # true vertex count
+    cfg: HLLConfig
+
+    def degrees(self) -> jax.Array:
+        """d̃(x) for all x — the eponymous degree query."""
+        return hll.estimate(self.regs, self.cfg)[: self.n]
+
+    def union_size(self, xs: jax.Array) -> jax.Array:
+        """|∪_{x in xs} N(x)| — adjacency-set union query (§6 Conclusions)."""
+        merged = jnp.max(self.regs[xs], axis=0)
+        return hll.estimate(merged, self.cfg)
+
+    def intersection_size(self, x: int, y: int) -> jax.Array:
+        """|N(x) ∩ N(y)| via Ertl MLE — the T̃(xy) primitive."""
+        return intersection.mle_intersection(
+            self.regs[x][None], self.regs[y][None], self.cfg)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_pad", "cfg"))
+def _accumulate_block(regs, dst, keys, mask, n_pad: int, cfg: HLLConfig):
+    dst = jnp.where(mask, dst, n_pad - 1)  # park padding on the last row
+    return hll.insert_table(regs, dst, keys, cfg, mask=mask)
+
+
+def accumulate(edges: np.ndarray, n: int, cfg: HLLConfig,
+               n_pad: int | None = None, block: int = 1 << 15) -> DegreeSketch:
+    """Algorithm 1: single pass over the edge stream, both orientations.
+
+    Semi-streaming: edges are consumed in fixed blocks; state is O(n*r).
+    """
+    n_pad = n_pad or pad_vertices(n, 8)
+    regs = hll.empty_table(n_pad, cfg)
+    directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    for s in range(0, len(directed), block):
+        chunk = directed[s:s + block]
+        kpad = block - len(chunk)
+        if kpad:
+            chunk = np.concatenate([chunk, np.zeros((kpad, 2), chunk.dtype)])
+        mask = np.arange(block) < (block - kpad)
+        regs = _accumulate_block(
+            regs, jnp.asarray(chunk[:, 0]), jnp.asarray(chunk[:, 1].astype(np.uint32)),
+            jnp.asarray(mask), n_pad, cfg)
+    return DegreeSketch(regs=regs, n=n, cfg=cfg)
+
+
+@jax.jit
+def neighborhood_pass(regs: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """One pass of Algorithm 2: D^t[x] = D^{t-1}[x] ∪̃ (∪̃_{y:xy∈E} D^{t-1}[y]).
+
+    The self-union is line 23's ``D^t <- D^{t-1}`` copy; the neighbor merge is
+    the SKETCH-message scatter. Duplicate destinations fold via register max.
+    """
+    return regs.at[dst].max(regs[src])
+
+
+def neighborhood_estimates(edges: np.ndarray, n: int, cfg: HLLConfig,
+                           t_max: int, sketch: DegreeSketch | None = None,
+                           ) -> tuple[np.ndarray, np.ndarray, DegreeSketch]:
+    """Algorithm 2 driver. Returns (Ñ(x,t)[t_max, n], Ñ(t)[t_max], D^{t_max}).
+
+    Pass t=1 reads the accumulated DegreeSketch; passes 2..t_max re-read the
+    edge stream and merge neighbor sketches. All D^t can be kept by callers
+    ("maintained for later use by simply storing all D^t between passes").
+    """
+    ds = sketch or accumulate(edges, n, cfg)
+    regs = ds.regs
+    src = jnp.asarray(np.concatenate([edges[:, 0], edges[:, 1]]))
+    dst = jnp.asarray(np.concatenate([edges[:, 1], edges[:, 0]]))
+    local = np.zeros((t_max, n), dtype=np.float64)
+    glob = np.zeros((t_max,), dtype=np.float64)
+    est = np.asarray(hll.estimate(regs, cfg))[:n]
+    local[0] = est
+    glob[0] = est.sum()
+    for t in range(2, t_max + 1):
+        regs = neighborhood_pass(regs, src, dst)
+        est = np.asarray(hll.estimate(regs, cfg))[:n]
+        local[t - 1] = est
+        glob[t - 1] = est.sum()  # REDUCE (line 19)
+    return local, glob, DegreeSketch(regs=regs, n=n, cfg=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "iters"))
+def _edge_block_estimates(regs, u, v, mask, cfg: HLLConfig, iters: int):
+    a = regs[u]
+    b = regs[v]
+    est = intersection.mle_intersection(a, b, cfg, iters)
+    return jnp.where(mask, est, 0.0)
+
+
+def edge_triangle_estimates(sketch: DegreeSketch, edges: np.ndarray,
+                            block: int = 2048, iters: int = 30) -> np.ndarray:
+    """T̃(xy) = |D[x] ∩̃ D[y]| for every edge (Eq. 10), block-streamed."""
+    out = np.zeros(len(edges), dtype=np.float64)
+    for s in range(0, len(edges), block):
+        chunk = edges[s:s + block]
+        kreal = len(chunk)
+        if kreal < block:
+            chunk = np.concatenate([chunk, np.zeros((block - kreal, 2), chunk.dtype)])
+        mask = np.arange(block) < kreal
+        est = _edge_block_estimates(
+            sketch.regs, jnp.asarray(chunk[:, 0]), jnp.asarray(chunk[:, 1]),
+            jnp.asarray(mask), sketch.cfg, iters)
+        out[s:s + kreal] = np.asarray(est)[:kreal]
+    return out
+
+
+def triangle_heavy_hitters(sketch: DegreeSketch, edges: np.ndarray, k: int,
+                           block: int = 2048, iters: int = 30,
+                           ) -> tuple[float, np.ndarray, np.ndarray]:
+    """Algorithm 4: (T̃ global, top-k values, top-k edges).
+
+    T̃ = (1/3) Σ T̃(xy) (Eq. 11; undirected edges each counted once).
+    The max-heap H̃_k is realized as top_k (DESIGN.md §2).
+    """
+    est = edge_triangle_estimates(sketch, edges, block=block, iters=iters)
+    total = float(est.sum()) / 3.0
+    k = min(k, len(est))
+    idx = np.argsort(-est)[:k]
+    return total, est[idx], edges[idx]
+
+
+def vertex_triangle_estimates(sketch: DegreeSketch, edges: np.ndarray,
+                              block: int = 2048, iters: int = 30) -> np.ndarray:
+    """Algorithm 5 local counts: T̃(x) = 1/2 Σ_{xy∈E} T̃(xy) (Eq. 12).
+
+    The EST message (forwarding T̃(xy) to f(x)) becomes a scatter-add to
+    both endpoints.
+    """
+    est = edge_triangle_estimates(sketch, edges, block=block, iters=iters)
+    acc = np.zeros(sketch.n, dtype=np.float64)
+    np.add.at(acc, edges[:, 0], est)
+    np.add.at(acc, edges[:, 1], est)
+    return acc / 2.0
+
+
+def vertex_heavy_hitters(sketch: DegreeSketch, edges: np.ndarray, k: int,
+                         block: int = 2048, iters: int = 30,
+                         ) -> tuple[float, np.ndarray, np.ndarray]:
+    """Algorithm 5: (T̃ global, top-k values, top-k vertices)."""
+    edge_est = edge_triangle_estimates(sketch, edges, block=block, iters=iters)
+    total = float(edge_est.sum()) / 3.0
+    acc = np.zeros(sketch.n, dtype=np.float64)
+    np.add.at(acc, edges[:, 0], edge_est)
+    np.add.at(acc, edges[:, 1], edge_est)
+    acc /= 2.0
+    k = min(k, sketch.n)
+    idx = np.argsort(-acc)[:k]
+    return total, acc[idx], idx

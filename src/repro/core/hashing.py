@@ -1,0 +1,71 @@
+"""64-bit hashing for HLL sketches, emulated in two uint32 lanes.
+
+The paper uses xxhash (non-cryptographic, 64-bit avalanche). JAX disables
+uint64 by default (x64 mode would change weak-type promotion for the whole
+framework), so we emulate a 64-bit hash as a pair of independent 32-bit
+murmur3 finalizers (fmix32) with distinct seed mixing. HLL theory only
+requires uniform, well-avalanched bits; fmix32 passes the usual avalanche
+criteria. p+q = 64 is preserved: the bucket comes from the top p bits of the
+hi lane, and rho is the leading-zero count of the remaining q = 64-p bits
+(hi remainder concatenated with the full lo lane), plus one.
+
+All functions are jit-safe and operate on uint32 arrays of any shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fmix32", "hash64", "bucket_rho"]
+
+_GOLD_HI = jnp.uint32(0x9E3779B9)  # golden-ratio odd constant (splitmix)
+_GOLD_LO = jnp.uint32(0x85EBCA6B)
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer: full avalanche over a uint32 lane."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash64(keys: jax.Array, seed: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Hash integer keys to an emulated 64-bit word (hi, lo) of uint32.
+
+    The two lanes are independent fmix32 chains with different seed mixing,
+    so the concatenated 64 bits behave as a single 64-bit hash for HLL
+    purposes (bucket from hi, rho window spanning both lanes).
+    """
+    k = keys.astype(jnp.uint32)
+    s = jnp.uint32(seed)
+    hi = fmix32(k ^ (s * _GOLD_HI + jnp.uint32(0x27D4EB2F)))
+    lo = fmix32((k + _GOLD_LO) ^ (s * _GOLD_LO + jnp.uint32(0x165667B1)))
+    # cross-mix so hi/lo are not independent of each other's low bits only
+    hi = fmix32(hi + lo * _GOLD_HI)
+    return hi, lo
+
+
+def bucket_rho(keys: jax.Array, p: int, seed: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Map keys -> (bucket in [0, 2^p), rho in [1, q+1]) with q = 64 - p.
+
+    rho is the 1-based position of the first set bit in the q-bit window
+    that follows the p bucket bits; q+1 if the window is all zeros. This is
+    exactly the paper's xi/rho split with p + q = 64 (Section 4).
+    """
+    if not (1 <= p <= 31):
+        raise ValueError(f"p must be in [1, 31], got {p}")
+    q = 64 - p
+    hi, lo = hash64(keys, seed=seed)
+    bucket = (hi >> jnp.uint32(32 - p)).astype(jnp.int32)
+    # Build the q-bit window left-aligned in a 64-bit (w_hi, w_lo) pair.
+    w_hi = (hi << jnp.uint32(p)) | (lo >> jnp.uint32(32 - p))
+    w_lo = lo << jnp.uint32(p)
+    lz_hi = jax.lax.clz(w_hi)
+    lz_lo = jax.lax.clz(w_lo)
+    lz = jnp.where(w_hi != 0, lz_hi, jnp.uint32(32) + lz_lo).astype(jnp.int32)
+    rho = jnp.minimum(lz, q) + 1
+    return bucket, rho.astype(jnp.uint8)

@@ -1,0 +1,171 @@
+"""HyperLogLog sketches as dense JAX register arrays.
+
+A sketch with prefix size ``p`` is a ``uint8[r]`` array, ``r = 2**p``;
+a *table* of sketches (one per vertex — the DegreeSketch layout) is
+``uint8[n, r]``. Register value 0 means "empty"; inserted values are
+``rho in [1, q+1]`` with ``q = 64 - p`` (Section 4 of the paper).
+
+Design notes (DESIGN.md §2): we keep registers dense only. The paper's
+sparse representation (Heule et al.) trades memory for branchy updates that
+are hostile to SPMD static shapes; the paper itself recommends dense-only
+for neighborhood estimation where all sketches saturate.
+
+Everything here is pure-functional and jit/vmap/shard_map-safe.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bucket_rho
+
+__all__ = [
+    "HLLConfig", "empty", "empty_table", "insert", "insert_table", "merge",
+    "alpha", "estimate", "estimate_flajolet", "estimate_beta", "rel_std",
+]
+
+
+@dataclass(frozen=True)
+class HLLConfig:
+    """Static configuration of an HLL sketch family.
+
+    Attributes:
+      p: prefix size (number of bucket bits). r = 2**p registers.
+      seed: hash seed; all sketches that are merged/intersected together
+        must share it (paper: "generated using the same hash function").
+      estimator: "flajolet" (harmonic mean + linear-counting small-range
+        correction) or "beta" (LogLogBeta, Eq. 17, fitted coefficients).
+    """
+    p: int = 8
+    seed: int = 0
+    estimator: str = "flajolet"
+
+    @property
+    def r(self) -> int:
+        return 1 << self.p
+
+    @property
+    def q(self) -> int:
+        return 64 - self.p
+
+    @property
+    def max_register(self) -> int:
+        return self.q + 1
+
+
+def rel_std(p: int) -> float:
+    """HLL standard error ~= 1.04 / sqrt(r)  (Eq. 16)."""
+    return 1.04 / float(1 << p) ** 0.5
+
+
+def empty(cfg: HLLConfig) -> jax.Array:
+    return jnp.zeros((cfg.r,), dtype=jnp.uint8)
+
+
+def empty_table(n: int, cfg: HLLConfig) -> jax.Array:
+    return jnp.zeros((n, cfg.r), dtype=jnp.uint8)
+
+
+def insert(regs: jax.Array, keys: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """Insert a batch of keys into a single sketch ``uint8[r]``."""
+    bucket, rho = bucket_rho(keys, cfg.p, cfg.seed)
+    return regs.at[bucket].max(rho)
+
+
+def insert_table(
+    regs: jax.Array, rows: jax.Array, keys: jax.Array, cfg: HLLConfig,
+    *, mask: jax.Array | None = None,
+) -> jax.Array:
+    """Insert ``keys[i]`` into sketch ``regs[rows[i]]`` (scatter-max).
+
+    This is Algorithm 1's INSERT(D[x], y) vectorized over an edge block:
+    rows = destination vertices x (local indices), keys = neighbor ids y.
+    ``mask=False`` entries are dropped (used for padding edge blocks).
+    """
+    bucket, rho = bucket_rho(keys, cfg.p, cfg.seed)
+    if mask is not None:
+        rho = jnp.where(mask, rho, jnp.uint8(0))
+    return regs.at[rows, bucket].max(rho)
+
+
+def merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Closed union operator: element-wise register max (Algorithm 6 MERGE)."""
+    return jnp.maximum(a, b)
+
+
+def alpha(r: int) -> float:
+    """Bias correction alpha_r (Eq. 15, standard closed approximations)."""
+    if r == 16:
+        return 0.673
+    if r == 32:
+        return 0.697
+    if r == 64:
+        return 0.709
+    return 0.7213 / (1.0 + 1.079 / r)
+
+
+def _harmonic_terms(regs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Return (sum over registers of 2^-reg, count of zero registers)."""
+    x = regs.astype(jnp.float32)
+    s = jnp.sum(jnp.exp2(-x), axis=-1)
+    z = jnp.sum(regs == 0, axis=-1).astype(jnp.float32)
+    return s, z
+
+
+def estimate_flajolet(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """Flajolet harmonic-mean estimator (Eq. 14) + linear counting.
+
+    With 64-bit hashing no large-range correction is needed; below
+    2.5*r we switch to linear counting (r * ln(r / z)) when any register is
+    empty, the standard bias-safe combination.
+    """
+    r = float(cfg.r)
+    s, z = _harmonic_terms(regs)
+    raw = alpha(cfg.r) * r * r / s
+    lin = r * jnp.log(r / jnp.maximum(z, 1.0))
+    use_lin = (raw <= 2.5 * r) & (z > 0)
+    return jnp.where(use_lin, lin, raw)
+
+
+def estimate_beta(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """LogLogBeta estimator (Eq. 17) with least-squares-fitted beta(r, z).
+
+    Coefficients are fitted offline by ``scripts/fit_beta.py`` (as in the
+    paper, following Qin et al. 2016) and committed in ``_beta_coeffs``.
+    """
+    from repro.core._beta_coeffs import BETA_COEFFS
+    if cfg.p not in BETA_COEFFS:
+        raise ValueError(
+            f"no fitted beta coefficients for p={cfg.p}; "
+            f"run scripts/fit_beta.py (have: {sorted(BETA_COEFFS)})")
+    coeffs = jnp.asarray(BETA_COEFFS[cfg.p], dtype=jnp.float32)
+    r = float(cfg.r)
+    s, z = _harmonic_terms(regs)
+    zl = jnp.log(z + 1.0)
+    # beta(r, z) = c0*z + c1*zl + c2*zl^2 + ... + c7*zl^7
+    powers = jnp.stack([z] + [zl ** k for k in range(1, 8)], axis=-1)
+    beta = jnp.einsum("...k,k->...", powers, coeffs)
+    return alpha(cfg.r) * r * (r - z) / (beta + s)
+
+
+def estimate(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """Cardinality estimate |S| for sketch(es); last axis is registers."""
+    if cfg.estimator == "flajolet":
+        return estimate_flajolet(regs, cfg)
+    if cfg.estimator == "beta":
+        return estimate_beta(regs, cfg)
+    raise ValueError(f"unknown estimator {cfg.estimator!r}")
+
+
+def estimate_union(a: jax.Array, b: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """|A ∪ B| via the closed union operator."""
+    return estimate(merge(a, b), cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def degree_estimates(table: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """Vectorized degree query over a sketch table ``uint8[n, r]``."""
+    return estimate(table, cfg)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import SyntheticCorpus, batch_for_step  # noqa: F401
+from repro.data.telemetry import RoutingSketch, NGramSketch  # noqa: F401

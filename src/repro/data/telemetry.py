@@ -1,0 +1,95 @@
+"""Sketch telemetry: DegreeSketch as a first-class framework feature.
+
+The paper's data structure applied to the LM stack (DESIGN.md §5):
+
+* RoutingSketch — one HLL per expert over the distinct token-ids routed to
+  it. The (expert <- token) assignments of a MoE layer are a bipartite
+  graph stream; this IS Algorithm 1 with f(expert) = local table row.
+  Queries: per-expert coverage d̃(e) (degree estimate), pairwise expert
+  overlap |N(e1) ∩ N(e2)| via the Ertl MLE (routing-collapse detection:
+  two experts seeing near-identical token sets), and top-k overlap pairs.
+
+* NGramSketch — distinct n-gram cardinality of a token stream in one pass
+  (the paper's semi-streaming regime on the data pipeline): dataset
+  coverage/dedup statistics merged across shards with the closed union.
+
+Updates are jit-safe (uint8 register tables, scatter-max) and O(r) state
+per expert; the train loop threads the table through steps as carry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll, intersection
+from repro.core.hashing import fmix32
+from repro.core.hll import HLLConfig
+
+__all__ = ["RoutingSketch", "NGramSketch"]
+
+
+@dataclass
+class RoutingSketch:
+    num_experts: int
+    cfg: HLLConfig = field(default_factory=lambda: HLLConfig(p=8))
+
+    def init(self) -> jax.Array:
+        return hll.empty_table(self.num_experts, self.cfg)
+
+    def update(self, table: jax.Array, expert_ids: jax.Array,
+               token_ids: jax.Array) -> jax.Array:
+        """expert_ids: int[T, k] (top-k assignments); token_ids: int[T]."""
+        t, k = expert_ids.shape
+        rows = expert_ids.reshape(t * k)
+        keys = jnp.repeat(token_ids.astype(jnp.uint32), k)
+        return hll.insert_table(table, rows, keys, self.cfg)
+
+    def coverage(self, table: jax.Array) -> jax.Array:
+        """d̃(e): distinct tokens routed to each expert."""
+        return hll.estimate(table, self.cfg)
+
+    def overlap(self, table: jax.Array, e1: int, e2: int) -> float:
+        """|N(e1) ∩ N(e2)| via Ertl MLE (Eq. 10 on the routing graph)."""
+        return float(intersection.mle_intersection(
+            table[e1][None], table[e2][None], self.cfg)[0])
+
+    def collapse_score(self, table: jax.Array) -> np.ndarray:
+        """Pairwise Jaccard estimate matrix — high off-diagonals flag
+        routing collapse (experts covering the same tokens)."""
+        e = self.num_experts
+        cov = np.asarray(self.coverage(table))
+        out = np.zeros((e, e))
+        for i in range(e):
+            for j in range(i + 1, e):
+                inter = self.overlap(table, i, j)
+                union = max(cov[i] + cov[j] - inter, 1.0)
+                out[i, j] = out[j, i] = inter / union
+        return out
+
+
+@dataclass
+class NGramSketch:
+    n: int = 2
+    cfg: HLLConfig = field(default_factory=lambda: HLLConfig(p=12))
+
+    def init(self) -> jax.Array:
+        return hll.empty(self.cfg)
+
+    def update(self, sketch: jax.Array, tokens: jax.Array) -> jax.Array:
+        """tokens: int[B, L] — inserts all length-n windows (rolled hash)."""
+        toks = tokens.astype(jnp.uint32)
+        h = fmix32(toks[..., : toks.shape[-1] - self.n + 1])
+        for i in range(1, self.n):
+            nxt = toks[..., i: toks.shape[-1] - self.n + 1 + i]
+            h = fmix32(h ^ (nxt * jnp.uint32(0x9E3779B9)))
+        return hll.insert(sketch, h.reshape(-1), self.cfg)
+
+    def distinct(self, sketch: jax.Array) -> float:
+        return float(hll.estimate(sketch, self.cfg))
+
+    def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Cross-shard union (the paper's closed ∪̃)."""
+        return hll.merge(a, b)

@@ -1,0 +1,9 @@
+from repro.graph.generators import (  # noqa: F401
+    erdos_renyi, rmat, kronecker_edges, kronecker_power, named_factor,
+    canonical_undirected,
+)
+from repro.graph.exact import (  # noqa: F401
+    adjacency_lists, neighborhood_truth, exact_edge_triangles,
+    exact_vertex_triangles, exact_global_triangles, kron_edge_triangles,
+)
+from repro.graph.stream import EdgeStream  # noqa: F401

@@ -1,0 +1,80 @@
+"""Edge-stream abstraction (paper §2): σ partitioned into |P| substreams.
+
+The paper assumes the stream arrives pre-partitioned "by some unknown
+means"; its experiments use round-robin. We provide round-robin substream
+partitioning plus fixed-size padded block iteration — the semi-streaming
+property survives as block-wise ingestion with O(block) edge memory
+(DESIGN.md §2). Blocks carry validity masks for the scatter kernels.
+
+The router (``bucket_by_owner``) plays Algorithm 1's Send context: edges are
+expanded to both directed orientations (lines 10-11) and grouped by the
+owner shard of their destination-sketch vertex, f(x) = block partition.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["EdgeStream", "bucket_by_owner", "owner_of", "pad_block"]
+
+
+def owner_of(vertex: np.ndarray, n_pad: int, num_shards: int) -> np.ndarray:
+    """Block-partition owner: f(x) = x // (n_pad / num_shards)."""
+    per = n_pad // num_shards
+    return np.asarray(vertex) // per
+
+
+def pad_block(arr: np.ndarray, size: int, fill: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a trailing block to ``size``; returns (padded, valid_mask)."""
+    k = len(arr)
+    mask = np.zeros(size, dtype=bool)
+    mask[:k] = True
+    if arr.ndim == 1:
+        out = np.full(size, fill, dtype=arr.dtype)
+        out[:k] = arr
+    else:
+        out = np.full((size,) + arr.shape[1:], fill, dtype=arr.dtype)
+        out[:k] = arr
+    return out, mask
+
+
+def bucket_by_owner(edges: np.ndarray, n_pad: int, num_shards: int) -> list[np.ndarray]:
+    """Directed (dst_sketch_vertex, neighbor) pairs grouped by owner shard.
+
+    For undirected edge {u, v} both (u, v) and (v, u) are produced: vertex u's
+    sketch receives neighbor v, and vice versa (Algorithm 1 lines 10-11).
+    """
+    directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    owners = owner_of(directed[:, 0], n_pad, num_shards)
+    return [directed[owners == s] for s in range(num_shards)]
+
+
+@dataclass
+class EdgeStream:
+    """A seeded, restartable edge stream over a static edge list.
+
+    Attributes:
+      edges: canonical undirected int32[m, 2].
+      num_substreams: |P| — one substream per processor (paper §2).
+      block: edges per ingest block (per substream).
+    """
+    edges: np.ndarray
+    num_substreams: int = 1
+    block: int = 4096
+    seed: int = 0
+
+    def substream(self, i: int) -> np.ndarray:
+        """Round-robin substream i (the paper's experimental partitioning)."""
+        return self.edges[i::self.num_substreams]
+
+    def blocks(self, i: int):
+        """Yield (edge_block int32[block, 2], mask bool[block]) for stream i."""
+        sub = self.substream(i)
+        for s in range(0, len(sub), self.block):
+            chunk = sub[s:s + self.block]
+            yield pad_block(chunk, self.block)
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: HLL scatter-max accumulation (Algorithm 1 hot loop).
+
+Semantics = ref.hll_accumulate_ref: regs[rows[e], buckets[e]] max= rhos[e].
+
+TPU design (DESIGN.md §9): the register panel (V, r) lives in VMEM for the
+whole grid (index_map pins it; caller guarantees V*r <= ~4MB — the
+distributed plan's per-shard blocks already satisfy this). Edge indices are
+scalars in SMEM. Each edge becomes ONE full-row vector op: a (1, r) load,
+a lane-wise max against a one-hot(bucket)*rho vector built from a 2-D iota,
+and a (1, r) store — r is a multiple of 128 lanes for p >= 7, so every step
+is VPU-shaped. Padding edges are encoded as (row=0, bucket=0, rho=0):
+max with 0 is a no-op, so the kernel needs no branch.
+
+The sequential fori_loop over the edge block is the TPU-idiomatic scatter:
+TPU has no atomic scatter; grid steps run sequentially per core, and the
+register panel is input_output_aliased so updates accumulate in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["hll_accumulate"]
+
+DEFAULT_EDGE_BLOCK = 512
+
+
+def _kernel(regs_ref, rows_ref, buckets_ref, rhos_ref, out_ref):
+    r = out_ref.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+
+    def body(e, _):
+        row = rows_ref[e]
+        bucket = buckets_ref[e]
+        rho = rhos_ref[e]
+        update = jnp.where(lane == bucket, rho, 0).astype(jnp.uint8)
+        cur = pl.load(out_ref, (pl.dslice(row, 1), slice(None)))
+        pl.store(out_ref, (pl.dslice(row, 1), slice(None)),
+                 jnp.maximum(cur, update))
+        return 0
+
+    jax.lax.fori_loop(0, rows_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("edge_block", "interpret"))
+def hll_accumulate(regs: jax.Array, rows: jax.Array, buckets: jax.Array,
+                   rhos: jax.Array, *, edge_block: int = DEFAULT_EDGE_BLOCK,
+                   interpret: bool = True) -> jax.Array:
+    """regs: uint8[V, r]; rows/buckets: int32[E]; rhos: uint8->int32[E].
+
+    E must be a multiple of edge_block (ops.py pads). Returns updated regs.
+    """
+    v, r = regs.shape
+    e = rows.shape[0]
+    assert e % edge_block == 0, (e, edge_block)
+    grid = (e // edge_block,)
+    rhos32 = rhos.astype(jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, r), lambda i: (0, 0)),  # panel pinned in VMEM
+            pl.BlockSpec((edge_block,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((edge_block,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((edge_block,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((v, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, r), jnp.uint8),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+        name="hll_accumulate",
+    )(regs, rows.astype(jnp.int32), buckets.astype(jnp.int32), rhos32)

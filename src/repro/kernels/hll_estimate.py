@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused HLL estimate statistics (harmonic sum + zeros).
+
+Semantics = ref.hll_estimate_ref: per sketch row, s = sum_i 2^{-reg_i} and
+z = #zero registers, fused in one pass over the register panel. The O(N)
+estimator tail (alpha*r^2/s vs linear counting vs beta) stays outside — it
+is negligible and branchy.
+
+TPU design: grid over row blocks; each block is a (BN, r) uint8 panel in
+VMEM reduced lane-wise by the VPU (exp2 of a uint8 upcast is a cheap
+transcendental; reductions along lanes). Output is a (BN, 2) f32 panel
+(s in column 0, z in column 1) to keep the store 2-D and lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hll_estimate_stats"]
+
+DEFAULT_ROW_BLOCK = 256
+
+
+def _kernel(regs_ref, out_ref):
+    x = regs_ref[...].astype(jnp.float32)
+    s = jnp.sum(jnp.exp2(-x), axis=1)
+    z = jnp.sum((x == 0.0).astype(jnp.float32), axis=1)
+    out_ref[:, 0] = s
+    out_ref[:, 1] = z
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def hll_estimate_stats(regs: jax.Array, *, row_block: int = DEFAULT_ROW_BLOCK,
+                       interpret: bool = True) -> jax.Array:
+    """regs: uint8[N, r] (N multiple of row_block) -> float32[N, 2] = (s, z)."""
+    n, r = regs.shape
+    assert n % row_block == 0, (n, row_block)
+    grid = (n // row_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_block, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        interpret=interpret,
+        name="hll_estimate_stats",
+    )(regs)

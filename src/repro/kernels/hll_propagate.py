@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: HLL row gather-max propagation (Algorithm 2 hot loop).
+
+Semantics = ref.hll_propagate_ref: out[dst[e]] max= regs_src[src[e]], with
+reads frozen at D^{t-1} (regs_src is never written; the aliased output
+starts as its copy — Algorithm 2 line 23's ``D^t <- D^{t-1}``).
+
+TPU design: both the frozen source panel and the accumulating output panel
+are pinned in VMEM (caller bounds 2*V*r <= ~8MB per shard — the ring
+schedule's per-step block in the distributed plan). Each edge is a (1, r)
+row load from the source panel + row max-store into the output panel — all
+lane-aligned VPU work; no gather/scatter HLO. Padding edges use
+src = dst = 0: since out[0] only ever grows above its initial copy of
+regs_src[0], max(out[0], regs_src[0]) is a provable no-op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["hll_propagate"]
+
+DEFAULT_EDGE_BLOCK = 512
+
+
+def _kernel(src_regs_ref, src_ref, dst_ref, init_ref, out_ref):
+    # init_ref is the aliased initializer of out_ref (same buffer); unused.
+    del init_ref
+    def body(e, _):
+        s = src_ref[e]
+        d = dst_ref[e]
+        v_src = pl.load(src_regs_ref, (pl.dslice(s, 1), slice(None)))
+        v_dst = pl.load(out_ref, (pl.dslice(d, 1), slice(None)))
+        pl.store(out_ref, (pl.dslice(d, 1), slice(None)),
+                 jnp.maximum(v_dst, v_src))
+        return 0
+
+    jax.lax.fori_loop(0, src_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("edge_block", "interpret"))
+def hll_propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
+                  *, edge_block: int = DEFAULT_EDGE_BLOCK,
+                  interpret: bool = True) -> jax.Array:
+    """regs: uint8[V, r]; src/dst: int32[E] (E multiple of edge_block).
+
+    Returns D^t = D^{t-1} merged with gathered neighbor rows.
+    """
+    v, r = regs.shape
+    e = src.shape[0]
+    assert e % edge_block == 0, (e, edge_block)
+    grid = (e // edge_block,)
+    # Second copy of regs feeds the aliased output (the line-23 copy);
+    # XLA materializes the copy once, then the kernel RMWs it in place.
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, r), lambda i: (0, 0)),          # frozen D^{t-1}
+            pl.BlockSpec((edge_block,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((edge_block,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((v, r), lambda i: (0, 0)),          # D^t accumulator
+        ],
+        out_specs=pl.BlockSpec((v, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, r), jnp.uint8),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+        name="hll_propagate",
+    )(regs, src.astype(jnp.int32), dst.astype(jnp.int32), regs)

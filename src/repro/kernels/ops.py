@@ -1,0 +1,99 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, the padding-index parking conventions
+the kernels rely on, and impl selection:
+
+* ``impl="pallas"`` — pl.pallas_call kernels. On this CPU container they run
+  in interpret mode (the TPU lowering is the target; interpret executes the
+  same kernel body for correctness validation).
+* ``impl="ref"``    — the pure-jnp oracles (XLA scatter/gather lowering).
+
+Core modules default to the ref path on CPU; the kernels are the TPU
+hot-spot replacements and the unit of the §Perf kernel iteration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bucket_rho
+from repro.core.hll import HLLConfig, alpha
+from repro.kernels import ref
+from repro.kernels.hll_accumulate import hll_accumulate as _acc_kernel
+from repro.kernels.hll_propagate import hll_propagate as _prop_kernel
+from repro.kernels.hll_estimate import hll_estimate_stats as _est_kernel
+from repro.kernels.ertl_stats import ertl_stats as _ertl_kernel
+
+__all__ = ["accumulate", "propagate", "estimate", "ertl_stats"]
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+def accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
+               cfg: HLLConfig, mask: jax.Array | None = None,
+               impl: str = "pallas", edge_block: int = 512) -> jax.Array:
+    """Insert keys[e] into sketch regs[rows[e]] (Algorithm 1 INSERT)."""
+    buckets, rhos = bucket_rho(keys, cfg.p, cfg.seed)
+    if mask is not None:
+        rhos = jnp.where(mask, rhos, jnp.uint8(0))
+        rows = jnp.where(mask, rows, 0)
+    if impl == "ref":
+        return ref.hll_accumulate_ref(regs, rows, buckets, rhos)
+    rows = _pad_to(rows.astype(jnp.int32), edge_block, 0)
+    buckets = _pad_to(buckets.astype(jnp.int32), edge_block, 0)
+    rhos = _pad_to(rhos, edge_block, 0)  # rho 0 => no-op
+    return _acc_kernel(regs, rows, buckets, rhos, edge_block=edge_block,
+                       interpret=_INTERPRET)
+
+
+def propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
+              mask: jax.Array | None = None, impl: str = "pallas",
+              edge_block: int = 512) -> jax.Array:
+    """One Algorithm 2 merge pass over an edge block."""
+    if mask is not None:
+        src = jnp.where(mask, src, 0)
+        dst = jnp.where(mask, dst, 0)  # (0,0) self-merge is a no-op
+    if impl == "ref":
+        m = jnp.ones(src.shape, bool) if mask is None else mask
+        return ref.hll_propagate_ref(regs, src, dst, m)
+    src = _pad_to(src.astype(jnp.int32), edge_block, 0)
+    dst = _pad_to(dst.astype(jnp.int32), edge_block, 0)
+    return _prop_kernel(regs, src, dst, edge_block=edge_block,
+                        interpret=_INTERPRET)
+
+
+def estimate(regs: jax.Array, cfg: HLLConfig, impl: str = "pallas",
+             row_block: int = 256) -> jax.Array:
+    """Flajolet + linear-counting estimate per sketch row (uint8[N, r])."""
+    n = regs.shape[0]
+    if impl == "ref":
+        s, z = ref.hll_estimate_ref(regs, alpha(cfg.r))
+    else:
+        padded = _pad_to(regs, row_block, 0)
+        stats = _est_kernel(padded, row_block=row_block, interpret=_INTERPRET)
+        s, z = stats[:n, 0], stats[:n, 1]
+    r = float(cfg.r)
+    raw = alpha(cfg.r) * r * r / s
+    lin = r * jnp.log(r / jnp.maximum(z, 1.0))
+    return jnp.where((raw <= 2.5 * r) & (z > 0), lin, raw)
+
+
+def ertl_stats(a: jax.Array, b: jax.Array, cfg: HLLConfig,
+               impl: str = "pallas", pair_block: int = 128) -> jax.Array:
+    """Eq. (19) statistics for paired sketch rows uint8[E, r]."""
+    if impl == "ref":
+        return ref.ertl_stats_ref(a, b, cfg.q)
+    e = a.shape[0]
+    a2 = _pad_to(a, pair_block, 0)
+    b2 = _pad_to(b, pair_block, 0)
+    out = _ertl_kernel(a2, b2, cfg.q, pair_block=pair_block,
+                       interpret=_INTERPRET)
+    return out[:e]

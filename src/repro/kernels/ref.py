@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here defines the exact semantics its kernel must reproduce;
+tests sweep shapes/dtypes and assert_allclose (exact equality for the
+integer register kernels) between kernel and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "hll_accumulate_ref", "hll_propagate_ref", "hll_estimate_ref",
+    "ertl_stats_ref",
+]
+
+
+def hll_accumulate_ref(regs: jax.Array, rows: jax.Array, buckets: jax.Array,
+                       rhos: jax.Array) -> jax.Array:
+    """Scatter-max: regs[rows[e], buckets[e]] <- max(., rhos[e]).
+
+    Padding convention: rho == 0 entries are no-ops (empty register value).
+    regs: uint8[V, r]; rows/buckets: int32[E]; rhos: uint8[E].
+    """
+    return regs.at[rows, buckets].max(rhos)
+
+
+def hll_propagate_ref(regs: jax.Array, src: jax.Array, dst: jax.Array,
+                      mask: jax.Array) -> jax.Array:
+    """Row gather-max: out[dst[e]] <- max(out[dst[e]], regs[src[e]]).
+
+    Reads always come from the *input* regs (the frozen D^{t-1}); the output
+    starts as a copy of regs (Algorithm 2 line 23). mask=False rows no-op.
+    """
+    gathered = jnp.where(mask[:, None], regs[src], jnp.uint8(0))
+    return regs.at[dst].max(gathered)
+
+
+def hll_estimate_ref(regs: jax.Array, alpha: float) -> tuple[jax.Array, jax.Array]:
+    """Fused harmonic statistics: (sum 2^-reg, zero count) per sketch row.
+
+    regs: uint8[N, r] -> (float32[N], float32[N]). The final estimator
+    combination (raw vs linear counting vs beta) happens outside the kernel
+    — it is O(N) scalar work; the O(N*r) register reduction is the hot part.
+    ``alpha`` is threaded for the fused raw estimate output convenience.
+    """
+    x = regs.astype(jnp.float32)
+    s = jnp.sum(jnp.exp2(-x), axis=-1)
+    z = jnp.sum(regs == 0, axis=-1).astype(jnp.float32)
+    return s, z
+
+
+def ertl_stats_ref(a: jax.Array, b: jax.Array, q: int) -> jax.Array:
+    """Eq. (19) count statistics. a, b: uint8[E, r] -> float32[E, 5, q+2].
+
+    Order: [c_a_lt, c_a_gt, c_b_lt, c_b_gt, c_eq] — see
+    repro.core.intersection.ertl_stats (this is its per-pair kernel form).
+    """
+    ks = jnp.arange(q + 2, dtype=jnp.int32)
+    ai = a.astype(jnp.int32)[..., None]
+    bi = b.astype(jnp.int32)[..., None]
+    oh_a = (ai == ks).astype(jnp.float32)
+    oh_b = (bi == ks).astype(jnp.float32)
+    lt = (ai < bi).astype(jnp.float32)
+    gt = (ai > bi).astype(jnp.float32)
+    eq = (ai == bi).astype(jnp.float32)
+    return jnp.stack([
+        jnp.sum(oh_a * lt, axis=-2),
+        jnp.sum(oh_a * gt, axis=-2),
+        jnp.sum(oh_b * gt, axis=-2),
+        jnp.sum(oh_b * lt, axis=-2),
+        jnp.sum(oh_a * eq, axis=-2),
+    ], axis=-2)

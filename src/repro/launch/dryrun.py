@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init); they give this process 512 placeholder CPU devices so
+``make_production_mesh`` can build the production meshes. Smoke tests and
+benchmarks run in normal processes and see 1 device.
+
+Per cell this script:
+  1. builds ShapeDtypeStruct stand-ins for every input (no allocation),
+  2. jit-lowers the right step (train_step / prefill_step / decode_step)
+     with explicit in/out shardings and donation,
+  3. ``.lower().compile()`` — sharding mismatches, unsupported collectives
+     or OOM-at-compile are FAILURES,
+  4. records memory_analysis(), cost_analysis() and the parsed collective
+     schedule into artifacts/dryrun/<arch>__<shape>__<mesh>.json
+     (EXPERIMENTS.md §Dry-run reads these; §Roofline derives from them).
+
+Usage: python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+       [--multi-pod] [--out artifacts/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.flops import cell_costs
+from repro.analysis.hlo import collective_wire_bytes, parse_collectives
+from repro.analysis.roofline import HW, roofline_terms
+from repro.configs import ARCHS, SHAPES
+from repro.configs.registry import cell_is_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import pshard
+from repro.models import sharding as sharding_mod
+from repro.models.sharding import input_specs
+from repro.models.steps import (
+    make_decode_step, make_prefill_step, make_train_step,
+)
+from repro.optim.adamw import AdamWConfig
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not support it
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def _cost_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             hw: HW = HW()) -> dict:
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    runs, reason = cell_is_applicable(arch, shape_name)
+    if not runs:
+        record.update(ok=True, skipped=True, reason=reason)
+        return record
+
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record["mesh_shape"] = {k: int(v) for k, v in mesh.shape.items()}
+    chips = int(len(mesh.devices.reshape(-1)))
+
+    # activation sharding hints: batch over data axes, except batch-1
+    # long-context decode where only the caches carry (seq) sharding
+    b_ax = sharding_mod.batch_axes(mesh)
+    if shape.kind == "decode" and shape.global_batch == 1:
+        pshard.set_mesh(mesh, ())
+    else:
+        pshard.set_mesh(mesh, b_ax)
+
+    specs = input_specs(cfg, shape, mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step_fn = make_train_step(cfg, AdamWConfig(dtype=cfg.adam_dtype))
+        args = (specs["params"][0], specs["opt_state"][0],
+                specs["batch"][0], specs["step"][0])
+        in_sh = (specs["params"][1], specs["opt_state"][1],
+                 specs["batch"][1], specs["step"][1])
+        out_sh = (specs["params"][1], specs["opt_state"][1], None)
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg)
+        args = (specs["params"][0], specs["batch"][0], specs["cache"][0])
+        in_sh = (specs["params"][1], specs["batch"][1], specs["cache"][1])
+        out_sh = (None, specs["cache"][1])
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(2,))
+    else:  # decode
+        step_fn = make_decode_step(cfg)
+        args = (specs["params"][0], specs["token"][0], specs["cache"][0],
+                specs["pos"][0])
+        in_sh = (specs["params"][1], specs["token"][1], specs["cache"][1],
+                 specs["pos"][1])
+        out_sh = (None, specs["cache"][1])
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(2,))
+
+    lowered = jitted.lower(*args)
+    record["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+
+    record["memory"] = _mem_dict(compiled)
+    cost = _cost_dict(compiled)
+    record["cost"] = cost
+    print(f"[{arch} {shape_name} {mesh_name}] memory_analysis:",
+          record["memory"], flush=True)
+    print(f"[{arch} {shape_name} {mesh_name}] cost_analysis:",
+          {k: v for k, v in cost.items() if k in ("flops", "bytes accessed")},
+          flush=True)
+
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo, default_group=chips)
+    wire, per_kind = collective_wire_bytes(colls)
+    record["collectives"] = {
+        "count": len(colls),
+        "total_wire_bytes_per_dev": wire,
+        "per_kind_wire_bytes": per_kind,
+    }
+
+    # Analytic FLOPs/bytes: XLA:CPU cost_analysis undercounts while-loop
+    # bodies and oneDNN custom-call dots (verified; see analysis/flops.py),
+    # so the roofline terms use exact analytic accounting. cost_analysis
+    # numbers stay in the record for reference.
+    costs = cell_costs(cfg, shape, chips)
+    record["flops_useful_global"] = costs.flops_useful_global
+    record["flops_padded_global"] = costs.flops_padded_global
+    record["bytes_per_dev_analytic"] = costs.bytes_per_dev
+    record["params_total"] = costs.params_total
+    record["params_bytes_per_dev"] = costs.params_bytes_per_dev
+    flops_dev = costs.flops_padded_global / chips
+    record["roofline"] = roofline_terms(flops_dev, costs.bytes_per_dev,
+                                        wire, hw)
+    record["flops_ratio_useful"] = (
+        costs.flops_useful_global / costs.flops_padded_global)
+    record["ok"] = True
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    mesh_name = "multi_pod" if args.multi_pod else "single_pod"
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{mesh_name}.json")
+    try:
+        record = run_cell(args.arch, args.shape, args.multi_pod, args.out)
+    except Exception:
+        record = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+                  "ok": False, "error": traceback.format_exc()}
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=str)
+    status = ("SKIP" if record.get("skipped")
+              else "OK" if record.get("ok") else "FAIL")
+    print(f"DRYRUN {status} {args.arch} {args.shape} {mesh_name} -> {path}")
+    if not record.get("ok"):
+        print(record.get("error", ""))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction (the multi-pod dry-run contract).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state. Single-pod: (data=16, model=16) = 256 chips
+(one v5e pod). Multi-pod: (pod=2, data=16, model=16) = 512 chips; the
+'pod' axis composes with 'data' for batch/FSDP sharding and is the axis
+the int8-compressed gradient psum targets (DCI links — DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            f"dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(num: int | None = None, axis: str = "data"):
+    """Small CPU mesh over however many host devices exist (tests/examples)."""
+    n = num or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))

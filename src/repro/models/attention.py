@@ -1,0 +1,219 @@
+"""GQA attention: blockwise-streaming softmax for train/prefill, cache
+attention for decode. Supports RoPE, sliding window ("local" layers),
+score softcap (gemma2), and QKV bias (qwen2).
+
+Memory note (why blockwise): materializing (B, H, L, L) scores at L = 32k
+is ~2 GB/head-batch even in bf16 — the blockwise online-softmax form keeps
+peak activation at O(L * block) per head while staying pure-jnp (XLA fuses
+the inner loop well; a Pallas flash kernel is unnecessary for the paper's
+scope — the sketch kernels are the paper's hot spots, DESIGN.md §9).
+
+GQA sharding: q heads are sharded on the 'model' axis; kv heads are padded
+by GSPMD when num_kv_heads < model-axis size (noted in EXPERIMENTS.md).
+Backward memory: both the per-q-block step and the inner kv-block step are
+jax.checkpoint'ed — the O(L^2) probability blocks are recomputed in the
+backward pass instead of saved (the pure-XLA analogue of flash attention's
+recomputation; peak residency drops from O(L^2) to O(L * block)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, rope, softcap
+
+__all__ = ["init_attention", "attention_train", "attention_decode",
+           "quantize_kv", "dequantize_kv"]
+
+NEG_INF = -2.0 ** 30
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per-(..., position, head) quantization over head_dim.
+
+    x: (B, S, Hkv, hd) -> (int8 same shape, f32 scales (B, S, Hkv)).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "q": init_dense(k1, d, h * hd, dtype, bias=cfg.qkv_bias),
+        "k": init_dense(k2, d, hkv * hd, dtype, bias=cfg.qkv_bias),
+        "v": init_dense(k3, d, hkv * hd, dtype, bias=cfg.qkv_bias),
+        "o": init_dense(k4, h * hd, d, dtype),
+    }
+
+
+def _project_qkv(p, x, cfg, positions):
+    b, l, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p["q"], x).reshape(b, l, h, hd)
+    k = dense(p["k"], x).reshape(b, l, hkv, hd)
+    v = dense(p["v"], x).reshape(b, l, hkv, hd)
+    # rope_theta <= 0 disables RoPE (whisper: absolute sinusoidal positions)
+    if positions is not None and cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_mask(q_pos, k_pos, causal: bool, window: int | None):
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def attention_core(q, k, v, cfg, *, causal: bool, window: int | None,
+                   q_positions, k_positions, q_block: int = 1024,
+                   kv_block: int = 1024):
+    """Blockwise online-softmax attention.
+
+    q: (B, Lq, H, D); k, v: (B, Lk, Hkv, D). Returns (B, Lq, H, D).
+    """
+    b, lq, h, hd = q.shape
+    lk = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = hd ** -0.5
+    q_block = min(q_block, lq)
+    kv_block = min(kv_block, lk)
+    nq = (lq + q_block - 1) // q_block
+    nk = (lk + kv_block - 1) // kv_block
+    # pad to block multiples
+    lq_p, lk_p = nq * q_block, nk * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, lq_p - lq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, lk_p - lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, lk_p - lk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, lq_p - lq), constant_values=-1)
+    kpos = jnp.pad(k_positions, (0, lk_p - lk), constant_values=2 ** 30)
+
+    # reshape kv heads up front: (B, Lk, Hkv, 1, D) broadcast to rep
+    qp = qp.reshape(b, nq, q_block, hkv, rep, hd)
+    kp = kp.reshape(b, nk, kv_block, hkv, hd)
+    vp = vp.reshape(b, nk, kv_block, hkv, hd)
+    qpos = qpos.reshape(nq, q_block)
+    kpos = kpos.reshape(nk, kv_block)
+
+    @jax.checkpoint
+    def q_step(qi):
+        qblk = qp[:, qi]                    # (B, qb, Hkv, rep, D)
+        qpb = qpos[qi]                      # (qb,)
+
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kblk = kp[:, ki]                # (B, kb, Hkv, D)
+            vblk = vp[:, ki]
+            kpb = kpos[ki]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cfg.attn_softcap)
+            mask = _scores_mask(qpb, kpb, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, rep, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, rep, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, rep, q_block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out  # (B, Hkv, rep, qb, D)
+
+    outs = jax.lax.map(q_step, jnp.arange(nq))       # (nq, B, Hkv, rep, qb, D)
+    outs = jnp.moveaxis(outs, 0, 1)                  # (B, nq, Hkv, rep, qb, D)
+    outs = jnp.transpose(outs, (0, 1, 4, 2, 3, 5))   # (B, nq, qb, Hkv, rep, D)
+    outs = outs.reshape(b, lq_p, h, hd)[:, :lq]
+    return outs.astype(q.dtype)
+
+
+def attention_train(p, x, cfg, *, window: int | None, positions):
+    """Full causal (or windowed) self-attention for train/prefill.
+
+    x: (B, L, D); positions: (L,). Returns (B, L, D) plus (k, v) for cache.
+    """
+    q, k, v = _project_qkv(p, x, cfg, positions[None])
+    out = attention_core(q, k, v, cfg, causal=True, window=window,
+                         q_positions=positions, k_positions=positions)
+    return dense(p["o"], out.reshape(x.shape[0], x.shape[1], -1)), (k, v)
+
+
+def attention_decode(p, x, cfg, cache, pos, *, window: int | None):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache: {"k","v" (B, S, Hkv, D)[, "k_scale","v_scale"]};
+    pos: scalar current position. Returns (out (B,1,D), new_cache).
+
+    Windowed layers may carry a RING cache (S == window < full context —
+    §Perf iteration 2-2): slot i holds the newest position p <= pos with
+    p ≡ i (mod S). Writes go to pos % S; validity masks reconstruct true
+    positions. Cuts local-layer cache storage and read bytes by S/window.
+
+    int8 caches (§Perf iteration A-3) store symmetric per-(pos, head)
+    scales; HBM reads halve, dequant happens on-chip.
+    """
+    b, _, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cache_k, cache_v = cache["k"], cache["v"]
+    quant = cache_k.dtype == jnp.int8
+    s = cache_k.shape[1]
+    ring = window is not None and s <= window
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    slot = pos % s if ring else pos
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, axis=1)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, axis=1)
+        k_new, v_new = kq, vq
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    new_cache["k"], new_cache["v"] = cache_k, cache_v
+    if quant:
+        cache_k = dequantize_kv(cache_k, new_cache["k_scale"], x.dtype)
+        cache_v = dequantize_kv(cache_v, new_cache["v_scale"], x.dtype)
+    rep = h // hkv
+    qh = q.reshape(b, hkv, rep, hd)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qh, cache_k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    scores = softcap(scores, cfg.attn_softcap)
+    idx = jnp.arange(s)
+    if ring:
+        # true position held in slot i: pos - ((pos - i) mod S)
+        kpos = pos - jnp.mod(pos - idx, s)
+        valid = kpos[None, None, None, :] >= 0
+    else:
+        kpos = idx
+        valid = kpos[None, None, None, :] <= pos
+        if window is not None:
+            valid &= (pos - kpos[None, None, None, :]) < window
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", w, cache_v)
+    out = out.reshape(b, 1, h * hd)
+    return dense(p["o"], out), new_cache

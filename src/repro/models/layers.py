@@ -1,0 +1,92 @@
+"""Shared layer primitives: norms, RoPE, dense/SwiGLU FFN, embeddings.
+
+Parameters are plain pytrees (nested dicts of jax.Arrays) built by pure
+``init_*`` functions; forward functions are pure. No framework dependency —
+keeps lowering transparent for the dry-run and the sharding rules simple
+(sharding.py pattern-matches on dict paths).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dtype_of", "init_dense", "dense", "init_rmsnorm", "rmsnorm",
+    "init_embedding", "embed", "rope", "init_swiglu", "swiglu",
+    "softcap",
+]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return {"w": w}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., L, H, D); positions: (..., L)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., L, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d, d_ff, dtype),
+        "up": init_dense(k2, d, d_ff, dtype),
+        "down": init_dense(k3, d_ff, d, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma2-style logit soft capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

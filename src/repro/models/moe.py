@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity.
+
+Distribution (§Perf iterations 1-1..1-3, EXPERIMENTS.md): the routing
+scatter/gather is DATA-DEPENDENT, and GSPMD partitions data-dependent
+batched scatters by replicating the operand and all-reducing the result —
+on jamba train_4k that cost 538 GB of all-reduce wire per step. The fix is
+manual SPMD exactly where the data dependence lives: a *partial-manual*
+``jax.shard_map`` over the batch axes (('pod','data')), inside which every
+shard routes its own tokens into a local capacity buffer with plain local
+scatters. The 'model' axis stays under GSPMD: the expert einsums see
+EP-sharded (E on 'model', moonshot/jamba) or expert-TP (F on 'model',
+grok) weights and partition as usual. FSDP weight gathers across 'data'
+are induced by the in_specs (their transpose = grad psum_scatter).
+
+Capacity is per data shard (standard EP semantics: drops are local).
+Side output: (token -> expert) ids for the routing DegreeSketch
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import init_dense
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+
+    def expert_mats(k, d_in, d_out, scale):
+        return (jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+                * scale).astype(dtype)
+
+    return {
+        "router": init_dense(k1, d, e, jnp.float32),  # router in fp32
+        "gate": expert_mats(k2, d, f, scale_in),
+        "up": expert_mats(k3, d, f, scale_in),
+        "down": expert_mats(k4, f, d, scale_out),
+    }
+
+
+def _moe_tokens(p, xt, cfg):
+    """Route a flat token block (T, D). Returns (y (T, D), aux, ids (T, k)).
+
+    Pure local computation — called directly on a single device, or
+    per-shard inside the partial-manual shard_map.
+    """
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = max(int(t // e * k * cfg.capacity_factor) + 1, k)
+
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch eq. 4) — local; psum'd by the caller
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(assign_frac * prob_frac)
+
+    # capacity ranks via one-hot cumsum (local tokens only)
+    flat_ids = expert_ids.reshape(t * k)
+    oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+    rank = jnp.sum((jnp.cumsum(oh, axis=0) - oh) * oh, axis=-1)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_ids * cap + rank, e * cap)
+
+    # dispatch: token j's k copies are slots [j*k,(j+1)*k) — broadcast, no
+    # gather; scatter is local (manual axes) so GSPMD never globalizes it
+    x_src = jnp.broadcast_to(xt[:, None, :], (t, k, d)).reshape(t * k, d)
+    x_disp = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].add(
+        jnp.where(keep[:, None], x_src, 0))
+    x_disp = x_disp[:-1].reshape(e, cap, d)
+
+    # expert FFN — 'model' axis (EP or expert-TP) partitioned by GSPMD
+    h = jnp.einsum("ecd,edf->ecf", x_disp, p["gate"])
+    u = jnp.einsum("ecd,edf->ecf", x_disp, p["up"])
+    y_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["down"])
+
+    # combine: local gather + reshape-sum over the k slots per token
+    y_flat = y_e.reshape(e * cap, d)
+    y_tok = y_flat[jnp.minimum(slot, e * cap - 1)]
+    y_tok = jnp.where(keep[:, None], y_tok, 0)
+    y_tok = y_tok * gate_vals.reshape(t * k, 1).astype(y_tok.dtype)
+    return jnp.sum(y_tok.reshape(t, k, d), axis=1), aux, expert_ids
+
+
+def moe_ffn(p, x, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, L, D) -> (y (B, L, D), aux_loss, expert_ids (B*L, k)).
+
+    NOTE (§Perf iteration 1-3, blocked): the ideal schedule routes each
+    data shard's tokens with a LOCAL scatter under a partial-manual
+    shard_map (axis_names = batch axes), leaving expert einsums to GSPMD.
+    That formulation crashes this XLA version's backward pass ("Invalid
+    binary instruction opcode copy", hlo_instruction.cc:1558 — micro-repro
+    in EXPERIMENTS.md §Perf) both inside lax.scan and unrolled, so the
+    shipped path routes globally and accepts GSPMD's scatter handling.
+    The broadcast/reshape-sum dispatch below still removes the batched
+    gather/scatter pairs GSPMD would globalize.
+    """
+    b, l, d = x.shape
+    y, aux, ids = _moe_tokens(p, x.reshape(b * l, d), cfg)
+    return y.reshape(b, l, d), aux, ids

@@ -1,0 +1,74 @@
+"""Activation sharding hints (GSPMD constraint points).
+
+GSPMD propagates shardings from inputs, but conflicting sources (FSDP
+weight shardings vs batch-sharded tokens) can resolve the wrong way — the
+classic symptom being replicated-batch activations (we hit exactly this:
+the embed table's data-axis sharding propagated into activations and
+un-sharded the batch). Production frameworks pin activations at block
+boundaries; so do we.
+
+The mesh context is process-global (set by the launcher / dry-run before
+tracing); when unset every hint is a no-op, so single-device smoke tests
+and examples run unchanged.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["set_mesh", "clear_mesh", "hint"]
+
+_MESH: Mesh | None = None
+_BATCH_AXES: tuple | None = None
+_SEQ_AXES: tuple | None = None   # long_500k: shard L instead of B
+
+
+def set_mesh(mesh: Mesh, batch_axes: tuple, seq_axes: tuple = ()) -> None:
+    global _MESH, _BATCH_AXES, _SEQ_AXES
+    _MESH = mesh
+    _BATCH_AXES = tuple(batch_axes) or None
+    _SEQ_AXES = tuple(seq_axes) or None
+
+
+def clear_mesh() -> None:
+    global _MESH, _BATCH_AXES, _SEQ_AXES
+    _MESH = _BATCH_AXES = _SEQ_AXES = None
+
+
+def num_batch_shards() -> int:
+    """Product of the batch-axis sizes (1 when no mesh context is set).
+    The MoE layer uses this to dispatch tokens group-locally — one group
+    per data shard — so routing never crosses the data axis (§Perf 1-1)."""
+    if _MESH is None or _BATCH_AXES is None:
+        return 1
+    n = 1
+    for a in _BATCH_AXES:
+        n *= _MESH.shape[a]
+    return n
+
+
+def hint(x, kind: str):
+    """Constrain activation sharding. kinds:
+    btd: (B, L, D)   bt: (B, L)   btv: (B, L, Vshard)
+    bthd: (B, L, H, hd)
+    """
+    if _MESH is None:
+        return x
+    b, s = _BATCH_AXES, _SEQ_AXES
+    spec = {
+        "btd": P(b, s, None),
+        "bt": P(b, s),
+        "btv": P(b, s, "model"),
+        "bthd": P(b, s, "model", None),
+    }[kind]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def hint_moe_dispatch(x, num_experts: int):
+    """(G, E, C, D) dispatch buffer: G on the batch axes, E on 'model' when
+    the expert count divides the model axis (EP), else replicated."""
+    if _MESH is None or _BATCH_AXES is None:
+        return x
+    e_spec = "model" if num_experts % _MESH.shape["model"] == 0 else None
+    spec = P(_BATCH_AXES, e_spec, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -1,0 +1,256 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Mesh contract (launch/mesh.py): ("data", "model") single-pod or
+("pod", "data", "model") multi-pod. Batch and FSDP use all data-like axes
+(("pod","data") when present); tensor parallelism uses "model".
+
+Parameter rules (Megatron/MaxText conventions, DESIGN.md §8):
+  embed (V, D)          -> ("model", fsdp)       vocab TP + FSDP
+  lm_head (D, V)        -> (fsdp, "model")
+  attn q/k/v (D, H*hd)  -> (fsdp, "model")       head sharding
+  attn o (H*hd, D)      -> ("model", fsdp)
+  mlp gate/up (D, F)    -> (fsdp, "model")
+  mlp down (F, D)       -> ("model", fsdp)
+  moe experts (E, D, F) -> EP ("model", fsdp, None) when E % model == 0
+                           else TP (None, fsdp, "model")
+  mamba in/out proj     -> like mlp; per-head vectors on "model"
+  norms                 -> replicated
+
+Stacked layer params (scan) carry a leading periods axis -> specs get a
+leading None. GSPMD pads non-divisible dims (phi4's 24 heads on a 16-way
+model axis etc.) — the padding waste is surfaced in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig
+
+__all__ = [
+    "batch_axes", "param_shardings", "opt_shardings", "make_batch_specs",
+    "make_cache_shardings", "train_arg_shardings", "input_specs",
+]
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _rule(path: str, ndim: int, cfg: ModelConfig, mesh: Mesh) -> P:
+    fsdp = batch_axes(mesh) if cfg.fsdp_params else None
+    model_size = mesh.shape["model"]
+    stacked = path.startswith("blocks/") or path.startswith("encoder/blocks")
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    leaf = path.split("/")
+    if path.startswith("embed/"):
+        # vocab TP only: FSDP-sharding D here lets GSPMD propagate a
+        # data-axis sharding into activations through the embedding gather,
+        # un-sharding the batch (observed; see pshard.py docstring)
+        return P("model", None)
+    if path.startswith("lm_head/"):
+        return P(None, "model")
+    if "router" in leaf:
+        return spec(None, None)
+    if ("gate" in leaf or "up" in leaf or "down" in leaf) and ndim - len(lead) == 3:
+        # MoE expert stacks (E, D, F) / (E, F, D)
+        if cfg.num_experts % model_size == 0:
+            return spec("model", fsdp, None) if "down" not in leaf else \
+                spec("model", None, fsdp)
+        return spec(None, fsdp, "model") if "down" not in leaf else \
+            spec(None, "model", fsdp)
+    if "down" in leaf:                      # dense mlp down (F, D)
+        return spec("model", fsdp)
+    if "gate" in leaf or "up" in leaf:      # dense mlp in (D, F)
+        return spec(fsdp, "model")
+    if leaf[-2:] == ["o", "w"] or "out_proj" in leaf:
+        return spec("model", fsdp)
+    if leaf[-1] == "w" and any(k in leaf for k in ("q", "k", "v", "in_proj")):
+        return spec(fsdp, "model")
+    if leaf[-1] == "b" and any(k in leaf for k in ("q", "k", "v")):
+        return spec("model")
+    if "conv_w" in leaf:
+        return spec(None, "model")
+    if "conv_b" in leaf:
+        return spec("model")
+    if leaf[-1] in ("A_log", "D", "dt_bias"):
+        return spec("model")
+    if "norm" in path and leaf[-1] == "scale":
+        # mamba gated norm is (d_inner,) sharded; model norms replicated
+        if "mixer" in leaf:
+            return spec("model")
+        return spec(None)
+    # fallback: replicate (biases, scalars)
+    return spec(*([None] * (ndim - len(lead))))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree) -> Any:
+    def assign(path, leaf):
+        ps = _rule(_path_str(path), np.ndim(leaf) if hasattr(leaf, "ndim")
+                   else len(leaf.shape), cfg, mesh)
+        return NamedSharding(mesh, ps)
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, params_tree) -> Any:
+    ps = param_shardings(cfg, mesh, params_tree)
+    return {"m": ps, "v": ps,
+            "count": NamedSharding(mesh, P())}
+
+
+def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """ShapeDtypeStructs + NamedShardings for a train/prefill batch."""
+    import jax.numpy as jnp
+    b_ax = batch_axes(mesh)
+    bsz, seq = shape.global_batch, shape.seq_len
+    text_len = seq
+    structs: dict = {}
+    specs: dict = {}
+    if cfg.family == "vlm":
+        text_len = seq - cfg.num_image_tokens
+        structs["embeds"] = jax.ShapeDtypeStruct(
+            (bsz, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        specs["embeds"] = NamedSharding(mesh, P(b_ax, None, None))
+    if cfg.is_enc_dec:
+        structs["embeds"] = jax.ShapeDtypeStruct(
+            (bsz, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        specs["embeds"] = NamedSharding(mesh, P(b_ax, None, None))
+    structs["tokens"] = jax.ShapeDtypeStruct((bsz, text_len), jnp.int32)
+    specs["tokens"] = NamedSharding(mesh, P(b_ax, None))
+    if shape.kind == "train":
+        structs["labels"] = jax.ShapeDtypeStruct((bsz, text_len), jnp.int32)
+        structs["loss_mask"] = jax.ShapeDtypeStruct((bsz, text_len),
+                                                    jnp.float32)
+        specs["labels"] = NamedSharding(mesh, P(b_ax, None))
+        specs["loss_mask"] = NamedSharding(mesh, P(b_ax, None))
+    return structs, specs
+
+
+def make_cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
+                         shard_seq: bool):
+    """Cache shardings. shard_seq=True (long_500k, batch=1): KV seq over the
+    data axes; else batch over data axes. The head-like axis takes 'model':
+    kv-head axis when divisible by the model-axis size, else head_dim
+    (pjit INPUT shardings require exact divisibility — kv=2/8/20 cannot
+    shard 16 ways, but head_dim in {64,128,256} always can)."""
+    b_ax = batch_axes(mesh)
+    model_size = mesh.shape["model"]
+    kv_on_heads = cfg.num_kv_heads and cfg.num_kv_heads % model_size == 0
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        leaf_name = p.split("/")[-1]
+        if leaf_name in ("k_scale", "v_scale"):
+            # (periods, B, S, Hkv) — int8-cache scales, follow the cache
+            if shard_seq:
+                h = "model" if kv_on_heads else None
+                return NamedSharding(mesh, P(None, None, b_ax, h))
+            if kv_on_heads:
+                return NamedSharding(mesh, P(None, b_ax, None, "model"))
+            if leaf.shape[2] % model_size == 0:
+                return NamedSharding(mesh, P(None, b_ax, "model", None))
+            return NamedSharding(mesh, P(None, b_ax, None, None))
+        if p.startswith("cross") or "k" in p.split("/") or "v" in p.split("/"):
+            # (periods, B, S, Hkv, hd)
+            if shard_seq:
+                heads = ("model", None) if kv_on_heads else (None, "model")
+                return NamedSharding(mesh, P(None, None, b_ax, *heads))
+            if kv_on_heads:
+                return NamedSharding(mesh, P(None, b_ax, None, "model", None))
+            # §Perf iteration 2-1 (gemma2 decode_32k): kv-heads < model axis.
+            # Baseline sharded head_dim -> XLA all-gathered the whole cache
+            # every token (4.1 GiB wire/tok). Sharding the cache SEQ axis
+            # instead gives flash-decode semantics: partial scores stay
+            # local, only the softmax stats cross shards. Falls back to
+            # head_dim when S doesn't divide (whisper cross cache: S=1500).
+            s_dim = leaf.shape[2]
+            if s_dim % model_size == 0:
+                return NamedSharding(mesh, P(None, b_ax, "model", None, None))
+            return NamedSharding(mesh, P(None, b_ax, None, None, "model"))
+        if "ssm" in p.split("/"):   # (periods, B, H, Phd, N)
+            if shard_seq:
+                return NamedSharding(mesh, P(None, None, "model", None, None))
+            return NamedSharding(mesh, P(None, b_ax, "model", None, None))
+        if "conv" in p.split("/"):  # (periods, B, W-1, C)
+            if shard_seq:
+                return NamedSharding(mesh, P(None, None, None, "model"))
+            return NamedSharding(mesh, P(None, b_ax, None, "model"))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def input_specs(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins + shardings for every model input of the
+    given cell — the dry-run contract (no device allocation).
+
+    Returns a dict:
+      kind="train":   {params, opt_state, batch, step} structs + shardings
+      kind="prefill": {params, batch, cache}
+      kind="decode":  {params, token, cache, pos}
+    """
+    import jax.numpy as jnp
+    from repro.optim.adamw import AdamWConfig, adamw_init
+
+    b_ax = batch_axes(mesh)
+    params_s = tfm.param_shapes(arch_cfg)
+    p_shard = param_shardings(arch_cfg, mesh, params_s)
+    out: dict = {"params": (params_s, p_shard)}
+
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(
+            lambda p: adamw_init(p, AdamWConfig(dtype=arch_cfg.adam_dtype)),
+            params_s)
+        out["opt_state"] = (opt_s, opt_shardings(arch_cfg, mesh, params_s))
+        structs, specs = make_batch_specs(arch_cfg, shape, mesh)
+        out["batch"] = (structs, specs)
+        out["step"] = (jax.ShapeDtypeStruct((), jnp.int32),
+                       NamedSharding(mesh, P()))
+        return out
+
+    if shape.kind == "prefill":
+        structs, specs = make_batch_specs(arch_cfg, shape, mesh)
+        out["batch"] = (structs, specs)
+        cache_s = jax.eval_shape(
+            lambda: tfm.init_cache(arch_cfg, shape.global_batch,
+                                   shape.seq_len))
+        out["cache"] = (cache_s,
+                        make_cache_shardings(arch_cfg, mesh, cache_s,
+                                             shard_seq=False))
+        return out
+
+    # decode: one new token against a seq_len cache. batch=1 (long_500k)
+    # cannot shard on batch -> shard the cache sequence axis instead
+    shard_seq = shape.global_batch == 1
+    cache_s = jax.eval_shape(
+        lambda: tfm.init_cache(arch_cfg, shape.global_batch, shape.seq_len))
+    out["cache"] = (cache_s,
+                    make_cache_shardings(arch_cfg, mesh, cache_s,
+                                         shard_seq=shard_seq))
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_spec = NamedSharding(mesh, P(None, None) if shard_seq
+                             else P(b_ax, None))
+    out["token"] = (tok, tok_spec)
+    out["pos"] = (jax.ShapeDtypeStruct((), jnp.int32), NamedSharding(mesh, P()))
+    return out

@@ -1,0 +1,181 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+recurrence is expressed as an attention-like (Q x Q) matmul (MXU-shaped);
+across chunks a short lax.scan carries the (H, P, N) state. Decode is the
+O(1) state update — this is what makes the ``long_500k`` cell sub-quadratic
+(the "context" lives in the state, not a KV cache).
+
+Conventions: x (B, L, H, P) heads, dt (B, L, H), A (H,) negative decay,
+B/C (B, L, G, N) with G = 1 group, D (H,) skip. Head axis H is sharded on
+'model'; state N is small (<=128) and replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rmsnorm
+
+__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_mamba_state"]
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    g = 1
+    conv_ch = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(k1, d, 2 * di + 2 * g * n + h, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch), jnp.float32)
+                   * (cfg.conv_width * conv_ch) ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), 0.5, jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": init_dense(k3, di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, h, n = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]["w"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt_raw = zxbcdt[..., di + di + 2 * n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, cfg):
+    """Depthwise causal conv over time. xbc: (B, L, C)."""
+    w = p["conv_w"]  # (W, C)
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N) (G=1 squeezed).
+    Returns (y (B, L, H, P), h_final (B, H, P, N)).
+    """
+    b, l, h, p = xh.shape
+    n = Bm.shape[-1]
+    nc = l // chunk
+    assert l % chunk == 0, (l, chunk)
+    xs = xh.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h)
+    Bs = Bm.reshape(b, nc, chunk, n)
+    Cs = Cm.reshape(b, nc, chunk, n)
+
+    loga = dts * A  # (B, nc, Q, H), negative
+    cum = jnp.cumsum(loga, axis=2)                   # s_i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # s_i - s_j (B,nc,Q,Q,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # double-where: zero the non-causal exponents BEFORE exp, else the
+    # masked branch's exp(+huge) poisons the backward pass with inf * 0
+    seg = jnp.where(causal, seg, 0.0)
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    cb = jnp.einsum("bcin,bcjn->bcij", Cs.astype(jnp.float32),
+                    Bs.astype(jnp.float32))          # (B,nc,Q,Q)
+    m = cb[..., None] * decay * dts[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xs.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(s_last - s_j) dt_j B_j x_j -> (B,nc,H,P,N)
+    last = cum[:, :, -1:, :]                          # (B,nc,1,H)
+    w_j = jnp.exp(last - cum) * dts                   # (B,nc,Q,H)
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w_j, Bs.astype(jnp.float32),
+                   xs.astype(jnp.float32))
+
+    # cross-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0, :])           # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, inputs):
+        dec, s_c = inputs
+        hnew = hprev * dec[:, :, None, None] + s_c
+        return hnew, hprev
+
+    (h_fin, h_prevs) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # (B,nc,H,P,N) state entering chunk
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cs.astype(jnp.float32),
+                         h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, h_fin
+
+
+def _mamba_full(p, x, cfg):
+    b, l, d = x.shape
+    di, h, n, hp = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z, xbc_raw, dt = _split_proj(p, x, cfg)
+    xbc = _causal_conv(p, xbc_raw, cfg)
+    xh = xbc[..., :di].reshape(b, l, h, hp)
+    Bm = xbc[..., di:di + n]
+    Cm = xbc[..., di + n:]
+    A = -jnp.exp(p["A_log"])
+    y, h_fin = _ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssd_chunk, l))
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]["w"], h_fin, xbc_raw
+
+
+def mamba_train(p, x, cfg):
+    """x: (B, L, D) -> (B, L, D). Full-sequence SSD (train)."""
+    y, _, _ = _mamba_full(p, x, cfg)
+    return y
+
+
+def mamba_prefill(p, x, cfg, state):
+    """Full-sequence SSD that also hands off (conv, ssm) state for decode."""
+    y, h_fin, xbc_raw = _mamba_full(p, x, cfg)
+    width = cfg.conv_width
+    new_conv = xbc_raw[:, -(width - 1):, :].astype(state["conv"].dtype)
+    return y, {"conv": new_conv, "ssm": h_fin}
+
+
+def init_mamba_state(cfg, batch: int, dtype):
+    di, h, n, hp = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, hp, n), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cfg, state):
+    """One-token step. x: (B, 1, D); state from init_mamba_state."""
+    b = x.shape[0]
+    di, h, n, hp = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)                 # (B,1,*)
+    # conv cache: window = [state.conv, xbc]
+    win = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, W, C)
+    w = p["conv_w"]
+    conv_out = jnp.sum(win * w[None], axis=1, keepdims=True) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)                        # (B,1,C)
+    new_conv = win[:, 1:]
+    xh = xbc_t[..., :di].reshape(b, h, hp)
+    Bm = xbc_t[:, 0, di:di + n]
+    Cm = xbc_t[:, 0, di + n:]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0] * A)                            # (B,H)
+    hs = state["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt[:, 0], Bm.astype(jnp.float32),
+        xh.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), hs)
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]["w"], {"conv": new_conv, "ssm": hs}

@@ -1,0 +1,474 @@
+"""Model assembly: pattern-scanned decoder stacks, whisper enc-dec, caches.
+
+The layer stack is ``jax.lax.scan`` over ``num_periods`` steps; each step
+unrolls the (short) ``layer_pattern``. Parameters and caches are stacked
+pytrees with leading dim ``num_periods`` — HLO stays O(pattern) regardless
+of depth, remat wraps the scan body (policy per config).
+
+Forward surfaces:
+  init_params(key, cfg)                      -> params
+  forward_hidden(params, cfg, tokens, ...)   -> (B, L, D), aux   (train)
+  init_cache(cfg, batch, seq)                -> cache pytree      (decode)
+  prefill(params, cfg, tokens, cache, ...)   -> (hidden_last, cache)
+  decode_step(params, cfg, token, cache, pos)-> (logits, cache)
+  encode(params, cfg, frames)                -> encoder output    (whisper)
+
+Modality stubs per assignment: whisper's conv frontend and llava's anyres
+tiler are input_specs-provided embeddings ("embeds"), prepended (llava) or
+cross-attended (whisper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.models import attention as attn_mod, moe as moe_mod, ssm as ssm_mod
+from repro.models import pshard
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense, dtype_of, embed, init_dense, init_embedding, init_rmsnorm,
+    init_swiglu, rmsnorm, softcap, swiglu,
+)
+
+__all__ = [
+    "init_params", "forward_hidden", "init_cache", "prefill", "decode_step",
+    "encode", "lm_logits", "param_shapes",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    keys = jax.random.split(key, 6)
+    p: dict = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if "mamba" in kind:
+        p["mixer"] = ssm_mod.init_mamba(keys[0], cfg, dtype)
+    else:
+        p["mixer"] = attn_mod.init_attention(keys[0], cfg, dtype)
+    if kind == "xattn":  # whisper decoder: self-attn + cross-attn + mlp
+        p["norm_x"] = init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = attn_mod.init_attention(keys[1], cfg, dtype)
+    has_ffn = kind not in ("mamba",)  # pure mamba2 blocks have no FFN
+    if has_ffn:
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        if kind.endswith("_moe"):
+            p["ffn"] = moe_mod.init_moe(keys[2], cfg, dtype)
+        else:
+            p["ffn"] = init_swiglu(keys[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": init_embedding(keys[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(keys[1], cfg.d_model, cfg.vocab_padded,
+                                       dtype)
+
+    def stacked(key, kind):
+        ks = jax.random.split(key, cfg.num_periods)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_block(k, kind, cfg, dtype) for k in ks])
+
+    bkeys = jax.random.split(keys[2], cfg.pattern_period)
+    params["blocks"] = tuple(
+        stacked(bkeys[j], kind) for j, kind in enumerate(cfg.layer_pattern))
+
+    if cfg.is_enc_dec:
+        ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+        enc_blocks = [_init_block(k, "attn", cfg, dtype) for k in ekeys]
+        params["encoder"] = {
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of params — used by the dry-run (no alloc)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# shared block application (train / prefill path)
+# ---------------------------------------------------------------------------
+
+def _apply_block_train(kind, p, x, cfg, positions, aux, enc_out=None):
+    window = cfg.local_window if kind.startswith("local") else None
+    if "mamba" in kind:
+        mixed = ssm_mod.mamba_train(p["mixer"], rmsnorm(p["norm1"], x), cfg)
+    else:
+        mixed, _ = attn_mod.attention_train(
+            p["mixer"], rmsnorm(p["norm1"], x), cfg, window=window,
+            positions=positions)
+    x = x + mixed
+    if kind == "xattn":
+        q_in = rmsnorm(p["norm_x"], x)
+        enc_pos = jnp.arange(enc_out.shape[1])
+        b, lq = q_in.shape[0], q_in.shape[1]
+        q = dense(p["cross"]["q"], q_in).reshape(
+            b, lq, cfg.num_heads, cfg.head_dim)
+        k = dense(p["cross"]["k"], enc_out).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+        v = dense(p["cross"]["v"], enc_out).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+        out = attn_mod.attention_core(
+            q, k, v, cfg, causal=False, window=None,
+            q_positions=positions, k_positions=enc_pos)
+        x = x + dense(p["cross"]["o"],
+                      out.reshape(x.shape[0], x.shape[1], -1))
+    if "ffn" in p:
+        h = rmsnorm(p["norm2"], x)
+        if kind.endswith("_moe"):
+            y, moe_aux, routes = moe_mod.moe_ffn(p["ffn"], h, cfg)
+            aux = aux + moe_aux
+        else:
+            y = swiglu(p["ffn"], h)
+        x = x + y
+    return x, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    # "full": save ONLY the tagged bf16 block input. A bare jax.checkpoint
+    # lets XLA save the f32-upcast of the carry (the body's leading rmsnorm
+    # convert gets folded into the saved residual), doubling+ the remat
+    # memory; the explicit name pins the saved tensor to the bf16 original.
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.save_only_these_names("block_in"))
+
+
+def _stack_scan(params_blocks, x, cfg, positions, enc_out=None):
+    """Apply the pattern-stacked decoder over num_periods steps.
+
+    scan_layers=True: jax.lax.scan (small HLO). False (MoE archs): unrolled
+    python loop over period slices — required because shard_map inside a
+    scanned+differentiated body crashes this XLA version (config.py note).
+    Remat wraps each period either way.
+    """
+
+    def body(carry, block_slices):
+        x, aux = carry
+        x = _checkpoint_name(x, "block_in")
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, aux = _apply_block_train(kind, block_slices[j], x, cfg,
+                                        positions, aux, enc_out=enc_out)
+        return (x, aux), None
+
+    body = _remat(body, cfg)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, carry, params_blocks)
+        return x, aux
+    for i in range(cfg.num_periods):
+        slices = jax.tree.map(lambda a: a[i], params_blocks)
+        carry, _ = body(carry, slices)
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# embeddings and logits
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(l: int, d: int):
+    pos = jnp.arange(l)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(params, cfg, tokens, embeds):
+    """Token embedding + optional modality prefix (llava) / none (whisper)."""
+    x = embed(params["embed"], tokens)
+    if cfg.family == "vlm" and embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    if cfg.is_enc_dec:
+        x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+    return x
+
+
+def embed_lookup(params, cfg, tokens):
+    """Public token-embedding lookup (telemetry/examples)."""
+    return embed(params["embed"], tokens)
+
+
+def lm_logits(params, cfg, hidden):
+    """Final-norm + LM head (+ gemma2 final softcap). hidden: (..., D)."""
+    h = rmsnorm(params["final_norm"], hidden)
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    logits = jnp.einsum("...d,dv->...v", h, w,
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, D) precomputed stub embeddings (conv frontend is a
+    stub per the assignment). Bidirectional attention stack."""
+    x = frames.astype(dtype_of(cfg.dtype))
+    x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, p):
+        x, aux = carry
+        # bidirectional self-attention (no causal mask, no RoPE — absolute
+        # sinusoidal positions added at the input)
+        q, k, v = attn_mod._project_qkv(
+            p["mixer"], rmsnorm(p["norm1"], x), cfg, None)
+        out = attn_mod.attention_core(q, k, v, cfg, causal=False, window=None,
+                                      q_positions=positions,
+                                      k_positions=positions)
+        x = x + dense(p["mixer"]["o"], out.reshape(x.shape[0], x.shape[1], -1))
+        x = x + swiglu(p["ffn"], rmsnorm(p["norm2"], x))
+        return (x, aux), None
+
+    body = _remat(body, cfg)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["encoder"]["blocks"])
+    return rmsnorm(params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params, cfg: ModelConfig, tokens, embeds=None):
+    """Full-sequence forward to final hidden states (loss is chunked in
+    steps.py to avoid materializing (B, L, V) logits)."""
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode(params, cfg, embeds)
+    x = pshard.hint(_embed_inputs(params, cfg, tokens, embeds), "btd")
+    positions = jnp.arange(x.shape[1])
+    x, aux = _stack_scan(params["blocks"], x, cfg, positions, enc_out=enc_out)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode: caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Stacked per-pattern-position caches sized for ``seq`` positions."""
+    dtype = dtype_of(cfg.dtype)
+    periods = cfg.num_periods
+    cache: dict = {"blocks": []}
+    for kind in cfg.layer_pattern:
+        if "mamba" in kind:
+            st = ssm_mod.init_mamba_state(cfg, batch, dtype)
+            cache["blocks"].append(
+                {k: jnp.broadcast_to(v, (periods,) + v.shape)
+                 for k, v in st.items()})
+        else:
+            # sliding-window layers carry a ring cache of window size
+            # (§Perf iteration 2-2) — storage and per-token read bytes
+            # shrink by seq/window for those layers
+            s_eff = seq
+            if kind.startswith("local") and cfg.local_window:
+                s_eff = min(seq, cfg.local_window)
+            kv_dtype = (jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype)
+            kv = jnp.zeros((periods, batch, s_eff, cfg.num_kv_heads,
+                            cfg.head_dim), kv_dtype)
+            entry = {"k": kv, "v": kv}
+            if cfg.kv_cache_dtype == "int8":
+                sc = jnp.zeros((periods, batch, s_eff, cfg.num_kv_heads),
+                               jnp.float32)
+                entry["k_scale"] = sc
+                entry["v_scale"] = sc
+            cache["blocks"].append(entry)
+    cache["blocks"] = tuple(cache["blocks"])
+    if cfg.is_enc_dec:
+        xkv = jnp.zeros((periods, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                         cfg.head_dim), dtype)
+        cache["cross"] = {"k": xkv, "v": xkv}
+    return cache
+
+
+def _apply_block_decode(kind, p, x, cfg, cache_j, pos, cross_j=None):
+    window = cfg.local_window if kind.startswith("local") else None
+    h = rmsnorm(p["norm1"], x)
+    if "mamba" in kind:
+        mixed, new_state = ssm_mod.mamba_decode(p["mixer"], h, cfg, cache_j)
+        new_cache = new_state
+    else:
+        mixed, new_cache = attn_mod.attention_decode(
+            p["mixer"], h, cfg, cache_j, pos, window=window)
+    x = x + mixed
+    if kind == "xattn":
+        q_in = rmsnorm(p["norm_x"], x)
+        b = x.shape[0]
+        q = dense(p["cross"]["q"], q_in).reshape(
+            b, 1, cfg.num_heads, cfg.head_dim)
+        rep = cfg.num_heads // cfg.num_kv_heads
+        qh = q.reshape(b, cfg.num_kv_heads, rep, cfg.head_dim)
+        scores = jnp.einsum("bgrd,bsgd->bgrs", qh, cross_j["k"],
+                            preferred_element_type=jnp.float32)
+        scores = scores * cfg.head_dim ** -0.5
+        w = jax.nn.softmax(scores, axis=-1).astype(cross_j["v"].dtype)
+        out = jnp.einsum("bgrs,bsgd->bgrd", w, cross_j["v"])
+        x = x + dense(p["cross"]["o"], out.reshape(b, 1, -1))
+    if "ffn" in p:
+        h = rmsnorm(p["norm2"], x)
+        if kind.endswith("_moe"):
+            y, _, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
+        else:
+            y = swiglu(p["ffn"], h)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits (B, V), cache)."""
+    x = embed(params["embed"], token)
+    if cfg.is_enc_dec:
+        x = x + _sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+
+    cross = cache.get("cross")
+
+    def body(x, slices):
+        block_params, block_cache, cross_j = slices
+        new_caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, nc = _apply_block_decode(kind, block_params[j], x, cfg,
+                                        block_cache[j], pos, cross_j=cross_j)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    cross_xs = cross if cross is not None else None
+    xs = (params["blocks"], cache["blocks"], cross_xs)
+    x, new_blocks = jax.lax.scan(body, x, xs)
+    logits = lm_logits(params, cfg, x[:, 0, :])
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks
+    return logits, new_cache
+
+
+def _sinusoidal_at(pos, d: int):
+    dim = jnp.arange(0, d, 2).astype(jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + cache population
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, cache, embeds=None):
+    """Process a prompt, filling the KV cache. Returns (last_logits, cache).
+
+    Attention K/V for the prompt are written at positions [0, L); mamba
+    states are advanced by running the chunked scan and keeping the final
+    state. (Prefill re-derives per-block K/V — one extra projection pass —
+    to keep forward_hidden and prefill structurally identical.)
+    """
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode(params, cfg, embeds)
+    x = pshard.hint(_embed_inputs(params, cfg, tokens, embeds), "btd")
+    l = x.shape[1]
+    positions = jnp.arange(l)
+
+    def body(carry, slices):
+        x, aux = carry
+        block_params, block_cache = slices
+        new_caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            p = block_params[j]
+            cj = block_cache[j]
+            window = cfg.local_window if kind.startswith("local") else None
+            h = rmsnorm(p["norm1"], x)
+            if "mamba" in kind:
+                # advance state over the prompt; hand off (conv, ssm) state
+                mixed, nc = ssm_mod.mamba_prefill(p["mixer"], h, cfg, cj)
+            else:
+                mixed, (k, v) = attn_mod.attention_train(
+                    p["mixer"], h, cfg, window=window, positions=positions)
+                nc = dict(cj)
+                pairs = {"k": k, "v": v}
+                s_cache = cj["k"].shape[1]
+                shift = (k.shape[1] - s_cache) % s_cache
+                for name, val in pairs.items():
+                    if cfg.kv_cache_dtype == "int8":
+                        val, scale = attn_mod.quantize_kv(val)
+                        if val.shape[1] > s_cache:  # ring: keep last S
+                            scale = jnp.roll(scale[:, -s_cache:], shift,
+                                             axis=1)
+                            nc[name + "_scale"] = scale
+                        else:
+                            nc[name + "_scale"] = \
+                                jax.lax.dynamic_update_slice_in_dim(
+                                    cj[name + "_scale"], scale, 0, axis=1)
+                    if val.shape[1] > s_cache:
+                        nc[name] = jnp.roll(val[:, -s_cache:], shift, axis=1)
+                    else:
+                        nc[name] = jax.lax.dynamic_update_slice_in_dim(
+                            cj[name], val.astype(cj[name].dtype), 0, axis=1)
+            x = x + mixed
+            if kind == "xattn":
+                enc_pos = jnp.arange(enc_out.shape[1])
+                b, lq = x.shape[0], x.shape[1]
+                q_in = rmsnorm(p["norm_x"], x)
+                q = dense(p["cross"]["q"], q_in).reshape(
+                    b, lq, cfg.num_heads, cfg.head_dim)
+                k = dense(p["cross"]["k"], enc_out).reshape(
+                    enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads,
+                    cfg.head_dim)
+                v = dense(p["cross"]["v"], enc_out).reshape(
+                    enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads,
+                    cfg.head_dim)
+                out = attn_mod.attention_core(
+                    q, k, v, cfg, causal=False, window=None,
+                    q_positions=positions, k_positions=enc_pos)
+                x = x + dense(p["cross"]["o"], out.reshape(b, lq, -1))
+            if "ffn" in p:
+                hh = rmsnorm(p["norm2"], x)
+                if kind.endswith("_moe"):
+                    y, moe_aux, _ = moe_mod.moe_ffn(p["ffn"], hh, cfg)
+                    aux = aux + moe_aux
+                else:
+                    y = swiglu(p["ffn"], hh)
+                x = x + y
+            x = pshard.hint(x, "btd")
+            new_caches.append(nc)
+        return (x, aux), tuple(new_caches)
+
+    body = _remat(body, cfg)
+    (x, _), new_blocks = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], cache["blocks"]))
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks
+    if cfg.is_enc_dec:
+        # populate the cross-attention K/V cache from the encoder output
+        def cross_body(_, block_params):
+            p = block_params[0]  # whisper pattern period is 1 ("xattn",)
+            k = dense(p["cross"]["k"], enc_out).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads,
+                cfg.head_dim)
+            v = dense(p["cross"]["v"], enc_out).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads,
+                cfg.head_dim)
+            return None, {"k": k, "v": v}
+
+        _, crosskv = jax.lax.scan(cross_body, None, params["blocks"])
+        new_cache["cross"] = crosskv
+    logits = lm_logits(params, cfg, x[:, -1, :])
+    return logits, new_cache

@@ -1,0 +1,72 @@
+"""AdamW with global-norm clipping; optimizer state dtype per config.
+
+State is a pytree mirroring params (m, v) + step count. Sharding: m/v
+inherit the parameter PartitionSpecs (FSDP-sharded params => ZeRO-1 comes
+for free: each device updates only its parameter shard). ``dtype``
+selects fp32 (default) or bf16 moments (grok-1 HBM budget — DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g32 * g32 * (1 - cfg.b2)
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    # explicit flatten/unflatten: params trees contain tuples (scan stacks),
+    # so a tuple-returning tree.map would be ambiguous
+    pf, treedef = jax.tree.flatten(params)
+    gf = jax.tree.leaves(grads)
+    mf = jax.tree.leaves(state["m"])
+    vf = jax.tree.leaves(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(pf, gf, mf, vf)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_params, {"m": new_m, "v": new_v, "count": count}, {
+        "grad_norm": gnorm}

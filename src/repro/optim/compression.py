@@ -1,0 +1,51 @@
+"""int8 gradient compression with error feedback (DESIGN.md §8).
+
+Cross-pod gradient reduction is DCI-bound at 512+ chips; quantizing the
+pod-axis all-reduce to int8 cuts that wire volume 4x (vs fp32 master grads)
+/ 2x (vs bf16). Error feedback accumulates the quantization residual into
+the next step's gradient, preserving convergence (Karimireddy et al. 2019).
+
+``compressed_psum`` is used inside shard_map: full-precision psum over the
+in-pod axes first (ICI is cheap), then int8 quantize -> psum over 'pod' ->
+dequantize. Per-tensor symmetric scaling; scale itself travels via a tiny
+fp32 psum-max.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "int8_decompress", "compressed_psum",
+           "apply_error_feedback"]
+
+
+def int8_compress(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, pod_axis: str) -> jax.Array:
+    """int8-quantized psum across the pod axis (inside shard_map)."""
+    # shared scale: max over pods so every pod quantizes into the same grid
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), pod_axis)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    # int32 accumulate avoids int8 overflow across pods
+    total = jax.lax.psum(q.astype(jnp.int32), pod_axis)
+    return total.astype(jnp.float32) * scale
+
+
+def apply_error_feedback(grad: jax.Array, residual: jax.Array,
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fold residual into grad, quantize, return (q_grad_f32, scale, new_residual)."""
+    adj = grad.astype(jnp.float32) + residual
+    q, scale = int8_compress(adj)
+    deq = int8_decompress(q, scale)
+    return deq, scale, adj - deq

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup, 1)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,111 @@
+"""Fault-tolerant training runtime: checkpoint/restart, retry, stragglers.
+
+Design for 1000+ nodes (DESIGN.md §8), realized at container scale:
+
+* restart-exact: restore-latest on start + deterministic data pipeline
+  (step -> batch is pure), so a preempted/crashed job resumes losslessly.
+* retry: a failed step (transient device error) is retried up to
+  ``max_retries`` times before surfacing — at scale this is where a
+  coordinator would evict the bad host and re-shard (elastic restore path
+  in ckpt/checkpoint.py handles the mesh change).
+* straggler watchdog: per-step wall time vs. an EWMA; steps slower than
+  ``straggler_factor`` x EWMA increment a counter and invoke a callback
+  (at scale: trigger backup-task dispatch / drop the slow host).
+* async checkpointing overlaps serialization with compute.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer, latest_step, restore_checkpoint,
+)
+
+__all__ = ["FTConfig", "StragglerWatchdog", "train_loop"]
+
+
+@dataclass
+class FTConfig:
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    keep: int = 3
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+
+
+@dataclass
+class StragglerWatchdog:
+    factor: float = 3.0
+    alpha: float = 0.2
+    ewma: float | None = None
+    straggler_steps: int = 0
+    on_straggler: object = None
+
+    def observe(self, dt: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and dt > self.factor * self.ewma:
+            self.straggler_steps += 1
+            is_straggler = True
+            if self.on_straggler is not None:
+                self.on_straggler(dt, self.ewma)
+        # EWMA update excludes straggler samples (they would poison the mean)
+        if not is_straggler:
+            self.ewma = (dt if self.ewma is None
+                         else self.alpha * dt + (1 - self.alpha) * self.ewma)
+        return is_straggler
+
+
+def train_loop(*, step_fn, params, opt_state, corpus, num_steps: int,
+               ft: FTConfig = FTConfig(), to_device=None, log_every: int = 10,
+               on_metrics=None):
+    """Run ``num_steps`` with checkpoint/restart + straggler tracking.
+
+    step_fn(params, opt_state, batch, step) -> (params, opt_state, metrics).
+    to_device: optional fn(host_batch) -> device batch (sharding).
+    Returns (params, opt_state, history dict).
+    """
+    import jax.numpy as jnp
+
+    ckpt = AsyncCheckpointer(ft.ckpt_dir, keep=ft.keep)
+    watchdog = StragglerWatchdog(factor=ft.straggler_factor,
+                                 alpha=ft.ewma_alpha)
+    start = 0
+    last = latest_step(ft.ckpt_dir)
+    if last is not None:
+        state = restore_checkpoint(ft.ckpt_dir, last,
+                                   {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start = last + 1
+
+    history = {"loss": [], "restored_from": last,
+               "straggler_steps": 0, "retries": 0}
+    for step in range(start, num_steps):
+        batch = corpus.batch(step)
+        if to_device is not None:
+            batch = to_device(batch)
+        t0 = time.time()
+        for attempt in range(ft.max_retries + 1):
+            try:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.asarray(step))
+                break
+            except Exception:
+                history["retries"] += 1
+                if attempt == ft.max_retries:
+                    ckpt.wait()
+                    raise
+        dt = time.time() - t0
+        watchdog.observe(dt)
+        loss = float(metrics["loss"])
+        history["loss"].append(loss)
+        if on_metrics is not None:
+            on_metrics(step, metrics, dt)
+        if log_every and step % log_every == 0:
+            print(f"step {step}: loss={loss:.4f} dt={dt:.2f}s", flush=True)
+        if ft.ckpt_every and step % ft.ckpt_every == 0 and step > start:
+            ckpt.save(step, {"params": params, "opt": opt_state})
+    history["straggler_steps"] = watchdog.straggler_steps
+    ckpt.wait()
+    return params, opt_state, history

@@ -1,0 +1,110 @@
+"""Roofline/HLO-analysis unit tests: collective parsing, wire formulas,
+analytic FLOP accounting invariants."""
+import numpy as np
+import pytest
+
+from repro.analysis.flops import cell_bytes, cell_flops, _count_params
+from repro.analysis.hlo import (
+    Collective, collective_wire_bytes, parse_collectives,
+)
+from repro.analysis.roofline import HW, roofline_terms
+from repro.configs import ARCHS, SHAPES
+
+_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[8,128] parameter(0)
+  %ag = bf16[8,2048] all-gather(%p0), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}
+  %ar = f32[4,256] all-reduce(%x), replica_groups=[4,16]<=[64], to_apply=%sum
+  %rs = f32[2,64] reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = u8[64,256] collective-permute(%z), source_target_pairs={{0,1},{1,2}}
+  %a2a = bf16[16,32] all-to-all(%w), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+
+def test_parse_collectives_kinds_and_groups():
+    colls = parse_collectives(_HLO, default_group=256)
+    kinds = {c.kind: c for c in colls}
+    assert kinds["all-gather"].group_size == 16
+    assert kinds["all-gather"].result_bytes == 8 * 2048 * 2
+    assert kinds["all-reduce"].group_size == 16          # iota form [4,16]
+    assert kinds["reduce-scatter"].group_size == 2
+    assert kinds["collective-permute"].group_size == 2   # point-to-point
+    assert kinds["all-to-all"].group_size == 4
+
+
+def test_wire_formulas():
+    total, per_kind = collective_wire_bytes(
+        [Collective("all-reduce", 1000, 4)])
+    assert per_kind["all-reduce"] == pytest.approx(2 * 1000 * 3 / 4)
+    _, pk = collective_wire_bytes([Collective("all-gather", 1600, 16)])
+    assert pk["all-gather"] == pytest.approx(1600 * 15 / 16)
+    _, pk = collective_wire_bytes([Collective("reduce-scatter", 100, 8)])
+    assert pk["reduce-scatter"] == pytest.approx(100 * 7)
+    _, pk = collective_wire_bytes([Collective("collective-permute", 64, 2)])
+    assert pk["collective-permute"] == 64
+
+
+def test_roofline_dominance():
+    hw = HW()
+    r = roofline_terms(197e12, 0.0, 0.0, hw)     # exactly 1 s of compute
+    assert r["dominant"] == "compute" and r["compute_fraction"] == 1.0
+    r = roofline_terms(1.0, 819e9 * 2, 0.0, hw)  # 2 s of HBM
+    assert r["dominant"] == "memory" and r["bound_s"] == pytest.approx(2.0)
+    r = roofline_terms(1.0, 1.0, 50e9 * 3, hw)   # 3 s of ICI
+    assert r["dominant"] == "collective"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_flops_invariants(arch):
+    cfg = ARCHS[arch]
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = SHAPES[shape_name]
+        useful, padded = cell_flops(cfg, shape)
+        assert useful > 0 and padded > 0
+        assert padded >= useful * 0.999, (arch, shape_name)  # padding adds
+        b = cell_bytes(cfg, shape, chips=256)
+        assert b > 0
+    # train = 3x the causal forward of the same token count
+    u_train, _ = cell_flops(cfg, SHAPES["train_4k"])
+    # decode flops per token << prefill flops per token (no quadratic term)
+    u_pre, _ = cell_flops(cfg, SHAPES["prefill_32k"])
+    u_dec, _ = cell_flops(cfg, SHAPES["decode_32k"])
+    tokens_pre = SHAPES["prefill_32k"].global_batch * SHAPES["prefill_32k"].seq_len
+    tokens_dec = SHAPES["decode_32k"].global_batch
+    assert u_dec / tokens_dec < 2.5 * (u_pre / tokens_pre)
+
+
+def test_param_counts_match_published():
+    expectations = {"grok-1-314b": 314e9, "qwen2-72b": 72e9,
+                    "jamba-v0.1-52b": 52e9, "mamba2-370m": 0.37e9}
+    for arch, expect in expectations.items():
+        got = _count_params(ARCHS[arch])
+        assert got == pytest.approx(expect, rel=0.1), arch
+
+
+def test_dryrun_artifacts_complete():
+    """Every (arch x shape x mesh) cell has an ok/skip artifact."""
+    import glob
+    import json
+    import os
+    art = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                       "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    recs = {}
+    for p in glob.glob(os.path.join(art, "*.json")):
+        d = json.load(open(p))
+        recs[(d["arch"], d["shape"], d["mesh"])] = d
+    missing, failed = [], []
+    for arch in ARCHS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            for mesh in ("single_pod", "multi_pod"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    missing.append((arch, shape, mesh))
+                elif not (r.get("ok") or r.get("skipped")):
+                    failed.append((arch, shape, mesh))
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"

@@ -1,0 +1,83 @@
+"""Colored DegreeSketch (paper §6 future-work queries) vs exact BFS."""
+import numpy as np
+import pytest
+
+from repro.core.colored import (
+    ColoredDegreeSketch, colored_accumulate, colored_neighborhood,
+)
+from repro.core.hll import HLLConfig, rel_std
+from repro.graph import exact, generators as gen
+
+
+@pytest.fixture(scope="module")
+def setup():
+    edges = gen.rmat(8, 8, seed=11)
+    n = int(edges.max()) + 1
+    rng = np.random.default_rng(0)
+    colors = rng.integers(0, 3, size=n)
+    cfg = HLLConfig(p=10)
+    sk1 = colored_accumulate(edges, colors, n, cfg)
+    sk2 = colored_neighborhood(sk1, edges, t_max=2)
+    adj = exact.adjacency_lists(n, edges)
+    return edges, n, colors, adj, sk1, sk2
+
+
+def _truth_t1(adj, colors, x, c):
+    return int(np.sum(colors[adj[x]] == c))
+
+
+def test_color_count_t1(setup):
+    edges, n, colors, adj, sk1, _ = setup
+    deg = np.array([len(a) for a in adj])
+    hubs = np.argsort(-deg)[:5]
+    for x in hubs:
+        for c in range(3):
+            true = _truth_t1(adj, colors, x, c)
+            est = sk1.count(int(x), c)
+            assert est == pytest.approx(true, rel=4 * rel_std(10), abs=3), \
+                (x, c, true, est)
+
+
+def test_color_planes_sum_to_plain_degree(setup):
+    edges, n, colors, adj, sk1, _ = setup
+    deg = np.array([len(a) for a in adj])
+    hubs = np.argsort(-deg)[:5]
+    for x in hubs:
+        total = sum(sk1.count(int(x), c) for c in range(3))
+        assert total == pytest.approx(deg[x], rel=0.2)
+
+
+def test_count_not_and_union(setup):
+    edges, n, colors, adj, sk1, _ = setup
+    deg = np.array([len(a) for a in adj])
+    x = int(np.argmax(deg))
+    not_blue_true = int(np.sum(colors[adj[x]] != 2))
+    assert sk1.count_not(x, 2) == pytest.approx(not_blue_true, rel=0.2, abs=3)
+    assert sk1.count_union(x, [0, 1, 2]) == pytest.approx(deg[x], rel=0.2)
+
+
+def test_colored_t2_matches_bfs(setup):
+    edges, n, colors, adj, _, sk2 = setup
+    # exact 2-hop colored neighborhoods for a few hubs
+    deg = np.array([len(a) for a in adj])
+    hubs = np.argsort(-deg)[:3]
+    for x in hubs:
+        ball = set(adj[x].tolist())
+        for y in adj[x]:
+            ball |= set(adj[y].tolist())  # includes x itself via neighbors
+        for c in range(3):
+            true = sum(1 for y in ball if colors[y] == c)
+            est = sk2.count(int(x), c)
+            assert est == pytest.approx(true, rel=5 * rel_std(10), abs=4), \
+                (x, c, true, est)
+
+
+def test_partition_intersection_near_zero(setup):
+    """Partition coloring: red ∩ green adjacency sets are empty; the MLE
+    should return a small value relative to the plane sizes."""
+    edges, n, colors, adj, sk1, _ = setup
+    deg = np.array([len(a) for a in adj])
+    x = int(np.argmax(deg))
+    inter = sk1.count_and(x, 0, 1)
+    plane = max(sk1.count(x, 0), sk1.count(x, 1))
+    assert inter < 0.35 * plane  # small vs plane size (App. B caveats)

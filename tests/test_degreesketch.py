@@ -1,0 +1,94 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import degreesketch as dsk, hll
+from repro.core.hll import HLLConfig
+from repro.graph import exact, generators as gen
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    edges = gen.rmat(8, 8, seed=5)
+    n = int(edges.max()) + 1
+    return edges, n
+
+
+@pytest.fixture(scope="module")
+def sketch(small_graph):
+    edges, n = small_graph
+    return dsk.accumulate(edges, n, HLLConfig(p=8))
+
+
+def test_accumulate_degrees(small_graph, sketch):
+    edges, n = small_graph
+    deg = np.zeros(n)
+    np.add.at(deg, edges[:, 0], 1)
+    np.add.at(deg, edges[:, 1], 1)
+    est = np.asarray(sketch.degrees())
+    nz = deg > 0
+    mre = np.mean(np.abs(est[nz] - deg[nz]) / deg[nz])
+    assert mre < 2 * hll.rel_std(8)
+    assert np.all(est[~nz] == 0)
+
+
+def test_accumulate_block_size_invariance(small_graph):
+    edges, n = small_graph
+    cfg = HLLConfig(p=8)
+    a = dsk.accumulate(edges, n, cfg, block=64)
+    b = dsk.accumulate(edges, n, cfg, block=1 << 14)
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+
+
+def test_neighborhood_vs_bfs(small_graph, sketch):
+    edges, n = small_graph
+    cfg = HLLConfig(p=8)
+    local, glob, _ = dsk.neighborhood_estimates(edges, n, cfg, t_max=4,
+                                                sketch=sketch)
+    truth = exact.neighborhood_truth(n, edges, 4)
+    for t in range(4):
+        tv = truth[t].astype(float)
+        m = tv > 0
+        mre = np.mean(np.abs(local[t][m] - tv[m]) / tv[m])
+        assert mre < 2 * hll.rel_std(8), (t, mre)
+        rel = abs(glob[t] - tv.sum()) / tv.sum()
+        assert rel < 2 * hll.rel_std(8), (t, rel)
+
+
+def test_neighborhood_monotone_in_t(small_graph, sketch):
+    edges, n = small_graph
+    local, _, _ = dsk.neighborhood_estimates(edges, n, HLLConfig(p=8),
+                                             t_max=3, sketch=sketch)
+    # register tables only grow; estimates are monotone in registers
+    assert np.all(local[1] >= local[0] - 1e-3)
+    assert np.all(local[2] >= local[1] - 1e-3)
+
+
+def test_triangle_global_and_heavy_hitters(small_graph, sketch):
+    edges, n = small_graph
+    tri = exact.exact_edge_triangles(n, edges)
+    gt = exact.exact_global_triangles(n, edges, tri)
+    tot, vals, top_edges = dsk.triangle_heavy_hitters(sketch, edges, k=10,
+                                                      block=1024)
+    assert tot == pytest.approx(gt, rel=0.25)
+    true_top = set(map(tuple, edges[np.argsort(-tri)[:10]]))
+    recall = len(true_top & set(map(tuple, top_edges))) / 10
+    assert recall >= 0.6
+
+
+def test_vertex_heavy_hitters(small_graph, sketch):
+    edges, n = small_graph
+    tri = exact.exact_edge_triangles(n, edges)
+    vt = exact.exact_vertex_triangles(n, edges, tri)
+    _, _, top_v = dsk.vertex_heavy_hitters(sketch, edges, k=10, block=1024)
+    recall = len(set(np.argsort(-vt)[:10].tolist()) & set(top_v.tolist())) / 10
+    assert recall >= 0.7
+
+
+def test_union_query(small_graph, sketch):
+    edges, n = small_graph
+    adj = exact.adjacency_lists(n, edges)
+    xs = np.argsort([-len(a) for a in adj])[:3]
+    true_union = len(set(np.concatenate([adj[x] for x in xs]).tolist()))
+    est = float(sketch.union_size(jnp.asarray(xs)))
+    assert est == pytest.approx(true_union, rel=0.25)

@@ -1,0 +1,63 @@
+"""Distributed sketch equivalence on 8 simulated devices.
+
+Runs in a subprocess because XLA_FLAGS must be set before jax initializes
+(the main pytest process must keep seeing 1 device — see dry-run rules).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import hll, degreesketch as dsk
+from repro.distributed import sketch_dist as sd
+from repro.graph import generators as gen, exact
+
+edges = gen.rmat(8, 8, seed=5); n = int(edges.max()) + 1
+cfg = hll.HLLConfig(p=8)
+mesh = jax.make_mesh((8,), ("data",))
+plan = sd.build_plan(edges, n, 8)
+
+ds = dsk.accumulate(edges, n, cfg, n_pad=plan.n_pad)
+regs = sd.dist_accumulate(mesh, "data", plan, cfg)
+assert bool(jnp.all(jnp.asarray(regs) == ds.regs)), "accumulate mismatch"
+
+src = jnp.asarray(np.concatenate([edges[:, 0], edges[:, 1]]))
+dst = jnp.asarray(np.concatenate([edges[:, 1], edges[:, 0]]))
+ref = dsk.neighborhood_pass(ds.regs, src, dst)
+ag = sd.dist_propagate_allgather(mesh, "data", plan, regs)
+rg = sd.dist_propagate_ring(mesh, "data", plan, regs)
+assert bool(jnp.all(jnp.asarray(ag) == ref)), "allgather mismatch"
+assert bool(jnp.all(jnp.asarray(rg) == ref)), "ring mismatch"
+
+tot, vals, ids = sd.dist_triangle_heavy_hitters(mesh, "data", plan, cfg, regs, k=10)
+gt = exact.exact_global_triangles(n, edges)
+assert abs(tot - gt) / gt < 0.3, (tot, gt)
+
+tri = exact.exact_edge_triangles(n, edges)
+true_top = set(map(tuple, edges[np.argsort(-tri)[:10]]))
+recall = len(true_top & set(map(tuple, ids))) / 10
+assert recall >= 0.5, recall
+
+tot2, vv, vi = sd.dist_triangle_heavy_hitters(mesh, "data", plan, cfg, regs,
+                                              k=10, mode="vertex")
+vt = exact.exact_vertex_triangles(n, edges, tri)
+vrecall = len(set(np.argsort(-vt)[:10].tolist()) & set(vi.tolist())) / 10
+assert vrecall >= 0.5, vrecall
+print("DIST_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_sketch_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "DIST_OK" in res.stdout, res.stdout + "\n" + res.stderr

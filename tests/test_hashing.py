@@ -1,0 +1,52 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hashing import bucket_rho, fmix32, hash64
+
+
+def test_fmix32_deterministic_and_avalanchey():
+    x = jnp.arange(1 << 12, dtype=jnp.uint32)
+    h1 = np.asarray(fmix32(x))
+    h2 = np.asarray(fmix32(x))
+    np.testing.assert_array_equal(h1, h2)
+    # bits should be ~uniform: each of 32 bits set ~half the time
+    bits = ((h1[:, None] >> np.arange(32)) & 1).mean(axis=0)
+    assert np.all(np.abs(bits - 0.5) < 0.05)
+
+
+def test_hash64_lanes_differ():
+    x = jnp.arange(1000, dtype=jnp.uint32)
+    hi, lo = hash64(x)
+    assert not np.array_equal(np.asarray(hi), np.asarray(lo))
+
+
+@pytest.mark.parametrize("p", [4, 8, 12, 16])
+def test_bucket_range_and_uniformity(p):
+    keys = jnp.arange(1 << 14, dtype=jnp.uint32)
+    bucket, rho = bucket_rho(keys, p)
+    b = np.asarray(bucket)
+    r = np.asarray(rho)
+    assert b.min() >= 0 and b.max() < (1 << p)
+    assert r.min() >= 1 and r.max() <= (64 - p) + 1
+    counts = np.bincount(b, minlength=1 << p)
+    expected = len(keys) / (1 << p)
+    assert np.all(np.abs(counts - expected) < 6 * np.sqrt(expected) + 8)
+
+
+def test_rho_geometric():
+    keys = jnp.arange(1 << 16, dtype=jnp.uint32)
+    _, rho = bucket_rho(keys, 8)
+    r = np.asarray(rho).astype(int)
+    # P(rho = k) = 2^-k: check first few levels within 10%
+    n = len(r)
+    for k in (1, 2, 3, 4):
+        frac = float(np.mean(r == k))
+        assert abs(frac - 2.0 ** -k) < 0.1 * 2.0 ** -k + 1e-3, (k, frac)
+
+
+def test_seed_changes_hash():
+    keys = jnp.arange(100, dtype=jnp.uint32)
+    b0, r0 = bucket_rho(keys, 8, seed=0)
+    b1, r1 = bucket_rho(keys, 8, seed=1)
+    assert not (np.array_equal(b0, b1) and np.array_equal(r0, r1))

@@ -1,0 +1,92 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hll
+from repro.core.hll import HLLConfig
+
+
+def _keys(seed, n):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, 2 ** 31, size=n), jnp.uint32)
+
+
+@pytest.mark.parametrize("p", [6, 8, 12])
+@pytest.mark.parametrize("estimator", ["flajolet", "beta"])
+def test_estimate_within_bound(p, estimator):
+    cfg = HLLConfig(p=p, estimator=estimator)
+    for n in (50, 1000, 50_000):
+        errs = []
+        for seed in range(6):
+            keys = jnp.unique(_keys(seed, n))
+            nd = int(keys.shape[0])
+            regs = hll.insert(hll.empty(cfg), keys, HLLConfig(p=p, seed=seed, estimator=estimator))
+            errs.append(abs(float(hll.estimate(regs, cfg)) - nd) / nd)
+        # mean err over seeds should sit near the std error; 2.5x is generous
+        assert np.mean(errs) < 2.5 * hll.rel_std(p), (p, n, np.mean(errs))
+
+
+def test_insert_idempotent_on_duplicates():
+    cfg = HLLConfig(p=8)
+    keys = _keys(0, 1000)
+    once = hll.insert(hll.empty(cfg), keys, cfg)
+    twice = hll.insert(once, keys, cfg)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_merge_estimates_union():
+    cfg = HLLConfig(p=10)
+    a_keys = _keys(1, 20_000)
+    b_keys = _keys(2, 20_000)
+    a = hll.insert(hll.empty(cfg), a_keys, cfg)
+    b = hll.insert(hll.empty(cfg), b_keys, cfg)
+    u = hll.merge(a, b)
+    direct = hll.insert(hll.empty(cfg), jnp.concatenate([a_keys, b_keys]), cfg)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(direct))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=0, max_size=200),
+       st.lists(st.integers(0, 2 ** 31 - 1), min_size=0, max_size=200))
+def test_merge_commutative_monotone(xs, ys):
+    cfg = HLLConfig(p=6)
+    a = hll.insert(hll.empty(cfg), jnp.asarray(xs or [0], jnp.uint32), cfg)
+    b = hll.insert(hll.empty(cfg), jnp.asarray(ys or [0], jnp.uint32), cfg)
+    ab = np.asarray(hll.merge(a, b))
+    ba = np.asarray(hll.merge(b, a))
+    np.testing.assert_array_equal(ab, ba)                      # commutative
+    assert np.all(ab >= np.asarray(a)) and np.all(ab >= np.asarray(b))  # monotone
+    np.testing.assert_array_equal(
+        np.asarray(hll.merge(jnp.asarray(ab), a)), ab)          # idempotent
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=100),
+       st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=100),
+       st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=100))
+def test_merge_associative(xs, ys, zs):
+    cfg = HLLConfig(p=6)
+    s = [hll.insert(hll.empty(cfg), jnp.asarray(k, jnp.uint32), cfg)
+         for k in (xs, ys, zs)]
+    left = hll.merge(hll.merge(s[0], s[1]), s[2])
+    right = hll.merge(s[0], hll.merge(s[1], s[2]))
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(right))
+
+
+def test_empty_sketch_estimates_zero():
+    cfg = HLLConfig(p=8)
+    est = float(hll.estimate(hll.empty(cfg), cfg))
+    assert est == 0.0  # linear counting with z == r gives r*ln(1) = 0
+
+
+def test_table_layout_and_degree_estimates():
+    cfg = HLLConfig(p=8)
+    table = hll.empty_table(10, cfg)
+    rows = jnp.asarray([3] * 500 + [7] * 100, jnp.int32)
+    keys = _keys(0, 600)
+    table = hll.insert_table(table, rows, keys, cfg)
+    est = np.asarray(hll.degree_estimates(table, cfg))
+    assert abs(est[3] - 500) / 500 < 0.25
+    assert abs(est[7] - 100) / 100 < 0.25
+    assert est[0] == 0.0

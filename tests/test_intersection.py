@@ -1,0 +1,93 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hll, intersection
+from repro.core.hll import HLLConfig
+
+
+def _make_pair(na, nb, nx, seed, cfg):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 2 ** 30, size=na + nb + nx).astype(np.uint32)
+    A = np.concatenate([base[:na], base[na + nb:]])
+    B = base[na:]
+    ra = hll.insert(hll.empty(cfg), jnp.asarray(A), cfg)
+    rb = hll.insert(hll.empty(cfg), jnp.asarray(B), cfg)
+    return ra, rb
+
+
+@pytest.mark.parametrize("na,nb,nx,tol", [
+    (10_000, 10_000, 5_000, 0.15),
+    (5_000, 5_000, 2_500, 0.15),
+    (1_000, 1_000, 500, 0.20),
+])
+def test_mle_accuracy_large_relative_intersection(na, nb, nx, tol):
+    cfg = HLLConfig(p=12)
+    errs = []
+    for seed in range(3):
+        ra, rb = _make_pair(na, nb, nx, seed, cfg)
+        est = float(intersection.mle_intersection(ra[None], rb[None], cfg)[0])
+        errs.append(abs(est - nx) / nx)
+    assert np.mean(errs) < tol, errs
+
+
+def test_mle_beats_inclusion_exclusion_small_intersection():
+    """Appendix B / Fig. 8: MLE should clearly outperform IE when the
+    relative intersection is small."""
+    cfg = HLLConfig(p=12)
+    mle_err, ie_err = [], []
+    for seed in range(4):
+        ra, rb = _make_pair(10_000, 10_000, 500, seed, cfg)
+        mle = float(intersection.mle_intersection(ra[None], rb[None], cfg)[0])
+        ie = float(intersection.inclusion_exclusion(ra, rb, cfg))
+        mle_err.append(abs(mle - 500) / 500)
+        ie_err.append(abs(ie - 500) / 500)
+    assert np.mean(mle_err) < np.mean(ie_err)
+
+
+def test_mle_batch_matches_single():
+    cfg = HLLConfig(p=8)
+    ra1, rb1 = _make_pair(1000, 1000, 300, 0, cfg)
+    ra2, rb2 = _make_pair(2000, 500, 100, 1, cfg)
+    batch_a = jnp.stack([ra1, ra2])
+    batch_b = jnp.stack([rb1, rb2])
+    batch = intersection.mle_intersection(batch_a, batch_b, cfg)
+    single1 = intersection.mle_intersection(ra1[None], rb1[None], cfg)[0]
+    single2 = intersection.mle_intersection(ra2[None], rb2[None], cfg)[0]
+    np.testing.assert_allclose(np.asarray(batch),
+                               [float(single1), float(single2)], rtol=1e-4)
+
+
+def test_ertl_stats_partition_registers():
+    cfg = HLLConfig(p=8)
+    ra, rb = _make_pair(500, 500, 100, 0, cfg)
+    stats = np.asarray(intersection.ertl_stats(ra, rb, cfg))
+    # every register is counted exactly once across the 5 statistics:
+    # a-side: c_a_lt + c_a_gt + c_eq covers all r registers
+    assert stats[0].sum() + stats[1].sum() + stats[4].sum() == cfg.r
+    assert stats[2].sum() + stats[3].sum() + stats[4].sum() == cfg.r
+
+
+def test_domination_flags():
+    a = jnp.asarray([[3, 2, 5, 1]], jnp.uint8)
+    b = jnp.asarray([[1, 2, 4, 0]], jnp.uint8)   # dominated, not strictly
+    c = jnp.asarray([[1, 1, 4, 0]], jnp.uint8)   # strictly dominated by a
+    z = jnp.asarray([[0, 0, 0, 0]], jnp.uint8)
+    dom, strict = intersection.domination_flags(a, b)
+    assert bool(dom[0]) and not bool(strict[0])
+    dom, strict = intersection.domination_flags(a, c)
+    assert bool(dom[0]) and bool(strict[0])
+    dom, strict = intersection.domination_flags(a, z)
+    assert bool(dom[0]) and not bool(strict[0])  # all-zero B: no witness
+
+
+def test_subset_case_mle_reasonable():
+    """B ⊂ A: MLE should estimate |A∩B| ~ |B| (the identifiable optimum)."""
+    cfg = HLLConfig(p=12)
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 2 ** 30, size=20_000).astype(np.uint32)
+    B = A[:5_000]
+    ra = hll.insert(hll.empty(cfg), jnp.asarray(A), cfg)
+    rb = hll.insert(hll.empty(cfg), jnp.asarray(B), cfg)
+    est = float(intersection.mle_intersection(ra[None], rb[None], cfg)[0])
+    assert est == pytest.approx(5_000, rel=0.5)

@@ -1,0 +1,54 @@
+"""int8 KV cache (§Perf iteration A-3): accuracy + ring interaction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import transformer as tfm
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)) * 3, jnp.bfloat16)
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x, np.float32))
+    # error bounded by half a quantization step per (pos, head)
+    bound = np.asarray(s)[..., None] * 0.51 + 0.02
+    assert np.all(err <= bound)
+
+
+def _decode_logits(cfg, params, tokens):
+    cache = tfm.init_cache(cfg, 1, 16)
+    _, cache = tfm.prefill(params, cfg, tokens[:, :7], cache)
+    lg, _ = tfm.decode_step(params, cfg, tokens[:, 7:8], cache,
+                            jnp.asarray(7))
+    return lg
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "qwen2-1.5b"])
+def test_int8_cache_close_to_bf16(arch):
+    base = ARCHS[arch].reduced()
+    cfg16 = dataclasses.replace(base, kv_cache_dtype="bfloat16")
+    cfg8 = dataclasses.replace(base, kv_cache_dtype="int8")
+    params = tfm.init_params(jax.random.key(0), cfg16)
+    tokens = jax.random.randint(jax.random.key(1), (1, 8), 0, base.vocab_size)
+    lg16 = np.asarray(_decode_logits(cfg16, params, tokens))
+    lg8 = np.asarray(_decode_logits(cfg8, params, tokens))
+    # top-1 must agree; logits close in the bulk
+    assert np.argmax(lg16) == np.argmax(lg8)
+    denom = np.maximum(np.abs(lg16).max(), 1e-3)
+    assert np.max(np.abs(lg16 - lg8)) / denom < 0.08
+
+
+def test_int8_cache_shapes_in_init():
+    cfg = dataclasses.replace(ARCHS["gemma2-9b"].reduced(),
+                              kv_cache_dtype="int8")
+    cache = tfm.init_cache(cfg, 2, 32)
+    entry = cache["blocks"][0]
+    assert entry["k"].dtype == jnp.int8
+    assert entry["k_scale"].shape == entry["k"].shape[:-1]

@@ -1,0 +1,40 @@
+"""Launcher integration smokes: train.py / serve.py / examples as CLIs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(argv, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable] + argv, capture_output=True,
+                          text=True, timeout=timeout, cwd=ROOT, env=env)
+
+
+@pytest.mark.slow
+def test_train_launcher_reduced(tmp_path):
+    res = _run(["-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+                "--steps", "8", "--batch", "2", "--seq", "32",
+                "--ckpt-dir", str(tmp_path)])
+    assert res.returncode == 0, res.stderr[-800:]
+    assert "final loss" in res.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher_reduced():
+    res = _run(["-m", "repro.launch.serve", "--arch", "phi4-mini-3.8b",
+                "--batch", "2", "--prompt-len", "8", "--gen", "3"])
+    assert res.returncode == 0, res.stderr[-800:]
+    assert "generated" in res.stdout
+
+
+@pytest.mark.slow
+def test_quickstart_example():
+    res = _run(["examples/quickstart.py"])
+    assert res.returncode == 0, res.stderr[-800:]
+    assert "global triangles" in res.stdout

@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, graph_suite, timer
-from repro.core import degreesketch as dsk
+from repro import engine
 from repro.core.hll import HLLConfig
 from repro.graph import exact
 
@@ -20,18 +20,19 @@ def run(small: bool = True) -> None:
     for name, edges in suite.items():
         n = int(edges.max()) + 1
         tri = exact.exact_edge_triangles(n, edges)
-        sketch = dsk.accumulate(edges, n, cfg)
-        est, secs = timer(dsk.edge_triangle_estimates, sketch, edges,
-                          block=2048, iters=25)
+        eng = engine.build(edges, n, cfg, backend="local")
+        # one ranked top-k' query covers the whole k' sweep (k'_max = 2k)
+        k_query = min(200, len(edges))
+        (_, _, ranked), secs = timer(
+            lambda: eng.triangle_heavy_hitters(k=k_query, iters=25))
         order_true = np.argsort(-tri, kind="stable")
-        order_est = np.argsort(-est, kind="stable")
         for k in (10, 100):
             if k > len(edges):
                 continue
             true_top = set(map(tuple, edges[order_true[:k]]))
             for frac in (0.2, 0.5, 1.0, 1.5, 2.0):
-                kp = max(int(k * frac), 1)
-                est_top = set(map(tuple, edges[order_est[:kp]]))
+                kp = max(min(int(k * frac), k_query), 1)
+                est_top = set(map(tuple, ranked[:kp]))
                 tp = len(true_top & est_top)
                 prec = tp / kp
                 rec = tp / k

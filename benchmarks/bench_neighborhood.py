@@ -9,7 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, graph_suite, timer
-from repro.core import degreesketch as dsk, hll
+from repro import engine
+from repro.core import hll
 from repro.core.hll import HLLConfig
 from repro.graph import exact
 
@@ -20,11 +21,8 @@ def run(small: bool = True) -> None:
     for name, edges in graph_suite(small).items():
         n = int(edges.max()) + 1
         truth = exact.neighborhood_truth(n, edges, t_max)
-
-        def compute():
-            return dsk.neighborhood_estimates(edges, n, cfg, t_max)
-
-        (local, glob, _), secs = timer(compute)
+        eng = engine.build(edges, n, cfg, backend="local")
+        (local, glob), secs = timer(lambda: eng.neighborhood(t_max))
         for t in range(t_max):
             tv = truth[t].astype(float)
             m = tv > 0

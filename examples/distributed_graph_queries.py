@@ -1,5 +1,7 @@
-"""Distributed DegreeSketch on 8 simulated devices: ring-scheduled
-Algorithm 2 + distributed triangle heavy hitters (Algorithms 4/5).
+"""Sharded SketchEngine on 8 simulated devices: ring-scheduled Algorithm 2
+plus distributed triangle heavy hitters (Algorithms 4/5), all behind the
+backend-agnostic ``repro.engine`` API — the engine owns the mesh, axis and
+routing plan internally.
 
     PYTHONPATH=src python examples/distributed_graph_queries.py
 """
@@ -7,13 +9,14 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
+import tempfile
 import time
 
 import jax
 import numpy as np
 
+from repro import engine
 from repro.core.hll import HLLConfig
-from repro.distributed import sketch_dist as sd
 from repro.graph import exact, generators as gen
 
 
@@ -25,19 +28,14 @@ def main() -> None:
     print(f"kronecker wheel16⊗wheel16: n={n} m={len(edges)} "
           f"T={tri_truth.sum()//3}")
 
-    cfg = HLLConfig(p=10)
-    mesh = jax.make_mesh((8,), ("data",))
-    plan = sd.build_plan(edges, n, 8)
-
     t0 = time.time()
-    regs = sd.dist_accumulate(mesh, "data", plan, cfg)
-    jax.block_until_ready(regs)
-    print(f"accumulate (8 shards): {time.time()-t0:.2f}s")
+    eng = engine.build(edges, n, HLLConfig(p=10), backend="sharded", shards=8)
+    jax.block_until_ready(eng.regs)
+    print(f"build (plan + accumulate, 8 shards): {time.time()-t0:.2f}s")
 
     # Algorithm 2 with the ring schedule (collective_permute pipeline)
     t0 = time.time()
-    local, glob, _ = sd.dist_neighborhood(mesh, "data", plan, cfg, t_max=3,
-                                          schedule="ring")
+    local, _ = eng.neighborhood(t_max=3, schedule="ring")
     truth = exact.neighborhood_truth(n, edges, 3)
     print(f"neighborhood t<=3 (ring schedule): {time.time()-t0:.2f}s")
     for t in range(3):
@@ -50,14 +48,20 @@ def main() -> None:
     # "even a perfect heavy hitter extraction procedure will fail"), so we
     # score against the tied class: any returned edge whose true count
     # reaches the 10th-largest value is a hit.
-    tot, vals, ids = sd.dist_triangle_heavy_hitters(
-        mesh, "data", plan, cfg, regs, k=10, mode="edge")
+    tot, vals, ids = eng.triangle_heavy_hitters(k=10, mode="edge")
     thresh = np.sort(tri_truth)[-10]
     tri_lookup = {tuple(e): t for e, t in zip(map(tuple, edges), tri_truth)}
     hits = sum(tri_lookup.get(tuple(e), 0) >= thresh for e in ids)
     print(f"edge HH: global T̃={tot:.0f} (true {tri_truth.sum()//3}), "
           f"top-10 tied-class recall={hits/10:.1f} "
           f"(threshold T={thresh}, {int((tri_truth >= thresh).sum())} edges tie)")
+
+    # persistence: reload the sharded sketch and re-answer a query
+    with tempfile.TemporaryDirectory() as ckpt:
+        eng.save(ckpt)
+        eng2 = engine.load(ckpt)    # restores mesh, plan and registers
+        same = np.array_equal(eng2.degrees(), eng.degrees())
+        print(f"save -> load (sharded): degree answers bit-identical: {same}")
 
 
 if __name__ == "__main__":

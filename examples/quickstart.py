@@ -1,10 +1,16 @@
-"""Quickstart: build a DegreeSketch and query it.
+"""Quickstart: build a persistent SketchEngine and query it.
+
+One pass over the edge stream (Algorithm 1) leaves behind a query engine
+that answers degree, union, neighborhood and triangle queries — and
+survives process restart via save/load (DESIGN.md §3).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import numpy as np
 
-from repro.core import degreesketch as dsk
+from repro import engine
 from repro.core.hll import HLLConfig
 from repro.graph import exact, generators as gen
 
@@ -16,28 +22,31 @@ def main() -> None:
     print(f"graph: n={n} m={len(edges)}")
 
     # Algorithm 1: one pass over the edge stream -> persistent query engine
-    cfg = HLLConfig(p=8)
-    sketch = dsk.accumulate(edges, n, cfg)
+    eng = engine.build(edges, n, HLLConfig(p=8), backend="local")
 
     # degree queries (the eponymous estimate)
     deg_true = np.zeros(n)
     np.add.at(deg_true, edges[:, 0], 1)
     np.add.at(deg_true, edges[:, 1], 1)
     top = np.argsort(-deg_true)[:5]
-    est = np.asarray(sketch.degrees())
+    est = eng.degrees()
     for v in top:
         print(f"  d({v}) = {deg_true[v]:.0f}   d̃({v}) = {est[v]:.1f}")
 
     # adjacency-set union query (§6): |N(a) ∪ N(b) ∪ N(c)|
-    import jax.numpy as jnp
-    u = float(sketch.union_size(jnp.asarray(top[:3])))
+    u = eng.union_size(top[:3])
     adj = exact.adjacency_lists(n, edges)
     true_u = len(set(np.concatenate([adj[x] for x in top[:3]]).tolist()))
     print(f"union of top-3 hubs' neighborhoods: true={true_u} est={u:.0f}")
 
+    # batched intersection query: T̃(xy) for the first few edges
+    t_xy = eng.intersection_size(edges[:4])
+    tri = exact.exact_edge_triangles(n, edges)
+    for (a, b), t_est, t_true in zip(edges[:4], t_xy, tri[:4]):
+        print(f"  T({a},{b}) = {t_true}   T̃ = {t_est:.1f}")
+
     # Algorithm 2: 3-hop neighborhood sizes
-    local, glob, _ = dsk.neighborhood_estimates(edges, n, cfg, t_max=3,
-                                                sketch=sketch)
+    local, glob = eng.neighborhood(t_max=3)
     truth = exact.neighborhood_truth(n, edges, 3)
     for t in range(3):
         tv = truth[t].astype(float)
@@ -47,8 +56,7 @@ def main() -> None:
               f"(true {tv.sum():.0f}), per-vertex MRE={mre:.3f}")
 
     # Algorithm 4: edge-local triangle heavy hitters
-    total, vals, top_edges = dsk.triangle_heavy_hitters(sketch, edges, k=5)
-    tri = exact.exact_edge_triangles(n, edges)
+    total, vals, top_edges = eng.triangle_heavy_hitters(k=5)
     print(f"global triangles: true={exact.exact_global_triangles(n, edges, tri)}"
           f" est={total:.0f}")
     print("top-5 edges by estimated triangle count:")
@@ -56,6 +64,13 @@ def main() -> None:
     for val, (u_, v_) in zip(vals, top_edges):
         mark = "*" if (u_, v_) in true_top else " "
         print(f"  {mark} ({u_},{v_}): T̃={val:.1f}")
+
+    # persistence: the accumulated sketch survives process restart
+    with tempfile.TemporaryDirectory() as ckpt:
+        eng.save(ckpt)
+        eng2 = engine.load(ckpt)
+        same = np.array_equal(eng2.degrees(), est)
+        print(f"save -> load: degree answers bit-identical: {same}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+    save_checkpoint, restore_checkpoint, read_manifest, latest_step,
+    AsyncCheckpointer,
 )

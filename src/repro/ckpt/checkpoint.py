@@ -27,8 +27,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "read_manifest",
+           "latest_step", "AsyncCheckpointer"]
 
 # numpy can't serialize ml_dtypes (bfloat16 etc.); store them as a raw
 # uint16/uint8 view and record the logical dtype in the manifest
@@ -47,8 +47,13 @@ def _leaf_key(path) -> str:
     return ".".join(parts)
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
-    """Atomically write ``tree`` as step_<step>. Returns the final path."""
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Atomically write ``tree`` as step_<step>. Returns the final path.
+
+    ``extra`` is an optional JSON-serializable dict stored verbatim in the
+    manifest — consumers (e.g. ``repro.engine``) use it to persist config
+    that is not an array leaf (HLLConfig fields, backend, plan metadata).
+    """
     final = os.path.join(ckpt_dir, f"step_{step}")
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step}")
     if os.path.exists(tmp):
@@ -56,6 +61,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     os.makedirs(tmp, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {"step": step, "leaves": {}}
+    if extra is not None:
+        manifest["extra"] = extra
     for path, leaf in leaves:
         key = _leaf_key(path)
         arr = np.asarray(leaf)
@@ -71,6 +78,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """Read the manifest of step_<step> (tree structure + ``extra`` dict)."""
+    with open(os.path.join(ckpt_dir, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str) -> int | None:

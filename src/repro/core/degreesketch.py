@@ -8,6 +8,10 @@ these — the single-device path IS the semantics; distribution only changes
 the schedule (DESIGN.md §2).
 
 Layout: ``regs: uint8[n_pad, r]`` — one HLL row per vertex.
+
+This module is the *reference semantics*; the public, persistent,
+batched query surface (both backends, save/load) is
+``repro.engine.SketchEngine`` (DESIGN.md §3).
 """
 from __future__ import annotations
 

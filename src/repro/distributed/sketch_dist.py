@@ -19,10 +19,19 @@ Two schedules for Algorithm 2's SKETCH messages:
   analogue of YGM's comm/compute overlap).
 
 Both produce bit-identical register tables (tested).
+
+.. deprecated::
+    The free-function query drivers (:func:`dist_neighborhood`,
+    :func:`dist_triangle_heavy_hitters`) are deprecation shims; the public
+    query surface is ``repro.engine.SketchEngine`` (DESIGN.md §3), which
+    owns the Mesh/axis/plan and caches jitted query plans. The primitives
+    (:func:`build_plan`, :func:`dist_accumulate`, the propagate schedules)
+    remain the supported SPMD building blocks the engine composes.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -32,11 +41,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hll, intersection
 from repro.core.hll import HLLConfig
+from repro.kernels import ops
 
 __all__ = [
     "DistPlan", "build_plan", "dist_accumulate", "dist_propagate_allgather",
     "dist_propagate_ring", "dist_neighborhood", "dist_triangle_heavy_hitters",
 ]
+
+
+def _shard_map(body, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map across jax versions (experimental.shard_map pre-0.6,
+    where ``check_vma`` was called ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=check_vma)
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -150,17 +171,25 @@ def _shard_spec(mesh: Mesh, axis: str, *rest) -> NamedSharding:
     return NamedSharding(mesh, P(axis, *rest))
 
 
-def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig) -> jax.Array:
-    """Algorithm 1, distributed: returns regs uint8[n_pad, r] sharded on axis."""
+def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
+                    impl: str = "ref") -> jax.Array:
+    """Algorithm 1, distributed: returns regs uint8[n_pad, r] sharded on axis.
+
+    ``impl`` selects the per-shard insert kernel via ``kernels.ops``
+    ("ref" = jnp scatter-max oracle, "pallas" = the TPU kernel).
+    """
 
     def body(dst_local, key, mask):
         regs_local = hll.empty_table(plan.v_loc, cfg)
-        return hll.insert_table(regs_local, dst_local[0], key[0], cfg, mask=mask[0])
+        return ops.accumulate(regs_local, dst_local[0], key[0], cfg,
+                              mask=mask[0], impl=impl)
 
-    f = jax.shard_map(
+    # pallas_call has no replication rule; the body is purely per-shard
+    # anyway, so the check adds nothing here.
+    f = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None)),
-        out_specs=P(axis, None))
+        out_specs=P(axis, None), check_vma=(impl != "pallas"))
     return jax.jit(f)(
         jax.device_put(plan.acc_dst_local, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.acc_key, _shard_spec(mesh, axis, None)),
@@ -176,7 +205,7 @@ def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
         gathered = jnp.where(mask[0][:, None], full[src[0]], jnp.uint8(0))
         return regs_local.at[dst_local[0]].max(gathered)
 
-    f = jax.shard_map(
+    f = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
         out_specs=P(axis, None))
@@ -215,7 +244,7 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
         _, out = jax.lax.fori_loop(0, num, step, (regs_local, regs_local))
         return out
 
-    f = jax.shard_map(
+    f = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None, None), P(axis, None, None),
                   P(axis, None, None)),
@@ -230,7 +259,16 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
 def dist_neighborhood(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
                       t_max: int, schedule: str = "ring",
                       ) -> tuple[np.ndarray, np.ndarray, jax.Array]:
-    """Algorithm 2, distributed driver. Returns (Ñ(x,t), Ñ(t), final regs)."""
+    """Algorithm 2, distributed driver. Returns (Ñ(x,t), Ñ(t), final regs).
+
+    .. deprecated:: use ``repro.engine.build(..., backend="sharded")`` and
+       ``SketchEngine.neighborhood`` — the engine reuses its accumulated
+       registers instead of re-running Algorithm 1 on every call.
+    """
+    warnings.warn(
+        "dist_neighborhood is deprecated; use repro.engine.build(..., "
+        "backend='sharded').neighborhood(t_max, schedule=...) instead",
+        DeprecationWarning, stacklevel=2)
     regs = dist_accumulate(mesh, axis, plan, cfg)
     prop = dist_propagate_ring if schedule == "ring" else dist_propagate_allgather
 
@@ -238,7 +276,7 @@ def dist_neighborhood(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
         def body(regs_local):
             est = hll.estimate(regs_local, cfg)
             return est, jax.lax.psum(jnp.sum(est), axis)
-        f = jax.shard_map(body, mesh=mesh, in_specs=(P(axis, None),),
+        f = _shard_map(body, mesh=mesh, in_specs=(P(axis, None),),
                           out_specs=(P(axis), P()))
         return jax.jit(f)(regs)
 
@@ -257,16 +295,16 @@ def dist_neighborhood(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
     return local, glob, regs
 
 
-def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
-                                cfg: HLLConfig, regs: jax.Array, k: int,
-                                iters: int = 30, mode: str = "edge",
-                                ) -> tuple[float, np.ndarray, np.ndarray]:
-    """Algorithms 3-5, distributed. mode='edge' (Alg 4) or 'vertex' (Alg 5).
+def _triangle_heavy_hitters_impl(mesh: Mesh, axis: str, plan: DistPlan,
+                                 cfg: HLLConfig, regs: jax.Array, k: int,
+                                 iters: int = 30, mode: str = "edge",
+                                 ) -> tuple[float, np.ndarray, np.ndarray]:
+    """Algorithms 3-5, distributed (engine-facing implementation).
 
-    Returns (T̃ global, top-k values, top-k ids) where ids are edge pairs
-    (mode='edge') or vertex ids (mode='vertex').
+    Candidate ids travel through the top-k all_gather as int32 alongside the
+    float32 values — packing ids into float32 lanes silently corrupts vertex
+    ids above 2^24 (the float32 integer-exactness limit).
     """
-    num = plan.num_shards
 
     def body(regs_local, u, v, mask):
         full = jax.lax.all_gather(regs_local, axis, tiled=True)
@@ -278,11 +316,11 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
         if mode == "edge":
             kk = min(k, est.shape[0])
             vals, idx = jax.lax.top_k(est, kk)
-            cand = jnp.stack([vals, u[0][idx].astype(jnp.float32),
-                              v[0][idx].astype(jnp.float32)], axis=-1)
-            allc = jax.lax.all_gather(cand, axis, tiled=True)  # (S*kk, 3)
-            gvals, gidx = jax.lax.top_k(allc[:, 0], min(k, allc.shape[0]))
-            return total, gvals, allc[gidx, 1:]
+            ids = jnp.stack([u[0][idx], v[0][idx]], axis=-1)  # int32 (kk, 2)
+            allv = jax.lax.all_gather(vals, axis, tiled=True)  # (S*kk,)
+            alli = jax.lax.all_gather(ids, axis, tiled=True)   # (S*kk, 2)
+            gvals, gidx = jax.lax.top_k(allv, min(k, allv.shape[0]))
+            return total, gvals, alli[gidx]
         # vertex mode: EST messages -> scatter-add both endpoints, then
         # reduce_scatter back to owner shards (psum_scatter).
         acc = jnp.zeros((plan.n_pad,), jnp.float32)
@@ -291,13 +329,13 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
                                          tiled=True) / 2.0
         kk = min(k, acc_local.shape[0])
         vals, idx = jax.lax.top_k(acc_local, kk)
-        vid = idx + jax.lax.axis_index(axis) * plan.v_loc
-        cand = jnp.stack([vals, vid.astype(jnp.float32)], axis=-1)
-        allc = jax.lax.all_gather(cand, axis, tiled=True)
-        gvals, gidx = jax.lax.top_k(allc[:, 0], min(k, allc.shape[0]))
-        return total, gvals, allc[gidx, 1]
+        vid = idx + jax.lax.axis_index(axis) * plan.v_loc  # int32 (kk,)
+        allv = jax.lax.all_gather(vals, axis, tiled=True)
+        alli = jax.lax.all_gather(vid, axis, tiled=True)
+        gvals, gidx = jax.lax.top_k(allv, min(k, allv.shape[0]))
+        return total, gvals, alli[gidx]
 
-    f = jax.shard_map(
+    f = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
         out_specs=(P(), P(), P()), check_vma=False)
@@ -306,6 +344,24 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
         jax.device_put(plan.tri_u, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.tri_v, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.tri_mask, _shard_spec(mesh, axis, None)))
-    if mode == "edge":
-        return float(total), np.asarray(vals), np.asarray(ids).astype(np.int64)
     return float(total), np.asarray(vals), np.asarray(ids).astype(np.int64)
+
+
+def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
+                                cfg: HLLConfig, regs: jax.Array, k: int,
+                                iters: int = 30, mode: str = "edge",
+                                ) -> tuple[float, np.ndarray, np.ndarray]:
+    """Algorithms 3-5, distributed. mode='edge' (Alg 4) or 'vertex' (Alg 5).
+
+    Returns (T̃ global, top-k values, top-k ids) where ids are edge pairs
+    (mode='edge') or vertex ids (mode='vertex').
+
+    .. deprecated:: use ``repro.engine.build(..., backend="sharded")`` and
+       ``SketchEngine.triangle_heavy_hitters(k, mode=...)`` instead.
+    """
+    warnings.warn(
+        "dist_triangle_heavy_hitters is deprecated; use repro.engine.build("
+        "..., backend='sharded').triangle_heavy_hitters(k, mode=...) instead",
+        DeprecationWarning, stacklevel=2)
+    return _triangle_heavy_hitters_impl(mesh, axis, plan, cfg, regs, k,
+                                        iters=iters, mode=mode)

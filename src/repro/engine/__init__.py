@@ -1,0 +1,108 @@
+"""Public sketch query API: build / load a persistent ``SketchEngine``.
+
+    from repro import engine
+
+    eng = engine.build(edges, n, HLLConfig(p=10), backend="sharded",
+                       shards=8, impl="ref")
+    deg = eng.degrees()
+    u   = eng.union_size([hubs, [0, 1], [42]])        # batched, ragged
+    t   = eng.intersection_size(edge_pairs)           # batched T̃(xy)
+    loc, glob = eng.neighborhood(t_max=3, schedule="ring")
+    tot, vals, ids = eng.triangle_heavy_hitters(k=10, mode="edge")
+
+    eng.save("/ckpt/web-graph")        # survives process restart
+    eng2 = engine.load("/ckpt/web-graph")   # identical answers
+
+See DESIGN.md §3. The legacy free-function drivers in
+``repro.distributed.sketch_dist`` and the ``DegreeSketch`` dataclass
+methods remain as the reference semantics the engine is tested against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hll import HLLConfig
+from repro.engine.base import ENGINE_FORMAT, SketchEngine
+from repro.engine.local import LocalEngine
+from repro.engine.sharded import ShardedEngine
+
+__all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "build", "load"]
+
+_BACKENDS = {"local": LocalEngine, "sharded": ShardedEngine}
+
+
+def build(edges: np.ndarray, n: int | None = None,
+          cfg: HLLConfig | None = None, *, backend: str = "local",
+          shards: int | None = None, impl: str = "ref",
+          **kw) -> SketchEngine:
+    """Accumulate a DegreeSketch (Algorithm 1) and return a query engine.
+
+    Args:
+      edges: undirected edge list int[m, 2].
+      n: vertex count (default: ``edges.max() + 1``).
+      cfg: HLL configuration (default: ``HLLConfig()``).
+      backend: "local" (single device) or "sharded" (SPMD over a mesh the
+        engine owns; ``shards`` defaults to the visible device count).
+      impl: kernel implementation threaded through ``repro.kernels.ops``
+        ("ref" jnp oracles, "pallas" the TPU kernels).
+    """
+    edges = np.asarray(edges)
+    if n is None:
+        n = int(edges.max()) + 1 if len(edges) else 1
+    cfg = cfg or HLLConfig()
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
+                         f"got {backend!r}")
+    if impl not in ("ref", "pallas"):
+        # fail before the accumulation pass, not after it
+        raise ValueError(f"impl must be 'ref' or 'pallas', got {impl!r}")
+    if backend == "sharded":
+        return ShardedEngine.build(edges, n, cfg, shards=shards, impl=impl,
+                                   **kw)
+    if shards is not None:
+        raise ValueError("shards= only applies to backend='sharded'")
+    return LocalEngine.build(edges, n, cfg, impl=impl, **kw)
+
+
+def load(path: str, *, backend: str | None = None, shards: int | None = None,
+         impl: str | None = None, step: int | None = None) -> SketchEngine:
+    """Restore a saved engine; queries answer identically to pre-save.
+
+    ``backend`` / ``shards`` / ``impl`` default to the values recorded at
+    save time but may be overridden — the register rows are canonical, so
+    a locally-built sketch can be re-hosted sharded and vice versa.
+    """
+    from repro.ckpt.checkpoint import (latest_step, read_manifest,
+                                       restore_checkpoint)
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint steps under {path!r}")
+    manifest = read_manifest(path, step)
+    extra = manifest.get("extra") or {}
+    if extra.get("format") != ENGINE_FORMAT:
+        raise ValueError(
+            f"{path!r} step {step} is not a sketch-engine checkpoint "
+            f"(format={extra.get('format')!r})")
+    leaves = manifest["leaves"]
+    like = {k: np.zeros(v["shape"], dtype=v["dtype"])
+            for k, v in leaves.items()}
+    tree = restore_checkpoint(path, step, like)
+    regs = np.asarray(tree["regs"], dtype=np.uint8)
+    edges = (np.asarray(tree["edges"], dtype=np.int32)
+             if "edges" in tree else None)
+    cfg = HLLConfig(**extra["cfg"])
+    n = int(extra["n"])
+    backend = backend or extra["backend"]
+    impl = impl or extra.get("impl", "ref")
+    if backend == "local":
+        return LocalEngine.from_regs(regs, n, cfg, edges=edges, impl=impl)
+    if backend == "sharded":
+        if edges is None:
+            raise ValueError("sharded restore needs the edge list in the "
+                             "checkpoint (routing plan is rebuilt from it)")
+        return ShardedEngine.from_regs(
+            regs, n, cfg, edges=edges,
+            shards=shards or extra.get("shards"), impl=impl)
+    raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
+                     f"got {backend!r}")

@@ -1,0 +1,275 @@
+"""SketchEngine: the persistent, backend-agnostic sketch query surface.
+
+The paper's lifecycle is *accumulate once, then serve queries* ("DegreeSketch
+behaves as a persistent query engine", §1). This module is that surface
+(DESIGN.md §3): an engine owns an accumulated register table plus whatever
+backend machinery built it (nothing for ``LocalEngine``; the Mesh/axis/
+``DistPlan`` for ``ShardedEngine``) and answers every graph query the paper
+defines through one typed, batched API:
+
+* ``degrees()``                        — d̃(x) for all x (Algorithm 1 output)
+* ``union_size(vertex_sets)``          — batched |∪ N(x)| (§6)
+* ``intersection_size(pairs)``         — batched |N(x) ∩ N(y)| (Eq. 10)
+* ``neighborhood(t_max, schedule=...)``— Algorithm 2
+* ``triangle_heavy_hitters(k, mode=)`` — Algorithms 4/5
+
+Query plans are jitted once per *shape bucket* and cached on the engine:
+batch dimensions are padded up to the next power of two, so repeated
+queries with jittering batch sizes reuse a handful of compiled programs
+instead of retracing per call. Kernel impl selection (``"ref"`` |
+``"pallas"``) threads through ``repro.kernels.ops`` for both backends.
+
+Persistence: ``save(path)`` writes the register table + ``HLLConfig`` +
+plan metadata through ``repro.ckpt.checkpoint``; ``repro.engine.load``
+rebuilds an equivalent engine in a fresh process (DESIGN.md §3, §8).
+"""
+from __future__ import annotations
+
+import abc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll, intersection
+from repro.core.hll import HLLConfig
+from repro.kernels import ops
+
+__all__ = ["SketchEngine", "bucket"]
+
+ENGINE_FORMAT = "degreesketch-engine-v1"
+
+
+def bucket(size: int, minimum: int = 8) -> int:
+    """Next power-of-two shape bucket (>= minimum) for plan caching."""
+    return max(minimum, 1 << max(int(size) - 1, 0).bit_length())
+
+
+def _normalize_sets(vertex_sets) -> tuple[np.ndarray, np.ndarray, int, bool]:
+    """Normalize union-query input to bucketed (ids, mask, n_real, scalar).
+
+    Accepts a single 1-D array of vertex ids (one set -> scalar result), a
+    list/tuple of 1-D arrays (ragged batch), or a 2-D array (rectangular
+    batch). Padding slots are masked out, never merged.
+    """
+    if isinstance(vertex_sets, (list, tuple)):
+        sets = [np.asarray(s, dtype=np.int64).ravel() for s in vertex_sets]
+        scalar = False
+    else:
+        arr = np.asarray(vertex_sets)
+        if arr.ndim == 1:
+            sets, scalar = [arr.astype(np.int64)], True
+        elif arr.ndim == 2:
+            sets, scalar = list(arr.astype(np.int64)), False
+        else:
+            raise ValueError(f"vertex_sets must be 1-D, 2-D or a list "
+                             f"of 1-D arrays, got ndim={arr.ndim}")
+    n_real = len(sets)
+    if n_real == 0:
+        raise ValueError("union_size needs at least one vertex set")
+    longest = max(len(s) for s in sets)
+    ids = np.zeros((bucket(n_real), bucket(max(longest, 1))), np.int32)
+    mask = np.zeros(ids.shape, bool)
+    for i, s in enumerate(sets):
+        ids[i, : len(s)] = s
+        mask[i, : len(s)] = True
+    return ids, mask, n_real, scalar
+
+
+def _normalize_pairs(pairs) -> tuple[np.ndarray, np.ndarray, int, bool]:
+    """Normalize pair-query input to bucketed ((B, 2) ids, mask, n, scalar)."""
+    arr = np.asarray(pairs, dtype=np.int64)
+    scalar = arr.ndim == 1
+    if scalar:
+        arr = arr[None]
+    if arr.ndim != 2 or arr.shape[1] != 2:
+        raise ValueError(f"pairs must have shape (B, 2), got {arr.shape}")
+    n_real = arr.shape[0]
+    out = np.zeros((bucket(n_real), 2), np.int32)
+    out[:n_real] = arr
+    mask = np.zeros((out.shape[0],), bool)
+    mask[:n_real] = True
+    return out, mask, n_real, scalar
+
+
+class SketchEngine(abc.ABC):
+    """Backend-agnostic persistent query engine over an accumulated sketch.
+
+    Construct via :func:`repro.engine.build` or :func:`repro.engine.load`;
+    subclasses only provide accumulation, one propagate step, and the
+    distributed heavy-hitter path — every other query is shared here and
+    runs identically (bit-for-bit on the same register table) on both
+    backends.
+    """
+
+    backend = "abstract"
+
+    def __init__(self, regs: jax.Array, n: int, cfg: HLLConfig,
+                 edges: np.ndarray | None, impl: str = "ref"):
+        if impl not in ("ref", "pallas"):
+            raise ValueError(f"impl must be 'ref' or 'pallas', got {impl!r}")
+        self._regs = regs
+        self.n = int(n)
+        self.cfg = cfg
+        self.impl = impl
+        self._edges = (None if edges is None
+                       else np.ascontiguousarray(edges, dtype=np.int32))
+        self._plans: dict[tuple, object] = {}
+        self._prop_src_dst: tuple[jax.Array, jax.Array] | None = None
+
+    # ------------------------------------------------------------- state
+    @property
+    def n_pad(self) -> int:
+        return int(self._regs.shape[0])
+
+    @property
+    def regs(self) -> jax.Array:
+        """The accumulated register table uint8[n_pad, r] (read-only)."""
+        return self._regs
+
+    @property
+    def edges(self) -> np.ndarray | None:
+        return self._edges
+
+    def _require_edges(self, query: str) -> np.ndarray:
+        if self._edges is None:
+            raise ValueError(
+                f"{query} re-reads the edge stream, but this engine was "
+                f"built without edges (from_regs without edges=...)")
+        return self._edges
+
+    # ----------------------------------------------------- plan caching
+    def _plan(self, key: tuple, builder):
+        """Per-engine cache of jitted query plans, keyed by shape bucket."""
+        fn = self._plans.get(key)
+        if fn is None:
+            fn = self._plans[key] = builder()
+        return fn
+
+    def _estimate_rows(self, regs: jax.Array) -> jax.Array:
+        """Per-row cardinality estimates, honoring cfg.estimator and impl.
+
+        The fused s/z kernel path only implements the Flajolet combination;
+        the beta estimator falls back to the jnp reference.
+        """
+        if self.cfg.estimator == "flajolet":
+            return ops.estimate(regs, self.cfg, impl=self.impl)
+        return hll.estimate(regs, self.cfg)
+
+    # ------------------------------------------------------------ queries
+    def degrees(self) -> np.ndarray:
+        """d̃(x) for every vertex x < n (the eponymous degree query)."""
+        fn = self._plan(("degrees",),
+                        lambda: jax.jit(self._estimate_rows))
+        return np.asarray(fn(self._regs))[: self.n]
+
+    def union_size(self, vertex_sets):
+        """|∪_{x in S} N(x)| for one vertex set or a batch of sets.
+
+        Accepts a 1-D array (returns a float), a list of 1-D arrays
+        (ragged batch) or a 2-D array; batches return float arrays [B].
+        """
+        ids, mask, n_real, scalar = _normalize_sets(vertex_sets)
+        cfg = self.cfg
+
+        def build():
+            @jax.jit
+            def fn(regs, ids, mask):
+                rows = jnp.where(mask[:, :, None], regs[ids], jnp.uint8(0))
+                return hll.estimate(jnp.max(rows, axis=1), cfg)
+            return fn
+
+        est = self._plan(("union", ids.shape), build)(self._regs, ids, mask)
+        out = np.asarray(est)[:n_real]
+        return float(out[0]) if scalar else out
+
+    def intersection_size(self, pairs, *, method: str = "mle",
+                          iters: int = intersection._NEWTON_ITERS):
+        """|N(x) ∩ N(y)| for one (x, y) pair or a batch (B, 2) of pairs.
+
+        ``method="mle"`` is the paper's Ertl maximum-likelihood estimator
+        (the T̃(xy) primitive, same solver default as the
+        ``DegreeSketch.intersection_size`` reference); ``method="ie"`` is
+        the inclusion-exclusion baseline (Eq. 18, can be negative).
+        """
+        if method not in ("mle", "ie"):
+            raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        ids, mask, n_real, scalar = _normalize_pairs(pairs)
+        cfg = self.cfg
+
+        def build():
+            @jax.jit
+            def fn(regs, pairs, mask):
+                a, b = regs[pairs[:, 0]], regs[pairs[:, 1]]
+                if method == "mle":
+                    est = intersection.mle_intersection(a, b, cfg, iters)
+                else:
+                    est = intersection.inclusion_exclusion(a, b, cfg)
+                return jnp.where(mask, est, 0.0)
+            return fn
+
+        key = ("intersection", ids.shape[0], method, iters)
+        est = self._plan(key, build)(self._regs, ids, mask)
+        out = np.asarray(est)[:n_real]
+        return float(out[0]) if scalar else out
+
+    def neighborhood(self, t_max: int, schedule: str = "auto",
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Algorithm 2: t-neighborhood sizes for t = 1..t_max.
+
+        Returns (Ñ(x,t) float64[t_max, n], Ñ(t) float64[t_max]). The
+        engine's own registers are not mutated — the accumulated t=1 table
+        stays queryable afterwards. ``schedule`` selects the distributed
+        dataflow ("ring" | "allgather"; "auto" = ring) and is ignored by
+        the local backend.
+        """
+        self._require_edges("neighborhood")
+        est_fn = self._plan(("degrees",), lambda: jax.jit(self._estimate_rows))
+        local = np.zeros((t_max, self.n), dtype=np.float64)
+        glob = np.zeros((t_max,), dtype=np.float64)
+        regs = self._regs
+        for t in range(1, t_max + 1):
+            if t > 1:
+                regs = self._propagate(regs, schedule)
+            est = np.asarray(est_fn(regs))[: self.n]
+            local[t - 1] = est
+            glob[t - 1] = est.sum()
+        return local, glob
+
+    # ----------------------------------------------------- backend hooks
+    @abc.abstractmethod
+    def _propagate(self, regs: jax.Array, schedule: str) -> jax.Array:
+        """One Algorithm 2 pass: D^t[x] = D^{t-1}[x] ∪̃ (∪̃_{xy∈E} D^{t-1}[y])."""
+
+    @abc.abstractmethod
+    def triangle_heavy_hitters(self, k: int, *, mode: str = "edge",
+                               iters: int = 30,
+                               ) -> tuple[float, np.ndarray, np.ndarray]:
+        """Algorithms 4/5: (T̃ global, top-k values, top-k edge/vertex ids)."""
+
+    # -------------------------------------------------------- persistence
+    def _save_extra(self) -> dict:
+        return {}
+
+    def save(self, path: str, step: int = 0) -> str:
+        """Persist the accumulated sketch (registers + config + metadata).
+
+        Layout is a ``repro.ckpt`` checkpoint: one .npy per leaf plus a
+        manifest whose ``extra`` dict records the HLLConfig, backend and
+        plan metadata. Only the n true vertex rows are stored — padding is
+        backend-dependent and reconstructed on load.
+        """
+        from repro.ckpt.checkpoint import save_checkpoint
+        tree = {"regs": np.asarray(self._regs)[: self.n]}
+        if self._edges is not None:
+            tree["edges"] = self._edges
+        extra = {
+            "format": ENGINE_FORMAT,
+            "backend": self.backend,
+            "n": self.n,
+            "impl": self.impl,
+            "cfg": {"p": self.cfg.p, "seed": self.cfg.seed,
+                    "estimator": self.cfg.estimator},
+        }
+        extra.update(self._save_extra())
+        return save_checkpoint(path, step, tree, extra=extra)

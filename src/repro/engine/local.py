@@ -1,0 +1,93 @@
+"""LocalEngine: single-device backend wrapping the core reference path.
+
+Accumulation and propagation go through ``repro.kernels.ops`` so the
+``impl`` selection ("ref" jnp oracles vs "pallas" kernels) applies to the
+hot paths; triangle queries reuse the ``core.degreesketch`` reference
+implementations (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import degreesketch as dsk, hll
+from repro.core.hll import HLLConfig
+from repro.engine.base import SketchEngine
+from repro.kernels import ops
+
+__all__ = ["LocalEngine"]
+
+
+class LocalEngine(SketchEngine):
+    """Single-device engine: register table uint8[n_pad, r] on one device."""
+
+    backend = "local"
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
+              impl: str = "ref", block: int = 1 << 15) -> "LocalEngine":
+        """Algorithm 1: one blocked pass over the edge stream."""
+        edges = np.ascontiguousarray(edges, dtype=np.int32)
+        n_pad = dsk.pad_vertices(n, 8)
+        regs = hll.empty_table(n_pad, cfg)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def acc_block(regs, rows, keys, mask):
+            return ops.accumulate(regs, rows, keys, cfg, mask=mask, impl=impl)
+
+        directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        for s in range(0, len(directed), block):
+            chunk = directed[s:s + block]
+            kpad = block - len(chunk)
+            if kpad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((kpad, 2), chunk.dtype)])
+            mask = np.arange(block) < (block - kpad)
+            regs = acc_block(
+                regs, jnp.asarray(chunk[:, 0].astype(np.int32)),
+                jnp.asarray(chunk[:, 1].astype(np.uint32)),
+                jnp.asarray(mask))
+        return cls(regs, n, cfg, edges, impl=impl)
+
+    @classmethod
+    def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
+                  edges: np.ndarray | None = None,
+                  impl: str = "ref") -> "LocalEngine":
+        """Wrap an existing register table uint8[>=n, r] as a query engine.
+
+        Used by loaders and by workloads that build sketches directly via
+        ``repro.core.hll`` (edge-free engines answer degrees/union/
+        intersection; neighborhood/triangles need ``edges``).
+        """
+        regs = jnp.asarray(regs, dtype=jnp.uint8)
+        n_pad = dsk.pad_vertices(max(n, regs.shape[0]), 8)
+        if regs.shape[0] < n_pad:
+            regs = jnp.concatenate(
+                [regs, jnp.zeros((n_pad - regs.shape[0], regs.shape[1]),
+                                 jnp.uint8)])
+        return cls(regs, n, cfg, edges, impl=impl)
+
+    # ------------------------------------------------------ backend hooks
+    def _propagate(self, regs, schedule):
+        if self._prop_src_dst is None:
+            e = self._require_edges("neighborhood")
+            src = jnp.asarray(np.concatenate([e[:, 0], e[:, 1]]))
+            dst = jnp.asarray(np.concatenate([e[:, 1], e[:, 0]]))
+            self._prop_src_dst = (src, dst)
+        src, dst = self._prop_src_dst
+        fn = self._plan(("propagate",), lambda: jax.jit(
+            lambda r, s, d: ops.propagate(r, s, d, impl=self.impl)))
+        return fn(regs, src, dst)
+
+    def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
+        edges = self._require_edges("triangle_heavy_hitters")
+        sketch = dsk.DegreeSketch(regs=self._regs, n=self.n, cfg=self.cfg)
+        if mode == "edge":
+            return dsk.triangle_heavy_hitters(sketch, edges, k, iters=iters)
+        if mode == "vertex":
+            return dsk.vertex_heavy_hitters(sketch, edges, k, iters=iters)
+        raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")

@@ -1,0 +1,102 @@
+"""ShardedEngine: SPMD backend wrapping ``repro.distributed.sketch_dist``.
+
+The engine owns the Mesh, axis name and host-side ``DistPlan`` — callers
+never thread ``(mesh, axis, plan, cfg, regs, ...)`` through free functions.
+The register table lives sharded over the mesh axis (block vertex
+partition f); shared queries (degrees, union, intersection) run on the
+global sharded array under jit, while propagation and heavy hitters use
+the shard_map schedules (DESIGN.md §2, §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.hll import HLLConfig
+from repro.distributed import sketch_dist as sd
+from repro.engine.base import SketchEngine
+
+__all__ = ["ShardedEngine"]
+
+_AXIS = "sketch"
+
+
+class ShardedEngine(SketchEngine):
+    """Mesh-sharded engine: registers uint8[n_pad, r] block-sharded on axis 0."""
+
+    backend = "sharded"
+
+    def __init__(self, regs, n, cfg, edges, impl, *, mesh, plan):
+        super().__init__(regs, n, cfg, edges, impl=impl)
+        self.mesh = mesh
+        self.axis = _AXIS
+        self.plan = plan
+        self.shards = plan.num_shards
+
+    # ------------------------------------------------------ construction
+    @staticmethod
+    def _make_mesh(shards: int):
+        if shards > jax.device_count():
+            raise ValueError(
+                f"shards={shards} exceeds visible devices "
+                f"({jax.device_count()}); set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=... before "
+                f"importing jax, or lower shards")
+        return jax.make_mesh((shards,), (_AXIS,))
+
+    @classmethod
+    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
+              shards: int | None = None, impl: str = "ref") -> "ShardedEngine":
+        """Algorithm 1, distributed: route edges to owner shards, scatter-max."""
+        edges = np.ascontiguousarray(edges, dtype=np.int32)
+        shards = shards or jax.device_count()
+        mesh = cls._make_mesh(shards)
+        plan = sd.build_plan(edges, n, shards)
+        regs = sd.dist_accumulate(mesh, _AXIS, plan, cfg, impl=impl)
+        return cls(regs, n, cfg, edges, impl, mesh=mesh, plan=plan)
+
+    @classmethod
+    def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
+                  edges: np.ndarray, shards: int | None = None,
+                  impl: str = "ref") -> "ShardedEngine":
+        """Re-host an unsharded row table uint8[>=n, r] onto a fresh mesh.
+
+        The routing plan is rebuilt from ``edges`` (it is a pure function
+        of the edge list and shard count), and the rows are re-padded to
+        the mesh's vertex partition before device_put — so a checkpoint
+        taken at one shard count restores at any other.
+        """
+        edges = np.ascontiguousarray(edges, dtype=np.int32)
+        shards = shards or jax.device_count()
+        mesh = cls._make_mesh(shards)
+        plan = sd.build_plan(edges, n, shards)
+        rows = np.asarray(regs, dtype=np.uint8)[:n]
+        full = np.zeros((plan.n_pad, rows.shape[1]), np.uint8)
+        full[: rows.shape[0]] = rows
+        sharded = jax.device_put(full, NamedSharding(mesh, P(_AXIS, None)))
+        return cls(sharded, n, cfg, edges, impl, mesh=mesh, plan=plan)
+
+    # ------------------------------------------------------ backend hooks
+    def _propagate(self, regs, schedule):
+        if schedule in ("auto", "ring"):
+            return sd.dist_propagate_ring(self.mesh, self.axis, self.plan,
+                                          regs)
+        if schedule == "allgather":
+            return sd.dist_propagate_allgather(self.mesh, self.axis,
+                                               self.plan, regs)
+        raise ValueError(
+            f"schedule must be 'auto', 'ring' or 'allgather', got "
+            f"{schedule!r}")
+
+    def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
+        if mode not in ("edge", "vertex"):
+            raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")
+        return sd._triangle_heavy_hitters_impl(
+            self.mesh, self.axis, self.plan, self.cfg, self._regs, k,
+            iters=iters, mode=mode)
+
+    # -------------------------------------------------------- persistence
+    def _save_extra(self):
+        return {"shards": self.shards}

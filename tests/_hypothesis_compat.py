@@ -1,0 +1,24 @@
+"""Optional-hypothesis shim: without hypothesis installed, the property
+tests skip individually while the plain unit tests in the same modules
+keep running (the suite degrades instead of erroring at collection)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in so ``st.integers(...)`` in decorator lines evaluates."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="property tests need hypothesis")
+
+    def settings(*a, **k):
+        return lambda f: f

@@ -1,7 +1,8 @@
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import hll
 from repro.core.hll import HLLConfig

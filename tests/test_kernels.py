@@ -2,8 +2,9 @@
 swept over shapes and configs, plus hypothesis property tests."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.hll import HLLConfig
 from repro.kernels import ops, ref

@@ -1,8 +1,11 @@
-"""Quickstart: build a persistent SketchEngine and query it.
+"""Quickstart: stream edges into a persistent SketchEngine and query it.
 
-One pass over the edge stream (Algorithm 1) leaves behind a query engine
-that answers degree, union, neighborhood and triangle queries — and
-survives process restart via save/load (DESIGN.md §3).
+Algorithm 1 as a lifecycle: ``engine.open`` returns an empty engine,
+``ingest_stream`` folds edge blocks in as they arrive (one donated jitted
+scatter-max per block), and the engine answers degree, union, neighborhood
+and triangle queries at any point — including after a *mid-stream*
+save/load: a snapshot is a valid sketch of everything ingested so far,
+and the restored engine resumes ingestion bit-identically (DESIGN.md §3a).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,16 +16,34 @@ import numpy as np
 from repro import engine
 from repro.core.hll import HLLConfig
 from repro.graph import exact, generators as gen
+from repro.graph.stream import EdgeStream
 
 
 def main() -> None:
-    # a power-law graph (SNAP-like stand-in)
+    # a power-law graph (SNAP-like stand-in), treated as an edge stream
     edges = gen.rmat(10, 8, seed=0)
     n = int(edges.max()) + 1
-    print(f"graph: n={n} m={len(edges)}")
+    stream = EdgeStream(edges, num_substreams=2, block=4096)
+    print(f"graph: n={n} m={stream.m} "
+          f"({stream.num_substreams} substreams, block={stream.block})")
 
-    # Algorithm 1: one pass over the edge stream -> persistent query engine
-    eng = engine.build(edges, n, HLLConfig(p=8), backend="local")
+    # Algorithm 1, streamed: open an empty engine, ingest block by block,
+    # snapshotting mid-stream — then resume from the checkpoint.
+    eng = engine.open(n, HLLConfig(p=8), backend="local")
+    blocks = list(stream.all_blocks())
+    for blk in blocks[: len(blocks) // 2]:
+        eng.ingest(blk)
+    with tempfile.TemporaryDirectory() as ckpt:
+        eng.save(ckpt)                   # legal mid-stream
+        eng = engine.load(ckpt)          # fresh process would do the same
+    print(f"mid-stream snapshot at m={eng.m}; resumed from checkpoint")
+    for blk in blocks[len(blocks) // 2:]:
+        eng.ingest(blk)
+
+    # streamed accumulation is bit-identical to one-shot build
+    batch = engine.build(edges, n, HLLConfig(p=8), backend="local")
+    same = np.array_equal(np.asarray(eng.regs), np.asarray(batch.regs))
+    print(f"streamed registers == one-shot build: {same}")
 
     # degree queries (the eponymous estimate)
     deg_true = np.zeros(n)
@@ -65,12 +86,15 @@ def main() -> None:
         mark = "*" if (u_, v_) in true_top else " "
         print(f"  {mark} ({u_},{v_}): T̃={val:.1f}")
 
-    # persistence: the accumulated sketch survives process restart
-    with tempfile.TemporaryDirectory() as ckpt:
-        eng.save(ckpt)
-        eng2 = engine.load(ckpt)
-        same = np.array_equal(eng2.degrees(), est)
-        print(f"save -> load: degree answers bit-identical: {same}")
+    # merge: engines accumulated over disjoint substreams compose into one
+    parts = [engine.open(n, HLLConfig(p=8)).ingest(stream.substream(i))
+             for i in range(stream.num_substreams)]
+    merged = parts[0]
+    for p in parts[1:]:
+        merged.merge(p)
+    same = np.array_equal(np.asarray(merged.regs), np.asarray(batch.regs))
+    print(f"merge of {stream.num_substreams} substream engines == build: "
+          f"{same}")
 
 
 if __name__ == "__main__":

@@ -133,12 +133,18 @@ class AsyncCheckpointer:
             self._thread.join()
             self._thread = None
 
-    def save(self, step: int, tree) -> None:
+    def save(self, step: int, tree, extra: dict | None = None) -> None:
+        """Snapshot ``tree`` to host and write step_<step> in the background.
+
+        ``extra`` is forwarded verbatim to :func:`save_checkpoint`'s
+        manifest, closing the gap with the synchronous path (which has
+        carried ``extra`` since the engine checkpoints landed).
+        """
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
 
         def work():
-            save_checkpoint(self.ckpt_dir, step, host_tree)
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra=extra)
             self._gc()
 
         self._thread = threading.Thread(target=work, daemon=True)

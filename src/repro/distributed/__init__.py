@@ -1,5 +1,5 @@
 from repro.distributed.sketch_dist import (  # noqa: F401
     DistPlan, build_plan, dist_accumulate, dist_propagate_allgather,
-    dist_propagate_ring, dist_neighborhood, dist_triangle_heavy_hitters,
+    dist_propagate_ring, dist_triangle_heavy_hitters, vertex_partition,
 )
 from repro.distributed.topk import distributed_topk  # noqa: F401

@@ -20,19 +20,19 @@ Two schedules for Algorithm 2's SKETCH messages:
 
 Both produce bit-identical register tables (tested).
 
-.. deprecated::
-    The free-function query drivers (:func:`dist_neighborhood`,
-    :func:`dist_triangle_heavy_hitters`) are deprecation shims; the public
-    query surface is ``repro.engine.SketchEngine`` (DESIGN.md §3), which
-    owns the Mesh/axis/plan and caches jitted query plans. The primitives
-    (:func:`build_plan`, :func:`dist_accumulate`, the propagate schedules)
-    remain the supported SPMD building blocks the engine composes.
+This module holds the SPMD *primitives* (:func:`build_plan`,
+:func:`dist_accumulate`, the propagate schedules,
+:func:`dist_triangle_heavy_hitters`); the public query surface that
+composes them — and the only entry point callers should use — is
+``repro.engine.SketchEngine`` (DESIGN.md §3), which owns the
+Mesh/axis/plan and caches jitted query plans. (The PR-1 deprecation shims
+``dist_neighborhood`` / the warning wrapper around the heavy-hitter driver
+have been removed.)
 """
 from __future__ import annotations
 
 import functools
-import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +44,9 @@ from repro.core.hll import HLLConfig
 from repro.kernels import ops
 
 __all__ = [
-    "DistPlan", "build_plan", "dist_accumulate", "dist_propagate_allgather",
-    "dist_propagate_ring", "dist_neighborhood", "dist_triangle_heavy_hitters",
+    "DistPlan", "vertex_partition", "build_plan", "dist_accumulate",
+    "dist_propagate_allgather", "dist_propagate_ring",
+    "dist_triangle_heavy_hitters",
 ]
 
 
@@ -93,11 +94,22 @@ class DistPlan:
     tri_mask: np.ndarray         # bool[S, E_tri]
 
 
+def vertex_partition(n: int, num_shards: int,
+                     pad_multiple: int = 8) -> tuple[int, int]:
+    """The block vertex partition f: returns (n_pad, v_loc).
+
+    Pure function of (n, num_shards) — *not* of the edges — so a streaming
+    engine can fix its register layout at ``open`` time and a plan rebuilt
+    later from whatever edges arrived lands on the same partition.
+    """
+    n_pad = _round_up(max(n, num_shards), num_shards * pad_multiple)
+    return n_pad, n_pad // num_shards
+
+
 def build_plan(edges: np.ndarray, n: int, num_shards: int,
                pad_multiple: int = 8) -> DistPlan:
     """Route edges to owner shards (Algorithm 1 Send context, host-side)."""
-    n_pad = _round_up(max(n, num_shards), num_shards * pad_multiple)
-    v_loc = n_pad // num_shards
+    n_pad, v_loc = vertex_partition(n, num_shards, pad_multiple)
     directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
     own = directed[:, 0] // v_loc
 
@@ -256,50 +268,15 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
         jax.device_put(plan.ring_mask, _shard_spec(mesh, axis, None, None)))
 
 
-def dist_neighborhood(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
-                      t_max: int, schedule: str = "ring",
-                      ) -> tuple[np.ndarray, np.ndarray, jax.Array]:
-    """Algorithm 2, distributed driver. Returns (Ñ(x,t), Ñ(t), final regs).
+def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
+                                cfg: HLLConfig, regs: jax.Array, k: int,
+                                iters: int = 30, mode: str = "edge",
+                                ) -> tuple[float, np.ndarray, np.ndarray]:
+    """Algorithms 3-5, distributed. mode='edge' (Alg 4) or 'vertex' (Alg 5).
 
-    .. deprecated:: use ``repro.engine.build(..., backend="sharded")`` and
-       ``SketchEngine.neighborhood`` — the engine reuses its accumulated
-       registers instead of re-running Algorithm 1 on every call.
-    """
-    warnings.warn(
-        "dist_neighborhood is deprecated; use repro.engine.build(..., "
-        "backend='sharded').neighborhood(t_max, schedule=...) instead",
-        DeprecationWarning, stacklevel=2)
-    regs = dist_accumulate(mesh, axis, plan, cfg)
-    prop = dist_propagate_ring if schedule == "ring" else dist_propagate_allgather
-
-    def estimates(regs):
-        def body(regs_local):
-            est = hll.estimate(regs_local, cfg)
-            return est, jax.lax.psum(jnp.sum(est), axis)
-        f = _shard_map(body, mesh=mesh, in_specs=(P(axis, None),),
-                          out_specs=(P(axis), P()))
-        return jax.jit(f)(regs)
-
-    local = np.zeros((t_max, plan.n))
-    glob = np.zeros((t_max,))
-    est, g = estimates(regs)
-    local[0] = np.asarray(est)[: plan.n]
-    glob[0] = float(g)
-    for t in range(2, t_max + 1):
-        regs = prop(mesh, axis, plan, regs)
-        est, g = estimates(regs)
-        # REDUCE over padding rows contributes 0 (empty sketches estimate ~0
-        # via linear counting: r*ln(r/r) = 0), so psum over pads is exact.
-        local[t - 1] = np.asarray(est)[: plan.n]
-        glob[t - 1] = float(g)
-    return local, glob, regs
-
-
-def _triangle_heavy_hitters_impl(mesh: Mesh, axis: str, plan: DistPlan,
-                                 cfg: HLLConfig, regs: jax.Array, k: int,
-                                 iters: int = 30, mode: str = "edge",
-                                 ) -> tuple[float, np.ndarray, np.ndarray]:
-    """Algorithms 3-5, distributed (engine-facing implementation).
+    Returns (T̃ global, top-k values, top-k ids) where ids are edge pairs
+    (mode='edge') or vertex ids (mode='vertex'). This is the engine-facing
+    primitive behind ``ShardedEngine.triangle_heavy_hitters``.
 
     Candidate ids travel through the top-k all_gather as int32 alongside the
     float32 values — packing ids into float32 lanes silently corrupts vertex
@@ -345,23 +322,3 @@ def _triangle_heavy_hitters_impl(mesh: Mesh, axis: str, plan: DistPlan,
         jax.device_put(plan.tri_v, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.tri_mask, _shard_spec(mesh, axis, None)))
     return float(total), np.asarray(vals), np.asarray(ids).astype(np.int64)
-
-
-def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
-                                cfg: HLLConfig, regs: jax.Array, k: int,
-                                iters: int = 30, mode: str = "edge",
-                                ) -> tuple[float, np.ndarray, np.ndarray]:
-    """Algorithms 3-5, distributed. mode='edge' (Alg 4) or 'vertex' (Alg 5).
-
-    Returns (T̃ global, top-k values, top-k ids) where ids are edge pairs
-    (mode='edge') or vertex ids (mode='vertex').
-
-    .. deprecated:: use ``repro.engine.build(..., backend="sharded")`` and
-       ``SketchEngine.triangle_heavy_hitters(k, mode=...)`` instead.
-    """
-    warnings.warn(
-        "dist_triangle_heavy_hitters is deprecated; use repro.engine.build("
-        "..., backend='sharded').triangle_heavy_hitters(k, mode=...) instead",
-        DeprecationWarning, stacklevel=2)
-    return _triangle_heavy_hitters_impl(mesh, axis, plan, cfg, regs, k,
-                                        iters=iters, mode=mode)

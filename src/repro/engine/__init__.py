@@ -1,9 +1,16 @@
-"""Public sketch query API: build / load a persistent ``SketchEngine``.
+"""Public sketch query API: open / build / load a persistent ``SketchEngine``.
 
     from repro import engine
+    from repro.graph.stream import EdgeStream
+
+    eng = engine.open(n, HLLConfig(p=10), backend="sharded", shards=8)
+    eng.ingest(edge_block)                  # incremental (Algorithm 1)
+    eng.ingest_stream(EdgeStream(edges, num_substreams=4, block=4096))
+    eng.save("/ckpt/web-graph")             # legal mid-stream
+    eng.merge(other_engine)                 # lane-wise register max
 
     eng = engine.build(edges, n, HLLConfig(p=10), backend="sharded",
-                       shards=8, impl="ref")
+                       shards=8, impl="ref")     # = open + one ingest
     deg = eng.degrees()
     u   = eng.union_size([hubs, [0, 1], [42]])        # batched, ragged
     t   = eng.intersection_size(edge_pairs)           # batched T̃(xy)
@@ -11,11 +18,12 @@
     tot, vals, ids = eng.triangle_heavy_hitters(k=10, mode="edge")
 
     eng.save("/ckpt/web-graph")        # survives process restart
-    eng2 = engine.load("/ckpt/web-graph")   # identical answers
+    eng2 = engine.load("/ckpt/web-graph")   # identical answers; can ingest
 
-See DESIGN.md §3. The legacy free-function drivers in
-``repro.distributed.sketch_dist`` and the ``DegreeSketch`` dataclass
-methods remain as the reference semantics the engine is tested against.
+See DESIGN.md §3/§3a. The free-function drivers in
+``repro.distributed.sketch_dist`` are the SPMD primitives the engine
+composes; the ``DegreeSketch`` dataclass methods remain the reference
+semantics the engine is tested against.
 """
 from __future__ import annotations
 
@@ -26,16 +34,60 @@ from repro.engine.base import ENGINE_FORMAT, SketchEngine
 from repro.engine.local import LocalEngine
 from repro.engine.sharded import ShardedEngine
 
-__all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "build", "load"]
+__all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "open", "build",
+           "load"]
 
 _BACKENDS = {"local": LocalEngine, "sharded": ShardedEngine}
 
 
+def _validate(backend: str, shards, impl: str) -> None:
+    """Shared argument validation — fail before any accumulation work."""
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
+                         f"got {backend!r}")
+    if impl not in ("ref", "pallas"):
+        raise ValueError(f"impl must be 'ref' or 'pallas', got {impl!r}")
+    if backend != "sharded" and shards is not None:
+        raise ValueError("shards= only applies to backend='sharded'")
+
+
+def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
+         shards: int | None = None, impl: str = "ref") -> SketchEngine:
+    """An empty engine over vertex universe [0, n), ready to ingest.
+
+    This is the streaming entry point (Algorithm 1 as a lifecycle): the
+    returned engine accumulates incrementally via ``ingest(edge_block)`` /
+    ``ingest_stream(EdgeStream)``, answers queries at any point, persists
+    mid-stream via ``save``, and composes with independently accumulated
+    engines via ``merge``.
+
+    Args:
+      n: vertex count — the universe is fixed here; ingesting ids >= n
+        raises ``ValueError``.
+      cfg: HLL configuration (default ``HLLConfig()``). Engines that will
+        be merged must share it (same hash family).
+      backend: "local" (single device) or "sharded" (SPMD over a mesh the
+        engine owns; ``shards`` defaults to the visible device count, and
+        the vertex partition is fixed now, independent of future edges).
+      impl: kernel implementation threaded through ``repro.kernels.ops``
+        ("ref" jnp oracles, "pallas" the TPU kernels).
+    """
+    cfg = cfg or HLLConfig()
+    _validate(backend, shards, impl)
+    if backend == "sharded":
+        return ShardedEngine.open(n, cfg, shards=shards, impl=impl)
+    return LocalEngine.open(n, cfg, impl=impl)
+
+
 def build(edges: np.ndarray, n: int | None = None,
           cfg: HLLConfig | None = None, *, backend: str = "local",
-          shards: int | None = None, impl: str = "ref",
-          **kw) -> SketchEngine:
+          shards: int | None = None, impl: str = "ref") -> SketchEngine:
     """Accumulate a DegreeSketch (Algorithm 1) and return a query engine.
+
+    A thin wrapper over :func:`open` + one ``ingest(edges)`` call — batch
+    and streamed construction are the same code path, so the registers are
+    bit-identical to any block-streamed ingestion of the same edges
+    (asserted in tests/test_engine_stream.py).
 
     Args:
       edges: undirected edge list int[m, 2].
@@ -49,19 +101,8 @@ def build(edges: np.ndarray, n: int | None = None,
     edges = np.asarray(edges)
     if n is None:
         n = int(edges.max()) + 1 if len(edges) else 1
-    cfg = cfg or HLLConfig()
-    if backend not in _BACKENDS:
-        raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
-                         f"got {backend!r}")
-    if impl not in ("ref", "pallas"):
-        # fail before the accumulation pass, not after it
-        raise ValueError(f"impl must be 'ref' or 'pallas', got {impl!r}")
-    if backend == "sharded":
-        return ShardedEngine.build(edges, n, cfg, shards=shards, impl=impl,
-                                   **kw)
-    if shards is not None:
-        raise ValueError("shards= only applies to backend='sharded'")
-    return LocalEngine.build(edges, n, cfg, impl=impl, **kw)
+    return open(n, cfg, backend=backend, shards=shards,
+                impl=impl).ingest(edges)
 
 
 def load(path: str, *, backend: str | None = None, shards: int | None = None,
@@ -70,7 +111,10 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
 
     ``backend`` / ``shards`` / ``impl`` default to the values recorded at
     save time but may be overridden — the register rows are canonical, so
-    a locally-built sketch can be re-hosted sharded and vice versa.
+    a locally-built sketch can be re-hosted sharded and vice versa. A
+    checkpoint taken mid-stream restores to an engine that resumes
+    ingestion exactly where the saved one stopped (same row layout, same
+    tracked edge list).
     """
     from repro.ckpt.checkpoint import (latest_step, read_manifest,
                                        restore_checkpoint)
@@ -89,20 +133,15 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
             for k, v in leaves.items()}
     tree = restore_checkpoint(path, step, like)
     regs = np.asarray(tree["regs"], dtype=np.uint8)
-    edges = (np.asarray(tree["edges"], dtype=np.int32)
+    edges = (np.asarray(tree["edges"], dtype=np.int32).reshape(-1, 2)
              if "edges" in tree else None)
     cfg = HLLConfig(**extra["cfg"])
     n = int(extra["n"])
     backend = backend or extra["backend"]
     impl = impl or extra.get("impl", "ref")
+    _validate(backend, shards, impl)  # same contract as open()/build()
     if backend == "local":
         return LocalEngine.from_regs(regs, n, cfg, edges=edges, impl=impl)
-    if backend == "sharded":
-        if edges is None:
-            raise ValueError("sharded restore needs the edge list in the "
-                             "checkpoint (routing plan is rebuilt from it)")
-        return ShardedEngine.from_regs(
-            regs, n, cfg, edges=edges,
-            shards=shards or extra.get("shards"), impl=impl)
-    raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
-                     f"got {backend!r}")
+    return ShardedEngine.from_regs(
+        regs, n, cfg, edges=edges,
+        shards=shards or extra.get("shards"), impl=impl)

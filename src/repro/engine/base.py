@@ -1,11 +1,23 @@
 """SketchEngine: the persistent, backend-agnostic sketch query surface.
 
-The paper's lifecycle is *accumulate once, then serve queries* ("DegreeSketch
-behaves as a persistent query engine", §1). This module is that surface
-(DESIGN.md §3): an engine owns an accumulated register table plus whatever
-backend machinery built it (nothing for ``LocalEngine``; the Mesh/axis/
-``DistPlan`` for ``ShardedEngine``) and answers every graph query the paper
-defines through one typed, batched API:
+The paper's lifecycle is *accumulate in one streaming pass, then serve
+queries* ("DegreeSketch behaves as a persistent query engine", §1). This
+module is that surface (DESIGN.md §3): an engine owns an accumulated
+register table plus whatever backend machinery built it (nothing for
+``LocalEngine``; the Mesh/axis/``DistPlan`` for ``ShardedEngine``).
+
+Accumulation is *incremental* (DESIGN.md §3a): ``repro.engine.open``
+returns an empty engine, ``ingest(edge_block)`` / ``ingest_stream(stream)``
+fold edge blocks into the register panel through a donated jitted
+accumulate step (allocation-free hot path, one compile per block shape
+bucket), and ``merge(other)`` composes independently accumulated engines
+by lane-wise register max — the HLL union operator, which is what makes
+sketches order- and partition-insensitive. Batch construction
+(``repro.engine.build``) is a thin wrapper over open + ingest, so streamed
+and one-shot accumulation are the same code path and produce bit-identical
+registers.
+
+Queries answered through one typed, batched API:
 
 * ``degrees()``                        — d̃(x) for all x (Algorithm 1 output)
 * ``union_size(vertex_sets)``          — batched |∪ N(x)| (§6)
@@ -20,8 +32,10 @@ instead of retracing per call. Kernel impl selection (``"ref"`` |
 ``"pallas"``) threads through ``repro.kernels.ops`` for both backends.
 
 Persistence: ``save(path)`` writes the register table + ``HLLConfig`` +
-plan metadata through ``repro.ckpt.checkpoint``; ``repro.engine.load``
-rebuilds an equivalent engine in a fresh process (DESIGN.md §3, §8).
+plan metadata through ``repro.ckpt.checkpoint`` — legal mid-stream, since
+the register panel is a valid sketch of every edge ingested so far;
+``repro.engine.load`` rebuilds an equivalent engine in a fresh process
+that can keep ingesting where the saved one stopped (DESIGN.md §3, §8).
 """
 from __future__ import annotations
 
@@ -95,14 +109,21 @@ def _normalize_pairs(pairs) -> tuple[np.ndarray, np.ndarray, int, bool]:
 class SketchEngine(abc.ABC):
     """Backend-agnostic persistent query engine over an accumulated sketch.
 
-    Construct via :func:`repro.engine.build` or :func:`repro.engine.load`;
-    subclasses only provide accumulation, one propagate step, and the
+    Construct via :func:`repro.engine.open` (empty, then :meth:`ingest`),
+    :func:`repro.engine.build` (open + one ingest) or
+    :func:`repro.engine.load`; subclasses only provide the block
+    accumulation step, row placement, one propagate step, and the
     distributed heavy-hitter path — every other query is shared here and
     runs identically (bit-for-bit on the same register table) on both
     backends.
     """
 
     backend = "abstract"
+
+    #: edges per internal accumulate step; ``ingest`` splits larger blocks
+    #: so device memory and the compile cache stay bounded regardless of
+    #: how callers chunk the stream.
+    INGEST_BLOCK = 1 << 15
 
     def __init__(self, regs: jax.Array, n: int, cfg: HLLConfig,
                  edges: np.ndarray | None, impl: str = "ref"):
@@ -112,31 +133,160 @@ class SketchEngine(abc.ABC):
         self.n = int(n)
         self.cfg = cfg
         self.impl = impl
-        self._edges = (None if edges is None
-                       else np.ascontiguousarray(edges, dtype=np.int32))
+        self._edges0 = (None if edges is None
+                        else np.ascontiguousarray(edges, dtype=np.int32))
+        self._edge_chunks: list[np.ndarray] = []
         self._plans: dict[tuple, object] = {}
         self._prop_src_dst: tuple[jax.Array, jax.Array] | None = None
 
     # ------------------------------------------------------------- state
     @property
     def n_pad(self) -> int:
+        """Padded vertex-row count of the register table (>= n)."""
         return int(self._regs.shape[0])
 
     @property
     def regs(self) -> jax.Array:
-        """The accumulated register table uint8[n_pad, r] (read-only)."""
+        """The accumulated register table uint8[n_pad, r] (read-only).
+
+        Do not hold this reference across :meth:`ingest`/:meth:`merge`
+        calls — the ingestion step donates the panel buffer to XLA, which
+        invalidates previously returned arrays.
+        """
         return self._regs
 
     @property
     def edges(self) -> np.ndarray | None:
-        return self._edges
+        """Every undirected edge ingested so far, int32[m, 2].
+
+        ``None`` iff the engine was created from a bare register table
+        (``from_regs`` without ``edges=``) — such engines answer register
+        queries but not edge-replay queries, and never start tracking
+        edges even if further blocks are ingested (their panel already
+        holds contributions from unknown edges). Chunks appended by
+        :meth:`ingest` are consolidated lazily on first access.
+        """
+        if self._edges0 is None:
+            return None
+        if self._edge_chunks:
+            self._edges0 = np.concatenate([self._edges0] + self._edge_chunks)
+            self._edge_chunks = []
+        return self._edges0
+
+    @property
+    def m(self) -> int:
+        """Number of undirected edges ingested so far (0 if untracked)."""
+        e = self.edges
+        return 0 if e is None else len(e)
 
     def _require_edges(self, query: str) -> np.ndarray:
-        if self._edges is None:
+        e = self.edges
+        if e is None:
             raise ValueError(
                 f"{query} re-reads the edge stream, but this engine was "
                 f"built without edges (from_regs without edges=...)")
-        return self._edges
+        return e
+
+    # ---------------------------------------------------------- ingestion
+    def ingest(self, edge_block) -> "SketchEngine":
+        """Fold a block of undirected edges into the sketch (Algorithm 1).
+
+        Args:
+          edge_block: int[k, 2] array-like of vertex pairs, any k >= 0.
+            Both orientations of every edge are inserted (vertex u's
+            sketch receives neighbor v and vice versa). Vertex ids must
+            lie in [0, n) — the vertex universe is fixed at ``open`` time;
+            out-of-range ids raise ``ValueError`` before any mutation.
+
+        Blocks larger than ``INGEST_BLOCK`` are split internally; ragged
+        tails are padded up to a power-of-two shape bucket, so an
+        arbitrary blocking of the stream triggers only O(log block) jit
+        compiles, each running with a donated register panel
+        (allocation-free hot path). Register max is commutative and
+        idempotent, so any blocking/ordering of the same edge multiset
+        yields a bit-identical panel to one-shot ``build``.
+
+        Returns self (engines mutate in place), so calls chain.
+        """
+        raw = np.asarray(edge_block)
+        if raw.ndim != 2 or raw.shape[1] != 2:
+            raise ValueError(
+                f"edge_block must have shape (k, 2), got {raw.shape}")
+        if raw.shape[0] == 0:
+            return self
+        lo, hi = int(raw.min()), int(raw.max())  # before the int32 cast:
+        if lo < 0 or hi >= self.n:               # ids >= 2^31 must not wrap
+            raise ValueError(
+                f"edge block contains vertex ids [{lo}, {hi}] outside the "
+                f"engine's universe [0, {self.n}) fixed at open() time")
+        block = np.ascontiguousarray(raw, dtype=np.int32)
+        for s in range(0, len(block), self.INGEST_BLOCK):
+            self._accumulate_block(block[s:s + self.INGEST_BLOCK])
+        if self._edges0 is not None:
+            self._edge_chunks.append(block)
+        self._invalidate_edge_caches()
+        return self
+
+    def ingest_stream(self, stream) -> "SketchEngine":
+        """Drain an :class:`repro.graph.stream.EdgeStream` into the sketch.
+
+        Consumes every substream's blocks in order (``stream.all_blocks``),
+        trimming padding — exactly the paper's §2 picture of σ partitioned
+        into |P| substreams consumed block-wise with O(block) edge memory.
+        Equivalent to ``for blk in stream.all_blocks(): eng.ingest(blk)``.
+        """
+        for blk in stream.all_blocks():
+            self.ingest(blk)
+        return self
+
+    def merge(self, other: "SketchEngine") -> "SketchEngine":
+        """Fold another engine's sketch into this one (lane-wise max).
+
+        Register max is HLL's closed union operator (Algorithm 6 MERGE):
+        merging engines that each ingested a sub-multiset of edges is
+        bit-identical to one engine ingesting their union. This is what
+        lets independently accumulated engines — different processes,
+        round-robin substreams, or a loaded checkpoint plus a delta —
+        compose into one.
+
+        Requirements (``ValueError`` otherwise): identical ``HLLConfig``
+        (same p/seed/estimator — sketches merged together must share the
+        hash function) and identical vertex count ``n``. Backends may
+        differ; ``other``'s rows are gathered to host and re-placed under
+        this engine's layout. Edge tracking: if both engines track edges
+        the lists concatenate; if either does not, the merged engine
+        stops tracking (its panel now holds unknown contributions).
+
+        Mutates and returns self; ``other`` is left untouched.
+        """
+        if not isinstance(other, SketchEngine):
+            raise TypeError(f"can only merge SketchEngine, got {type(other)}")
+        if other.cfg != self.cfg:
+            raise ValueError(
+                f"merge requires identical HLLConfig (same hash family): "
+                f"{self.cfg} != {other.cfg}")
+        if other.n != self.n:
+            raise ValueError(
+                f"merge requires identical vertex universe: n={self.n} vs "
+                f"n={other.n}")
+        rows = np.asarray(other.regs, dtype=np.uint8)[: self.n]
+        full = np.zeros((self.n_pad, rows.shape[1]), np.uint8)
+        full[: rows.shape[0]] = rows
+        fn = self._plan(("merge",),
+                        lambda: jax.jit(hll.merge, donate_argnums=(0,)))
+        self._regs = fn(self._regs, self._place_rows(full))
+        mine, theirs = self.edges, other.edges
+        if mine is None or theirs is None:
+            self._edges0 = None
+        else:
+            self._edges0 = np.concatenate([mine, theirs])
+        self._edge_chunks = []
+        self._invalidate_edge_caches()
+        return self
+
+    def _invalidate_edge_caches(self) -> None:
+        """Drop caches derived from the edge list (after ingest/merge)."""
+        self._prop_src_dst = None
 
     # ----------------------------------------------------- plan caching
     def _plan(self, key: tuple, builder):
@@ -238,6 +388,16 @@ class SketchEngine(abc.ABC):
 
     # ----------------------------------------------------- backend hooks
     @abc.abstractmethod
+    def _accumulate_block(self, chunk: np.ndarray) -> None:
+        """Scatter-max one undirected edge block int32[<=INGEST_BLOCK, 2]
+        into ``self._regs`` via a donated jitted accumulate step."""
+
+    @abc.abstractmethod
+    def _place_rows(self, full: np.ndarray) -> jax.Array:
+        """Place a full uint8[n_pad, r] row table under this backend's
+        device layout (replicated locally / block-sharded on the mesh)."""
+
+    @abc.abstractmethod
     def _propagate(self, regs: jax.Array, schedule: str) -> jax.Array:
         """One Algorithm 2 pass: D^t[x] = D^{t-1}[x] ∪̃ (∪̃_{xy∈E} D^{t-1}[y])."""
 
@@ -255,19 +415,24 @@ class SketchEngine(abc.ABC):
         """Persist the accumulated sketch (registers + config + metadata).
 
         Layout is a ``repro.ckpt`` checkpoint: one .npy per leaf plus a
-        manifest whose ``extra`` dict records the HLLConfig, backend and
-        plan metadata. Only the n true vertex rows are stored — padding is
-        backend-dependent and reconstructed on load.
+        manifest whose ``extra`` dict records the HLLConfig, backend,
+        ingested edge count and plan metadata. Only the n true vertex rows
+        are stored — padding is backend-dependent and reconstructed on
+        load. Saving is legal *mid-stream*: the panel is a valid sketch of
+        everything ingested so far, and a loaded engine resumes ingestion
+        where this one stopped (registers and edge list pick up exactly).
         """
         from repro.ckpt.checkpoint import save_checkpoint
+        edges = self.edges
         tree = {"regs": np.asarray(self._regs)[: self.n]}
-        if self._edges is not None:
-            tree["edges"] = self._edges
+        if edges is not None:
+            tree["edges"] = edges
         extra = {
             "format": ENGINE_FORMAT,
             "backend": self.backend,
             "n": self.n,
             "impl": self.impl,
+            "m_ingested": self.m,
             "cfg": {"p": self.cfg.p, "seed": self.cfg.seed,
                     "estimator": self.cfg.estimator},
         }

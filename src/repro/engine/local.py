@@ -2,12 +2,11 @@
 
 Accumulation and propagation go through ``repro.kernels.ops`` so the
 ``impl`` selection ("ref" jnp oracles vs "pallas" kernels) applies to the
-hot paths; triangle queries reuse the ``core.degreesketch`` reference
-implementations (DESIGN.md §3).
+hot paths; ingestion uses the donated ``ops.accumulate_donated`` entry
+(allocation-free block loop, DESIGN.md §3a); triangle queries reuse the
+``core.degreesketch`` reference implementations (DESIGN.md §3).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +14,8 @@ import numpy as np
 
 from repro.core import degreesketch as dsk, hll
 from repro.core.hll import HLLConfig
-from repro.engine.base import SketchEngine
+from repro.engine.base import SketchEngine, bucket
+from repro.graph import stream as gstream
 from repro.kernels import ops
 
 __all__ = ["LocalEngine"]
@@ -28,30 +28,28 @@ class LocalEngine(SketchEngine):
 
     # ------------------------------------------------------ construction
     @classmethod
-    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
-              impl: str = "ref", block: int = 1 << 15) -> "LocalEngine":
-        """Algorithm 1: one blocked pass over the edge stream."""
-        edges = np.ascontiguousarray(edges, dtype=np.int32)
+    def open(cls, n: int, cfg: HLLConfig, *, impl: str = "ref",
+             ) -> "LocalEngine":
+        """An empty engine over vertex universe [0, n), ready to ingest.
+
+        Allocates the zeroed register table uint8[n_pad, r] (n padded to a
+        multiple of 8 for the kernels); every subsequent ``ingest`` block
+        folds into that one panel via a donated jitted step.
+        """
         n_pad = dsk.pad_vertices(n, 8)
         regs = hll.empty_table(n_pad, cfg)
+        return cls(regs, n, cfg, np.zeros((0, 2), np.int32), impl=impl)
 
-        @functools.partial(jax.jit, donate_argnums=(0,))
-        def acc_block(regs, rows, keys, mask):
-            return ops.accumulate(regs, rows, keys, cfg, mask=mask, impl=impl)
+    @classmethod
+    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
+              impl: str = "ref") -> "LocalEngine":
+        """Algorithm 1 in one call: ``open(n, cfg)`` + ``ingest(edges)``.
 
-        directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
-        for s in range(0, len(directed), block):
-            chunk = directed[s:s + block]
-            kpad = block - len(chunk)
-            if kpad:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((kpad, 2), chunk.dtype)])
-            mask = np.arange(block) < (block - kpad)
-            regs = acc_block(
-                regs, jnp.asarray(chunk[:, 0].astype(np.int32)),
-                jnp.asarray(chunk[:, 1].astype(np.uint32)),
-                jnp.asarray(mask))
-        return cls(regs, n, cfg, edges, impl=impl)
+        Batch construction is a thin wrapper over the streaming path, so
+        one-shot and block-streamed accumulation are the same code and
+        produce bit-identical registers (tested).
+        """
+        return cls.open(n, cfg, impl=impl).ingest(edges)
 
     @classmethod
     def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
@@ -61,7 +59,9 @@ class LocalEngine(SketchEngine):
 
         Used by loaders and by workloads that build sketches directly via
         ``repro.core.hll`` (edge-free engines answer degrees/union/
-        intersection; neighborhood/triangles need ``edges``).
+        intersection; neighborhood/triangles need ``edges``). The row
+        layout matches ``open``'s, so a checkpoint taken mid-stream
+        resumes ingestion bit-identically.
         """
         regs = jnp.asarray(regs, dtype=jnp.uint8)
         n_pad = dsk.pad_vertices(max(n, regs.shape[0]), 8)
@@ -72,6 +72,28 @@ class LocalEngine(SketchEngine):
         return cls(regs, n, cfg, edges, impl=impl)
 
     # ------------------------------------------------------ backend hooks
+    def _accumulate_block(self, chunk: np.ndarray) -> None:
+        """Insert both orientations of an edge block (scatter-max).
+
+        Directed pairs are padded up to a power-of-two shape bucket and
+        pushed through ``ops.accumulate_donated`` — the panel buffer is
+        donated each step, and jax's jit cache keys on the bucketed block
+        shape, so a long stream reuses a handful of compiled programs.
+        """
+        directed = np.concatenate([chunk, chunk[:, ::-1]], axis=0)
+        cap = 2 * self.INGEST_BLOCK
+        for s in range(0, len(directed), cap):
+            sub = directed[s:s + cap]
+            padded, mask = gstream.pad_block(sub, bucket(len(sub)))
+            self._regs = ops.accumulate_donated(
+                self._regs, jnp.asarray(padded[:, 0]),
+                jnp.asarray(padded[:, 1].astype(np.uint32)),
+                jnp.asarray(mask), cfg=self.cfg, impl=self.impl)
+
+    def _place_rows(self, full: np.ndarray) -> jax.Array:
+        """Single device: the row table goes up as one dense array."""
+        return jnp.asarray(full)
+
     def _propagate(self, regs, schedule):
         if self._prop_src_dst is None:
             e = self._require_edges("neighborhood")
@@ -84,6 +106,7 @@ class LocalEngine(SketchEngine):
         return fn(regs, src, dst)
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
+        """Algorithms 4/5 on one device (see base class for the contract)."""
         edges = self._require_edges("triangle_heavy_hitters")
         sketch = dsk.DegreeSketch(regs=self._regs, n=self.n, cfg=self.cfg)
         if mode == "edge":

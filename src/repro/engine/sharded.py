@@ -6,6 +6,13 @@ The register table lives sharded over the mesh axis (block vertex
 partition f); shared queries (degrees, union, intersection) run on the
 global sharded array under jit, while propagation and heavy hitters use
 the shard_map schedules (DESIGN.md §2, §3).
+
+Streaming (DESIGN.md §3a): the vertex partition is fixed at ``open`` time
+(``sd.vertex_partition`` is edge-independent), each ``ingest`` block is
+routed to owner shards host-side via ``graph.stream.bucket_by_owner`` and
+scatter-maxed inside ONE donated shard_map step, and the full ``DistPlan``
+(ring/allgather/triangle routings) is rebuilt lazily from the accumulated
+edge list only when a propagation or triangle query needs it.
 """
 from __future__ import annotations
 
@@ -16,7 +23,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hll import HLLConfig
 from repro.distributed import sketch_dist as sd
-from repro.engine.base import SketchEngine
+from repro.engine.base import SketchEngine, bucket
+from repro.graph import stream as gstream
 
 __all__ = ["ShardedEngine"]
 
@@ -28,16 +36,39 @@ class ShardedEngine(SketchEngine):
 
     backend = "sharded"
 
-    def __init__(self, regs, n, cfg, edges, impl, *, mesh, plan):
+    def __init__(self, regs, n, cfg, edges, impl, *, mesh, shards,
+                 plan=None):
         super().__init__(regs, n, cfg, edges, impl=impl)
         self.mesh = mesh
         self.axis = _AXIS
-        self.plan = plan
-        self.shards = plan.num_shards
+        self.shards = int(shards)
+        self.v_loc = self.n_pad // self.shards
+        self._plan_cache = plan
+
+    # ------------------------------------------------------------- plan
+    @property
+    def plan(self) -> "sd.DistPlan":
+        """The routing ``DistPlan`` for the edges ingested so far.
+
+        Rebuilt lazily after ingest/merge invalidates it — the plan is a
+        pure function of (edges, n, shards), and its vertex partition
+        matches the one fixed at ``open`` time by construction
+        (``sd.vertex_partition``). Requires a tracked edge list.
+        """
+        if self._plan_cache is None:
+            edges = self._require_edges("the distributed routing plan")
+            self._plan_cache = sd.build_plan(edges, self.n, self.shards)
+        return self._plan_cache
+
+    def _invalidate_edge_caches(self) -> None:
+        """Ingest/merge moved the edge list: drop plan + propagate caches."""
+        super()._invalidate_edge_caches()
+        self._plan_cache = None
 
     # ------------------------------------------------------ construction
     @staticmethod
     def _make_mesh(shards: int):
+        """A 1-D device mesh over the sketch axis (validates device count)."""
         if shards > jax.device_count():
             raise ValueError(
                 f"shards={shards} exceeds visible devices "
@@ -47,38 +78,100 @@ class ShardedEngine(SketchEngine):
         return jax.make_mesh((shards,), (_AXIS,))
 
     @classmethod
-    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
-              shards: int | None = None, impl: str = "ref") -> "ShardedEngine":
-        """Algorithm 1, distributed: route edges to owner shards, scatter-max."""
-        edges = np.ascontiguousarray(edges, dtype=np.int32)
+    def open(cls, n: int, cfg: HLLConfig, *, shards: int | None = None,
+             impl: str = "ref") -> "ShardedEngine":
+        """An empty sharded engine over [0, n), ready to ingest.
+
+        Builds the mesh, fixes the block vertex partition (n_pad, v_loc)
+        from (n, shards) alone, and places a zeroed register table
+        block-sharded over the mesh axis. ``shards`` defaults to the
+        visible device count.
+        """
         shards = shards or jax.device_count()
         mesh = cls._make_mesh(shards)
-        plan = sd.build_plan(edges, n, shards)
-        regs = sd.dist_accumulate(mesh, _AXIS, plan, cfg, impl=impl)
-        return cls(regs, n, cfg, edges, impl, mesh=mesh, plan=plan)
+        n_pad, _ = sd.vertex_partition(n, shards)
+        regs = jax.device_put(np.zeros((n_pad, cfg.r), np.uint8),
+                              NamedSharding(mesh, P(_AXIS, None)))
+        return cls(regs, n, cfg, np.zeros((0, 2), np.int32), impl,
+                   mesh=mesh, shards=shards)
+
+    @classmethod
+    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
+              shards: int | None = None, impl: str = "ref") -> "ShardedEngine":
+        """Algorithm 1, distributed, in one call: ``open`` + ``ingest``.
+
+        Batch construction is the streaming path (route edges to owner
+        shards, donated scatter-max per block), so one-shot and streamed
+        accumulation produce bit-identical sharded registers (tested).
+        """
+        return cls.open(n, cfg, shards=shards, impl=impl).ingest(edges)
 
     @classmethod
     def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
-                  edges: np.ndarray, shards: int | None = None,
+                  edges: np.ndarray | None = None, shards: int | None = None,
                   impl: str = "ref") -> "ShardedEngine":
         """Re-host an unsharded row table uint8[>=n, r] onto a fresh mesh.
 
-        The routing plan is rebuilt from ``edges`` (it is a pure function
-        of the edge list and shard count), and the rows are re-padded to
-        the mesh's vertex partition before device_put — so a checkpoint
-        taken at one shard count restores at any other.
+        The rows are re-padded to the mesh's vertex partition before
+        device_put — so a checkpoint taken at one shard count restores at
+        any other, and a mid-stream checkpoint resumes ingestion exactly.
+        The routing plan, when needed, is rebuilt from ``edges`` (a pure
+        function of the edge list and shard count); engines restored
+        without ``edges`` answer register queries only.
         """
-        edges = np.ascontiguousarray(edges, dtype=np.int32)
         shards = shards or jax.device_count()
         mesh = cls._make_mesh(shards)
-        plan = sd.build_plan(edges, n, shards)
+        n_pad, _ = sd.vertex_partition(n, shards)
         rows = np.asarray(regs, dtype=np.uint8)[:n]
-        full = np.zeros((plan.n_pad, rows.shape[1]), np.uint8)
+        full = np.zeros((n_pad, rows.shape[1]), np.uint8)
         full[: rows.shape[0]] = rows
         sharded = jax.device_put(full, NamedSharding(mesh, P(_AXIS, None)))
-        return cls(sharded, n, cfg, edges, impl, mesh=mesh, plan=plan)
+        return cls(sharded, n, cfg, edges, impl, mesh=mesh, shards=shards)
 
     # ------------------------------------------------------ backend hooks
+    def _accumulate_block(self, chunk: np.ndarray) -> None:
+        """Route one edge block to owner shards and scatter-max in one step.
+
+        ``bucket_by_owner`` expands the block to both directed orientations
+        grouped by owner shard (Algorithm 1's Send context, host-side); the
+        per-shard panels are padded to a common power-of-two edge capacity
+        (one compile per capacity bucket) and the register panel is donated
+        through the jitted shard_map, so the steady-state ingest loop
+        allocates only the small routed index arrays.
+        """
+        per = gstream.bucket_by_owner(chunk, self.n_pad, self.shards)
+        cap = bucket(max(max(len(p) for p in per), 1))
+        dst = np.zeros((self.shards, cap), np.int32)
+        key = np.zeros((self.shards, cap), np.uint32)
+        msk = np.zeros((self.shards, cap), bool)
+        for s, p in enumerate(per):
+            k = len(p)
+            dst[s, :k] = p[:, 0] - s * self.v_loc
+            key[s, :k] = p[:, 1].astype(np.uint32)
+            msk[s, :k] = True
+        fn = self._plan(("ingest", cap), self._make_ingest_fn)
+        sh = NamedSharding(self.mesh, P(_AXIS, None))
+        self._regs = fn(self._regs, jax.device_put(dst, sh),
+                        jax.device_put(key, sh), jax.device_put(msk, sh))
+
+    def _make_ingest_fn(self):
+        """Donated jitted shard_map accumulate step (per-capacity cached)."""
+        from repro.kernels import ops
+
+        def body(regs_local, dst_local, key, mask):
+            return ops.accumulate(regs_local, dst_local[0], key[0], self.cfg,
+                                  mask=mask[0], impl=self.impl)
+
+        f = sd._shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(_AXIS, None),) * 4, out_specs=P(_AXIS, None),
+            check_vma=(self.impl != "pallas"))
+        return jax.jit(f, donate_argnums=(0,))
+
+    def _place_rows(self, full: np.ndarray) -> jax.Array:
+        """Block-shard a full row table over the mesh axis (for merge)."""
+        return jax.device_put(full, NamedSharding(self.mesh, P(_AXIS, None)))
+
     def _propagate(self, regs, schedule):
         if schedule in ("auto", "ring"):
             return sd.dist_propagate_ring(self.mesh, self.axis, self.plan,
@@ -91,12 +184,14 @@ class ShardedEngine(SketchEngine):
             f"{schedule!r}")
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
+        """Algorithms 4/5 over the mesh (see base class for the contract)."""
         if mode not in ("edge", "vertex"):
             raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")
-        return sd._triangle_heavy_hitters_impl(
+        return sd.dist_triangle_heavy_hitters(
             self.mesh, self.axis, self.plan, self.cfg, self._regs, k,
             iters=iters, mode=mode)
 
     # -------------------------------------------------------- persistence
     def _save_extra(self):
+        """Record the shard count so load() restores the same mesh shape."""
         return {"shards": self.shards}

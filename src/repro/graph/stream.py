@@ -75,6 +75,19 @@ class EdgeStream:
             chunk = sub[s:s + self.block]
             yield pad_block(chunk, self.block)
 
+    def all_blocks(self):
+        """Yield unpadded edge blocks across every substream, in order.
+
+        This is the ingestion view of the stream: substream 0's blocks,
+        then substream 1's, and so on. Padding is trimmed (only the final
+        block of each substream is ragged), so consumers such as
+        ``SketchEngine.ingest`` see exactly the stream's edges once each.
+        """
+        for i in range(self.num_substreams):
+            for blk, msk in self.blocks(i):
+                yield blk if msk.all() else blk[msk]
+
     @property
     def m(self) -> int:
+        """Total number of (undirected) edges in the stream."""
         return len(self.edges)

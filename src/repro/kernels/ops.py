@@ -13,6 +13,8 @@ hot-spot replacements and the unit of the §Perf kernel iteration.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -24,7 +26,8 @@ from repro.kernels.hll_propagate import hll_propagate as _prop_kernel
 from repro.kernels.hll_estimate import hll_estimate_stats as _est_kernel
 from repro.kernels.ertl_stats import ertl_stats as _ertl_kernel
 
-__all__ = ["accumulate", "propagate", "estimate", "ertl_stats"]
+__all__ = ["accumulate", "accumulate_donated", "propagate", "estimate",
+           "ertl_stats"]
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -52,6 +55,27 @@ def accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
     rhos = _pad_to(rhos, edge_block, 0)  # rho 0 => no-op
     return _acc_kernel(regs, rows, buckets, rhos, edge_block=edge_block,
                        interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("cfg", "impl", "edge_block"))
+def accumulate_donated(regs: jax.Array, rows: jax.Array, keys: jax.Array,
+                       mask: jax.Array, *, cfg: HLLConfig,
+                       impl: str = "pallas",
+                       edge_block: int = 512) -> jax.Array:
+    """Donating :func:`accumulate`: the ingestion hot-path entry.
+
+    The register panel ``regs`` is donated — XLA reuses its buffer for the
+    output, so a block-ingestion loop (``regs = accumulate_donated(regs,
+    ...)``) updates the panel in place instead of allocating a fresh
+    n_pad*r table per block. The Pallas kernel already aliases the panel
+    (``input_output_aliases={0: 0}``); donation extends the aliasing
+    through the jit boundary. The caller's ``regs`` reference is consumed:
+    do not reuse it after the call. One compilation is cached per
+    (block shape, cfg, impl) — callers pad blocks to shape buckets.
+    """
+    return accumulate(regs, rows, keys, cfg, mask=mask, impl=impl,
+                      edge_block=edge_block)
 
 
 def propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,

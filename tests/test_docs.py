@@ -1,0 +1,64 @@
+"""Doc-coverage gate for the public ``repro.engine`` surface.
+
+Every public module, class, method and function under ``repro.engine``
+must carry a docstring — this is the same contract CI enforces with
+``interrogate --fail-under 100 src/repro/engine``, duplicated here with
+stdlib ``inspect`` so the tier-1 run needs no extra dependency.
+"""
+import importlib
+import inspect
+import pkgutil
+
+import pytest
+
+import repro.engine
+
+MODULES = ["repro.engine"] + [
+    f"repro.engine.{m.name}"
+    for m in pkgutil.iter_modules(repro.engine.__path__)]
+
+
+def _public_members(obj, modname):
+    for name, member in vars(obj).items():
+        if name.startswith("_"):
+            continue
+        if inspect.isclass(member) or inspect.isfunction(member):
+            if getattr(member, "__module__", modname) == modname:
+                yield name, member
+
+
+@pytest.mark.parametrize("modname", MODULES)
+def test_engine_surface_is_documented(modname):
+    mod = importlib.import_module(modname)
+    missing = []
+    if not (mod.__doc__ or "").strip():
+        missing.append(modname)
+    for name, member in _public_members(mod, modname):
+        if not (member.__doc__ or "").strip():
+            missing.append(f"{modname}.{name}")
+        if inspect.isclass(member):
+            for mname, meth in vars(member).items():
+                if mname.startswith("_"):
+                    continue
+                fn = meth.__func__ if isinstance(
+                    meth, (classmethod, staticmethod)) else meth
+                if isinstance(fn, property):
+                    fn = fn.fget
+                if not callable(fn) and not isinstance(fn, property):
+                    continue
+                if not (getattr(fn, "__doc__", None) or "").strip():
+                    missing.append(f"{modname}.{name}.{mname}")
+    assert not missing, f"undocumented public surface: {missing}"
+
+
+def test_public_methods_document_args_or_semantics():
+    """Spot-check that key engine docstrings carry the load-bearing caveats
+    (error bounds, compile-cache behavior) the ISSUE requires, not stubs."""
+    from repro.engine.base import SketchEngine
+    assert "bucket" in SketchEngine.ingest.__doc__  # compile-cache behavior
+    assert "donated" in SketchEngine.ingest.__doc__
+    assert "max" in SketchEngine.merge.__doc__.lower()  # merge semantics
+    assert "HLLConfig" in SketchEngine.merge.__doc__  # shape/config check
+    import repro.engine as eng
+    assert "n" in (eng.open.__doc__ or "")
+    assert "bit-identical" in (eng.build.__doc__ or "")

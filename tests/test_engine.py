@@ -250,6 +250,19 @@ with tempfile.TemporaryDirectory() as d:
     se2 = engine.load(d)
     assert se2.shards == 8
     assert np.array_equal(se2.degrees(), se.degrees()), "roundtrip"
+
+# streaming: blocked ingest == one-shot build, bit-identical on 8 shards
+st = engine.open(n, cfg, backend="sharded", shards=8)
+for s in range(0, len(edges), 257):
+    st.ingest(edges[s:s + 257])
+assert np.array_equal(np.asarray(st.regs), np.asarray(se.regs)), "stream8"
+
+# merge of two half-stream engines == build, on the 8-shard mesh
+h = len(edges) // 2
+a = engine.open(n, cfg, backend="sharded", shards=8).ingest(edges[:h])
+b = engine.open(n, cfg, backend="sharded", shards=8).ingest(edges[h:])
+a.merge(b)
+assert np.array_equal(np.asarray(a.regs), np.asarray(se.regs)), "merge8"
 print("ENGINE8_OK")
 """
 

@@ -1,0 +1,208 @@
+"""Streaming ingestion + merge: equivalence with one-shot build.
+
+Acceptance contract (ISSUE 2 / DESIGN.md §3a):
+(a) streamed blocks — several block sizes, including a ragged final
+    block — produce bit-identical registers to one-shot ``build``, on
+    both backends (register max is commutative/idempotent, so any
+    blocking of the same edge multiset lands on the same panel);
+(b) ``merge`` of engines that each ingested a round-robin substream
+    equals the single-engine build, bit for bit;
+(c) a mid-stream ``save`` -> ``load`` -> resume ingestion ends bit-equal
+    to an uninterrupted build, and edge-replay queries keep working.
+
+The in-process sharded engine runs on a 1-shard mesh (the main pytest
+process must keep seeing 1 device — dry-run rules); the 8-device case is
+exercised in test_engine.py's slow subprocess script.
+"""
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.graph import generators as gen
+from repro.graph.stream import EdgeStream
+
+CFG = HLLConfig(p=8)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+@pytest.fixture(scope="module")
+def built(graph):
+    edges, n = graph
+    return {"local": engine.build(edges, n, CFG, backend="local"),
+            "sharded": engine.build(edges, n, CFG, backend="sharded",
+                                    shards=1)}
+
+
+def _rows(eng):
+    return np.asarray(eng.regs)[: eng.n]
+
+
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+@pytest.mark.parametrize("block", [37, 256, 1000])
+def test_streamed_blocks_bit_identical_to_build(graph, built, backend, block):
+    """Arbitrary blockings (ragged final block included) == one-shot build."""
+    edges, n = graph
+    assert len(edges) % block != 0  # final block genuinely ragged
+    eng = engine.open(n, CFG, backend=backend,
+                      shards=1 if backend == "sharded" else None)
+    for s in range(0, len(edges), block):
+        eng.ingest(edges[s:s + block])
+    np.testing.assert_array_equal(_rows(eng), _rows(built[backend]))
+    assert eng.m == len(edges)
+
+
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+def test_ingest_stream_bit_identical_to_build(graph, built, backend):
+    """Draining an EdgeStream (substream order != input order) == build."""
+    edges, n = graph
+    stream = EdgeStream(edges, num_substreams=3, block=100)
+    eng = engine.open(n, CFG, backend=backend,
+                      shards=1 if backend == "sharded" else None)
+    eng.ingest_stream(stream)
+    np.testing.assert_array_equal(_rows(eng), _rows(built[backend]))
+    # edge-replay queries see every edge despite the permuted order
+    l1, g1 = built[backend].neighborhood(t_max=2)
+    l2, g2 = eng.neighborhood(t_max=2)
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(g1, g2)
+
+
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+def test_merge_of_substream_engines_equals_build(graph, built, backend):
+    """Round-robin substream engines merged == the single-engine build."""
+    edges, n = graph
+    stream = EdgeStream(edges, num_substreams=4)
+    parts = []
+    for i in range(stream.num_substreams):
+        e = engine.open(n, CFG, backend=backend,
+                        shards=1 if backend == "sharded" else None)
+        parts.append(e.ingest(stream.substream(i)))
+    merged = parts[0]
+    for p in parts[1:]:
+        merged.merge(p)
+    np.testing.assert_array_equal(_rows(merged), _rows(built[backend]))
+    assert merged.m == len(edges)
+    # queries over the merged engine answer like the built one (the edge
+    # list is a permutation — substream order — so edge-replay float
+    # reductions agree to tolerance, while register queries are bit-equal)
+    np.testing.assert_array_equal(merged.degrees(), built[backend].degrees())
+    t1 = merged.triangle_heavy_hitters(k=5)
+    t2 = built[backend].triangle_heavy_hitters(k=5)
+    assert t1[0] == pytest.approx(t2[0], rel=1e-6)
+    assert set(map(tuple, np.atleast_2d(t1[2]))) == \
+        set(map(tuple, np.atleast_2d(t2[2])))
+
+
+def test_merge_across_backends(graph, built):
+    """Backends may differ: rows are canonical, layout is re-placed."""
+    edges, n = graph
+    half = len(edges) // 2
+    a = engine.open(n, CFG, backend="local").ingest(edges[:half])
+    b = engine.open(n, CFG, backend="sharded", shards=1).ingest(edges[half:])
+    a.merge(b)
+    np.testing.assert_array_equal(_rows(a), _rows(built["local"]))
+    assert a.m == len(edges)
+
+
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+def test_midstream_save_load_resume(graph, built, backend, tmp_path):
+    """Snapshot mid-stream, restore, keep ingesting: == uninterrupted build."""
+    edges, n = graph
+    half = len(edges) // 2
+    eng = engine.open(n, CFG, backend=backend,
+                      shards=1 if backend == "sharded" else None)
+    eng.ingest(edges[:half])
+    eng.save(str(tmp_path))
+    eng2 = engine.load(str(tmp_path))
+    assert eng2.backend == backend and eng2.m == half
+    eng2.ingest(edges[half:])
+    np.testing.assert_array_equal(_rows(eng2), _rows(built[backend]))
+    # edge-replay queries work on the resumed engine
+    l1, _ = built[backend].neighborhood(t_max=2)
+    l2, _ = eng2.neighborhood(t_max=2)
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_build_is_open_plus_ingest(graph, built):
+    """build() is a thin wrapper: same registers, same tracked edges."""
+    edges, n = graph
+    eng = engine.open(n, CFG).ingest(edges)
+    np.testing.assert_array_equal(_rows(eng), _rows(built["local"]))
+    np.testing.assert_array_equal(eng.edges, built["local"].edges)
+
+
+def test_ingest_impl_pallas_matches_ref(graph):
+    """The donated accumulate entry agrees across kernel impls."""
+    edges, n = graph
+    a = engine.open(n, CFG, impl="pallas").ingest(edges[:300])
+    b = engine.open(n, CFG, impl="ref").ingest(edges[:300])
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+
+
+def test_queries_track_ingestion(graph):
+    """Query answers refresh as blocks arrive (no stale plan/caches)."""
+    edges, n = graph
+    half = len(edges) // 2
+    eng = engine.open(n, CFG, backend="sharded", shards=1)
+    eng.ingest(edges[:half])
+    d_half = eng.degrees()
+    t_half = eng.triangle_heavy_hitters(k=5)  # forces a plan build
+    eng.ingest(edges[half:])                  # must invalidate that plan
+    full = engine.build(edges, n, CFG, backend="sharded", shards=1)
+    np.testing.assert_array_equal(eng.degrees(), full.degrees())
+    t_full = eng.triangle_heavy_hitters(k=5)
+    assert t_full[0] == full.triangle_heavy_hitters(k=5)[0]
+    assert not np.array_equal(eng.degrees(), d_half) or t_half[0] != t_full[0]
+
+
+def test_ingest_validation(graph):
+    edges, n = graph
+    eng = engine.open(n, CFG)
+    with pytest.raises(ValueError, match="universe"):
+        eng.ingest(np.array([[0, n]]))
+    with pytest.raises(ValueError, match="universe"):
+        eng.ingest(np.array([[-1, 0]]))
+    with pytest.raises(ValueError, match="shape"):
+        eng.ingest(np.arange(6).reshape(2, 3))
+    with pytest.raises(ValueError, match="universe"):
+        eng.ingest(np.array([[0, 2 ** 32]]))  # must not wrap through int32
+    eng.ingest(np.zeros((0, 2), np.int32))  # empty block is a no-op
+    assert eng.m == 0
+
+
+def test_merge_validation(graph):
+    edges, n = graph
+    eng = engine.open(n, CFG)
+    with pytest.raises(ValueError, match="HLLConfig"):
+        eng.merge(engine.open(n, HLLConfig(p=9)))
+    with pytest.raises(ValueError, match="vertex universe"):
+        eng.merge(engine.open(n + 1, CFG))
+    with pytest.raises(TypeError):
+        eng.merge(np.zeros((4, 256), np.uint8))
+
+
+def test_merge_with_edge_free_engine_stops_tracking(graph, built):
+    """Merging in a bare-register engine drops edge tracking (documented)."""
+    edges, n = graph
+    bare = engine.LocalEngine.from_regs(_rows(built["local"]), n, CFG)
+    eng = engine.open(n, CFG).ingest(edges[:10]).merge(bare)
+    assert eng.edges is None
+    with pytest.raises(ValueError, match="edge stream"):
+        eng.neighborhood(t_max=2)
+    # register queries still answer
+    np.testing.assert_array_equal(eng.degrees(), built["local"].degrees())
+
+
+def test_open_validation():
+    with pytest.raises(ValueError, match="backend"):
+        engine.open(8, CFG, backend="nope")
+    with pytest.raises(ValueError, match="shards"):
+        engine.open(8, CFG, backend="local", shards=4)
+    with pytest.raises(ValueError, match="impl"):
+        engine.open(8, CFG, impl="cuda")

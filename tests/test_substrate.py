@@ -39,11 +39,14 @@ def test_checkpoint_atomic_and_gc(tmp_path):
     d = str(tmp_path)
     ck = AsyncCheckpointer(d, keep=2)
     for s in (1, 2, 3, 4):
-        ck.save(s, _tree())
+        ck.save(s, _tree(), extra={"step_tag": s})
     ck.wait()
     steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
                    if n.startswith("step_"))
     assert steps == [3, 4]
+    # extra metadata rides through the async path into the manifest
+    from repro.ckpt.checkpoint import read_manifest
+    assert read_manifest(d, 4)["extra"] == {"step_tag": 4}
     # stale tmp dirs never count as checkpoints
     os.makedirs(os.path.join(d, ".tmp-step_9"), exist_ok=True)
     assert latest_step(d) == 4

@@ -1,0 +1,108 @@
+"""Serving throughput: queries/sec and latency vs client batch size.
+
+Measures the ``repro.serve.QueryServer`` micro-batching frontend over the
+query hot paths (union / intersection): for each client batch size, C
+concurrent client threads each issue R requests of that size through one
+server (both query kinds are warmed at the per-request shape bucket
+first, so solo-request compile time is excluded; a coalesced super-batch
+can still compile its larger bucket once, which is genuine serving cost)
+and we record queries/sec, requests/sec and p50/p99 request latency. Emits CSV lines through ``benchmarks.common.emit`` and writes
+``BENCH_serve.json`` so the serving perf trajectory is recorded across
+PRs.
+
+    PYTHONPATH=src:. python benchmarks/bench_serve.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph_suite
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+from repro.serve import QueryServer
+
+CLIENT_BATCH_SIZES = [1, 8, 64, 256]
+CLIENTS = 4
+REQUESTS = 16
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+
+def _drive(server: QueryServer, edges: np.ndarray, n: int, batch: int,
+           requests: int, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        if rng.integers(2):
+            idx = rng.integers(0, len(edges), size=batch)
+            server.intersection_size(edges[idx])
+        else:
+            sets = [rng.integers(0, n, size=4) for _ in range(batch)]
+            server.union_size(sets)
+
+
+def _serve_time(edges: np.ndarray, n: int, cfg: HLLConfig,
+                batch: int) -> tuple[float, dict]:
+    """Wall seconds for CLIENTS x REQUESTS requests at one batch size."""
+    eng = engine.build(edges, n, cfg, backend="local")
+    plans.reset_trace_counts()  # per-run compiled-program counts
+    with QueryServer(eng) as server:
+        # warmup: compile BOTH query kinds at this batch-size bucket
+        # (deterministic — never rely on _drive's coin flips for this)
+        server.intersection_size(edges[np.arange(batch) % len(edges)])
+        server.union_size([np.arange(4) % n for _ in range(batch)])
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=_drive,
+                                    args=(server, edges, n, batch, REQUESTS,
+                                          31 + c))
+                   for c in range(CLIENTS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        secs = time.monotonic() - t0
+        stats = server.stats()
+    return secs, stats
+
+
+def run(small: bool = True) -> None:
+    """Sweep graphs x client batch sizes; print CSV + write JSON."""
+    cfg = HLLConfig(p=8)
+    records = []
+    for name, edges in graph_suite(small).items():
+        n = int(edges.max()) + 1
+        for batch in CLIENT_BATCH_SIZES:
+            secs, stats = _serve_time(edges, n, cfg, batch)
+            nreq = CLIENTS * REQUESTS
+            qps = nreq * batch / max(secs, 1e-9)
+            lat = {k: {"p50_ms": stats[k]["p50_ms"],
+                       "p99_ms": stats[k]["p99_ms"],
+                       "batches": stats[k]["batches"],
+                       "requests": stats[k]["requests"]}
+                   for k in ("union", "intersection") if k in stats}
+            emit(f"serve/{name}/batch={batch}", secs * 1e6,
+                 f"queries_per_sec={qps:.0f};requests={nreq}")
+            records.append({
+                "graph": name, "n": n, "m": int(len(edges)),
+                "clients": CLIENTS, "requests_per_client": REQUESTS,
+                "client_batch": batch, "seconds": secs,
+                "queries_per_sec": qps,
+                "requests_per_sec": nreq / max(secs, 1e-9),
+                "kinds": lat,
+                "plan_traces": stats["plan_traces"],
+            })
+    payload = {"benchmark": "serve", "p": cfg.p,
+               "device": jax.devices()[0].platform,
+               "results": records}
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {OUT} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    run()

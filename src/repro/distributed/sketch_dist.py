@@ -28,6 +28,12 @@ composes them — and the only entry point callers should use — is
 Mesh/axis/plan and caches jitted query plans. (The PR-1 deprecation shims
 ``dist_neighborhood`` / the warning wrapper around the heavy-hitter driver
 have been removed.)
+
+The jitted shard_map programs here are cached through the shared
+query-plan cache (``repro.engine.plans``, DESIGN.md §3b) keyed by the
+static routing shapes — repeated propagation steps or triangle queries
+over the same plan reuse one compiled program instead of re-jitting a
+fresh closure per call.
 """
 from __future__ import annotations
 
@@ -183,6 +189,22 @@ def _shard_spec(mesh: Mesh, axis: str, *rest) -> NamedSharding:
     return NamedSharding(mesh, P(axis, *rest))
 
 
+def _jit_cached(query: str, bucket: tuple, cfg, impl: str, extra: tuple,
+                builder):
+    """Resolve a jitted shard_map program through the shared plan cache.
+
+    Keyed on the static routing shapes (every DistPlan array shape is a
+    pure function of (edges, n, shards)) plus whatever closes over the
+    program — meshes over the same devices/axis compare equal, so the
+    mesh itself stays out of the key. Imported lazily: ``engine.plans``
+    is the cache owner and ``repro.engine`` imports this module.
+    """
+    from repro.engine import plans
+    key = plans.PlanKey(query=query, bucket=bucket, cfg=cfg, impl=impl,
+                        backend="sharded", extra=extra)
+    return plans.global_cache().get(key, builder)
+
+
 def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
                     impl: str = "ref") -> jax.Array:
     """Algorithm 1, distributed: returns regs uint8[n_pad, r] sharded on axis.
@@ -191,18 +213,27 @@ def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
     ("ref" = jnp scatter-max oracle, "pallas" = the TPU kernel).
     """
 
-    def body(dst_local, key, mask):
-        regs_local = hll.empty_table(plan.v_loc, cfg)
-        return ops.accumulate(regs_local, dst_local[0], key[0], cfg,
-                              mask=mask[0], impl=impl)
+    v_loc = plan.v_loc  # close over the scalar only — a cached body that
+    # captured `plan` would pin its O(edges) routing arrays in the LRU
 
-    # pallas_call has no replication rule; the body is purely per-shard
-    # anyway, so the check adds nothing here.
-    f = _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None)),
-        out_specs=P(axis, None), check_vma=(impl != "pallas"))
-    return jax.jit(f)(
+    def build():
+        def body(dst_local, key, mask):
+            regs_local = hll.empty_table(v_loc, cfg)
+            return ops.accumulate(regs_local, dst_local[0], key[0], cfg,
+                                  mask=mask[0], impl=impl)
+
+        # pallas_call has no replication rule; the body is purely per-shard
+        # anyway, so the check adds nothing here.
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(axis, None)),
+            out_specs=P(axis, None), check_vma=(impl != "pallas")))
+
+    f = _jit_cached(
+        "dist_accumulate",
+        (plan.n_pad, plan.num_shards, plan.acc_dst_local.shape[1]),
+        cfg, impl, (axis,), build)
+    return f(
         jax.device_put(plan.acc_dst_local, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.acc_key, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.acc_mask, _shard_spec(mesh, axis, None)))
@@ -212,16 +243,24 @@ def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
                              regs: jax.Array) -> jax.Array:
     """One Algorithm 2 pass; paper-faithful all_gather dataflow."""
 
-    def body(regs_local, src, dst_local, mask):
-        full = jax.lax.all_gather(regs_local, axis, tiled=True)  # (n_pad, r)
-        gathered = jnp.where(mask[0][:, None], full[src[0]], jnp.uint8(0))
-        return regs_local.at[dst_local[0]].max(gathered)
+    def build():
+        def body(regs_local, src, dst_local, mask):
+            full = jax.lax.all_gather(regs_local, axis, tiled=True)
+            gathered = jnp.where(mask[0][:, None], full[src[0]],
+                                 jnp.uint8(0))
+            return regs_local.at[dst_local[0]].max(gathered)
 
-    f = _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
-        out_specs=P(axis, None))
-    return jax.jit(f)(
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(axis, None),
+                      P(axis, None)),
+            out_specs=P(axis, None)))
+
+    f = _jit_cached(
+        "dist_propagate_allgather",
+        (plan.n_pad, plan.num_shards, plan.flat_src.shape[1]),
+        None, "ref", (axis,), build)
+    return f(
         regs,
         jax.device_put(plan.flat_src, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.flat_dst_local, _shard_spec(mesh, axis, None)),
@@ -238,30 +277,40 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
     """
     num = plan.num_shards
 
-    def body(regs_local, ring_dst, ring_src, ring_mask):
-        i = jax.lax.axis_index(axis)
-        perm = [(j, (j + 1) % num) for j in range(num)]
+    def build():
+        def body(regs_local, ring_dst, ring_src, ring_mask):
+            i = jax.lax.axis_index(axis)
+            perm = [(j, (j + 1) % num) for j in range(num)]
 
-        def step(s, carry):
-            buf, out = carry
-            b = (i - s) % num  # block id currently held in buf
-            dst = jax.lax.dynamic_index_in_dim(ring_dst[0], b, keepdims=False)
-            src = jax.lax.dynamic_index_in_dim(ring_src[0], b, keepdims=False)
-            msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b, keepdims=False)
-            gathered = jnp.where(msk[:, None], buf[src], jnp.uint8(0))
-            out = out.at[dst].max(gathered)
-            buf = jax.lax.ppermute(buf, axis, perm)
-            return buf, out
+            def step(s, carry):
+                buf, out = carry
+                b = (i - s) % num  # block id currently held in buf
+                dst = jax.lax.dynamic_index_in_dim(ring_dst[0], b,
+                                                   keepdims=False)
+                src = jax.lax.dynamic_index_in_dim(ring_src[0], b,
+                                                   keepdims=False)
+                msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b,
+                                                   keepdims=False)
+                gathered = jnp.where(msk[:, None], buf[src], jnp.uint8(0))
+                out = out.at[dst].max(gathered)
+                buf = jax.lax.ppermute(buf, axis, perm)
+                return buf, out
 
-        _, out = jax.lax.fori_loop(0, num, step, (regs_local, regs_local))
-        return out
+            _, out = jax.lax.fori_loop(0, num, step,
+                                       (regs_local, regs_local))
+            return out
 
-    f = _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None, None), P(axis, None, None),
-                  P(axis, None, None)),
-        out_specs=P(axis, None))
-    return jax.jit(f)(
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None, None),
+                      P(axis, None, None), P(axis, None, None)),
+            out_specs=P(axis, None)))
+
+    f = _jit_cached(
+        "dist_propagate_ring",
+        (plan.n_pad, plan.num_shards, plan.ring_dst_local.shape[2]),
+        None, "ref", (axis,), build)
+    return f(
         regs,
         jax.device_put(plan.ring_dst_local, _shard_spec(mesh, axis, None, None)),
         jax.device_put(plan.ring_src_local, _shard_spec(mesh, axis, None, None)),
@@ -283,7 +332,10 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
     ids above 2^24 (the float32 integer-exactness limit).
     """
 
-    def body(regs_local, u, v, mask):
+    n_pad, v_loc = plan.n_pad, plan.v_loc  # scalars only: the cached body
+    # must not pin the plan's O(edges) routing arrays in the LRU
+
+    def _body(regs_local, u, v, mask):
         full = jax.lax.all_gather(regs_local, axis, tiled=True)
         a = full[u[0]]
         b = full[v[0]]
@@ -300,23 +352,30 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
             return total, gvals, alli[gidx]
         # vertex mode: EST messages -> scatter-add both endpoints, then
         # reduce_scatter back to owner shards (psum_scatter).
-        acc = jnp.zeros((plan.n_pad,), jnp.float32)
+        acc = jnp.zeros((n_pad,), jnp.float32)
         acc = acc.at[u[0]].add(est).at[v[0]].add(est)
         acc_local = jax.lax.psum_scatter(acc, axis, scatter_dimension=0,
                                          tiled=True) / 2.0
         kk = min(k, acc_local.shape[0])
         vals, idx = jax.lax.top_k(acc_local, kk)
-        vid = idx + jax.lax.axis_index(axis) * plan.v_loc  # int32 (kk,)
+        vid = idx + jax.lax.axis_index(axis) * v_loc  # int32 (kk,)
         allv = jax.lax.all_gather(vals, axis, tiled=True)
         alli = jax.lax.all_gather(vid, axis, tiled=True)
         gvals, gidx = jax.lax.top_k(allv, min(k, allv.shape[0]))
         return total, gvals, alli[gidx]
 
-    f = _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
-        out_specs=(P(), P(), P()), check_vma=False)
-    total, vals, ids = jax.jit(f)(
+    def build():
+        return jax.jit(_shard_map(
+            _body, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(axis, None),
+                      P(axis, None)),
+            out_specs=(P(), P(), P()), check_vma=False))
+
+    f = _jit_cached(
+        "dist_triangle_heavy_hitters",
+        (plan.n_pad, plan.num_shards, plan.tri_u.shape[1]),
+        cfg, "ref", (axis, k, iters, mode), build)
+    total, vals, ids = f(
         regs,
         jax.device_put(plan.tri_u, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.tri_v, _shard_spec(mesh, axis, None)),

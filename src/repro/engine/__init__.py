@@ -33,6 +33,7 @@ from repro.core.hll import HLLConfig
 from repro.engine.base import ENGINE_FORMAT, SketchEngine
 from repro.engine.local import LocalEngine
 from repro.engine.sharded import ShardedEngine
+from repro.kernels import registry
 
 __all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "open", "build",
            "load"]
@@ -45,8 +46,7 @@ def _validate(backend: str, shards, impl: str) -> None:
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
                          f"got {backend!r}")
-    if impl not in ("ref", "pallas"):
-        raise ValueError(f"impl must be 'ref' or 'pallas', got {impl!r}")
+    registry.resolve(impl)  # capability check against the kernel registry
     if backend != "sharded" and shards is not None:
         raise ValueError("shards= only applies to backend='sharded'")
 

@@ -25,11 +25,14 @@ Queries answered through one typed, batched API:
 * ``neighborhood(t_max, schedule=...)``— Algorithm 2
 * ``triangle_heavy_hitters(k, mode=)`` — Algorithms 4/5
 
-Query plans are jitted once per *shape bucket* and cached on the engine:
-batch dimensions are padded up to the next power of two, so repeated
-queries with jittering batch sizes reuse a handful of compiled programs
-instead of retracing per call. Kernel impl selection (``"ref"`` |
-``"pallas"``) threads through ``repro.kernels.ops`` for both backends.
+Query planning lives one layer down (DESIGN.md §3b,
+``repro.engine.plans``): inputs are normalized and validated against the
+vertex universe, batch dimensions are padded to power-of-two shape
+buckets, and the jitted plans are cached in a process-wide LRU keyed by
+``(query, bucket, cfg, impl, backend)`` — engines with identical
+coordinates share compiled programs. Kernel selection goes through the
+``repro.kernels.registry``: each engine resolves a capability-checked
+:class:`~repro.kernels.registry.KernelSet` once at construction.
 
 Persistence: ``save(path)`` writes the register table + ``HLLConfig`` +
 plan metadata through ``repro.ckpt.checkpoint`` — legal mid-stream, since
@@ -42,68 +45,22 @@ from __future__ import annotations
 import abc
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hll, intersection
 from repro.core.hll import HLLConfig
-from repro.kernels import ops
+from repro.core.intersection import _NEWTON_ITERS
+from repro.engine import plans
+from repro.kernels import registry
 
 __all__ = ["SketchEngine", "bucket"]
 
 ENGINE_FORMAT = "degreesketch-engine-v1"
 
-
-def bucket(size: int, minimum: int = 8) -> int:
-    """Next power-of-two shape bucket (>= minimum) for plan caching."""
-    return max(minimum, 1 << max(int(size) - 1, 0).bit_length())
-
-
-def _normalize_sets(vertex_sets) -> tuple[np.ndarray, np.ndarray, int, bool]:
-    """Normalize union-query input to bucketed (ids, mask, n_real, scalar).
-
-    Accepts a single 1-D array of vertex ids (one set -> scalar result), a
-    list/tuple of 1-D arrays (ragged batch), or a 2-D array (rectangular
-    batch). Padding slots are masked out, never merged.
-    """
-    if isinstance(vertex_sets, (list, tuple)):
-        sets = [np.asarray(s, dtype=np.int64).ravel() for s in vertex_sets]
-        scalar = False
-    else:
-        arr = np.asarray(vertex_sets)
-        if arr.ndim == 1:
-            sets, scalar = [arr.astype(np.int64)], True
-        elif arr.ndim == 2:
-            sets, scalar = list(arr.astype(np.int64)), False
-        else:
-            raise ValueError(f"vertex_sets must be 1-D, 2-D or a list "
-                             f"of 1-D arrays, got ndim={arr.ndim}")
-    n_real = len(sets)
-    if n_real == 0:
-        raise ValueError("union_size needs at least one vertex set")
-    longest = max(len(s) for s in sets)
-    ids = np.zeros((bucket(n_real), bucket(max(longest, 1))), np.int32)
-    mask = np.zeros(ids.shape, bool)
-    for i, s in enumerate(sets):
-        ids[i, : len(s)] = s
-        mask[i, : len(s)] = True
-    return ids, mask, n_real, scalar
-
-
-def _normalize_pairs(pairs) -> tuple[np.ndarray, np.ndarray, int, bool]:
-    """Normalize pair-query input to bucketed ((B, 2) ids, mask, n, scalar)."""
-    arr = np.asarray(pairs, dtype=np.int64)
-    scalar = arr.ndim == 1
-    if scalar:
-        arr = arr[None]
-    if arr.ndim != 2 or arr.shape[1] != 2:
-        raise ValueError(f"pairs must have shape (B, 2), got {arr.shape}")
-    n_real = arr.shape[0]
-    out = np.zeros((bucket(n_real), 2), np.int32)
-    out[:n_real] = arr
-    mask = np.zeros((out.shape[0],), bool)
-    mask[:n_real] = True
-    return out, mask, n_real, scalar
+# Normalization/bucketing moved to repro.engine.plans (DESIGN.md §3b);
+# re-exported here for callers that imported them from the engine core.
+bucket = plans.bucket
+_normalize_sets = plans.normalize_sets
+_normalize_pairs = plans.normalize_pairs
 
 
 class SketchEngine(abc.ABC):
@@ -126,17 +83,25 @@ class SketchEngine(abc.ABC):
     INGEST_BLOCK = 1 << 15
 
     def __init__(self, regs: jax.Array, n: int, cfg: HLLConfig,
-                 edges: np.ndarray | None, impl: str = "ref"):
-        if impl not in ("ref", "pallas"):
-            raise ValueError(f"impl must be 'ref' or 'pallas', got {impl!r}")
+                 edges: np.ndarray | None, impl: str = "ref",
+                 plan_cache: plans.PlanCache | None = None):
+        self.kernels = registry.resolve(impl, cfg)  # capability check, once
         self._regs = regs
         self.n = int(n)
         self.cfg = cfg
         self.impl = impl
-        self._edges0 = (None if edges is None
-                        else np.ascontiguousarray(edges, dtype=np.int32))
+        if edges is not None:
+            edges = np.ascontiguousarray(edges, dtype=np.int32)
+            if len(edges):
+                lo, hi = int(edges.min()), int(edges.max())
+                if lo < 0 or hi >= self.n:
+                    raise ValueError(
+                        f"edges contain vertex ids [{lo}, {hi}] outside the "
+                        f"engine's universe [0, {self.n})")
+        self._edges0 = edges
         self._edge_chunks: list[np.ndarray] = []
-        self._plans: dict[tuple, object] = {}
+        self._plan_cache = plan_cache or plans.global_cache()
+        self._version = 0
         self._prop_src_dst: tuple[jax.Array, jax.Array] | None = None
 
     # ------------------------------------------------------------- state
@@ -146,14 +111,34 @@ class SketchEngine(abc.ABC):
         return int(self._regs.shape[0])
 
     @property
+    def version(self) -> int:
+        """Panel version: bumps whenever ingest/merge donates the buffer.
+
+        The enforceable form of the :attr:`regs` staleness warning — a
+        handle taken at version v is stale (and, on donating platforms,
+        invalid) once ``version != v``. Readers that must never observe a
+        donated-away panel (e.g. ``repro.serve.QueryServer``) compare
+        versions instead of trusting held references.
+        """
+        return self._version
+
+    @property
     def regs(self) -> jax.Array:
         """The accumulated register table uint8[n_pad, r] (read-only).
 
-        Do not hold this reference across :meth:`ingest`/:meth:`merge`
-        calls — the ingestion step donates the panel buffer to XLA, which
-        invalidates previously returned arrays.
+        Each access returns the *current* panel handle. Do not hold it
+        across :meth:`ingest`/:meth:`merge` calls — the ingestion step
+        donates the panel buffer to XLA, which invalidates previously
+        returned arrays; :attr:`version` bumps on every such donation so
+        staleness is checkable (``v = eng.version; r = eng.regs; ...;
+        assert eng.version == v``).
         """
         return self._regs
+
+    @property
+    def plan_cache(self) -> plans.PlanCache:
+        """The (shared, LRU-bounded) query-plan cache this engine uses."""
+        return self._plan_cache
 
     @property
     def edges(self) -> np.ndarray | None:
@@ -206,6 +191,9 @@ class SketchEngine(abc.ABC):
         idempotent, so any blocking/ordering of the same edge multiset
         yields a bit-identical panel to one-shot ``build``.
 
+        Donation bumps :attr:`version`: ``regs`` handles taken before the
+        call are stale after it.
+
         Returns self (engines mutate in place), so calls chain.
         """
         raw = np.asarray(edge_block)
@@ -222,6 +210,7 @@ class SketchEngine(abc.ABC):
         block = np.ascontiguousarray(raw, dtype=np.int32)
         for s in range(0, len(block), self.INGEST_BLOCK):
             self._accumulate_block(block[s:s + self.INGEST_BLOCK])
+        self._version += 1
         if self._edges0 is not None:
             self._edge_chunks.append(block)
         self._invalidate_edge_caches()
@@ -257,7 +246,8 @@ class SketchEngine(abc.ABC):
         the lists concatenate; if either does not, the merged engine
         stops tracking (its panel now holds unknown contributions).
 
-        Mutates and returns self; ``other`` is left untouched.
+        Mutates and returns self (donating this engine's panel — bumps
+        :attr:`version`); ``other`` is left untouched.
         """
         if not isinstance(other, SketchEngine):
             raise TypeError(f"can only merge SketchEngine, got {type(other)}")
@@ -272,9 +262,9 @@ class SketchEngine(abc.ABC):
         rows = np.asarray(other.regs, dtype=np.uint8)[: self.n]
         full = np.zeros((self.n_pad, rows.shape[1]), np.uint8)
         full[: rows.shape[0]] = rows
-        fn = self._plan(("merge",),
-                        lambda: jax.jit(hll.merge, donate_argnums=(0,)))
+        fn = self._plan("merge", builder=plans.build_merge_plan)
         self._regs = fn(self._regs, self._place_rows(full))
+        self._version += 1
         mine, theirs = self.edges, other.edges
         if mine is None or theirs is None:
             self._edges0 = None
@@ -289,28 +279,37 @@ class SketchEngine(abc.ABC):
         self._prop_src_dst = None
 
     # ----------------------------------------------------- plan caching
-    def _plan(self, key: tuple, builder):
-        """Per-engine cache of jitted query plans, keyed by shape bucket."""
-        fn = self._plans.get(key)
-        if fn is None:
-            fn = self._plans[key] = builder()
-        return fn
+    def _plan_scope(self) -> tuple:
+        """Backend-specific static plan-key coordinates (e.g. shard count)."""
+        return ()
+
+    def _plan(self, query: str, bucket: tuple = (), extra: tuple = (),
+              builder=None):
+        """Resolve a jitted query plan through the shared LRU plan cache.
+
+        The key is ``(query, bucket, cfg, impl, backend, scope+extra)`` —
+        engines with identical coordinates share compiled programs
+        (DESIGN.md §3b); per-engine state never leaks into a plan body.
+        """
+        key = plans.PlanKey(query=query, bucket=tuple(bucket), cfg=self.cfg,
+                            impl=self.impl, backend=self.backend,
+                            extra=self._plan_scope() + tuple(extra))
+        return self._plan_cache.get(key, builder)
 
     def _estimate_rows(self, regs: jax.Array) -> jax.Array:
         """Per-row cardinality estimates, honoring cfg.estimator and impl.
 
-        The fused s/z kernel path only implements the Flajolet combination;
-        the beta estimator falls back to the jnp reference.
+        Delegates to the engine's resolved :class:`KernelSet`: the fused
+        s/z kernel path serves the Flajolet combination; other estimators
+        take the fallback recorded (explicitly) at resolve time.
         """
-        if self.cfg.estimator == "flajolet":
-            return ops.estimate(regs, self.cfg, impl=self.impl)
-        return hll.estimate(regs, self.cfg)
+        return self.kernels.estimate_rows(regs, self.cfg)
 
     # ------------------------------------------------------------ queries
     def degrees(self) -> np.ndarray:
         """d̃(x) for every vertex x < n (the eponymous degree query)."""
-        fn = self._plan(("degrees",),
-                        lambda: jax.jit(self._estimate_rows))
+        fn = self._plan("degrees", builder=lambda: plans.build_degrees_plan(
+            self.cfg, self.kernels))
         return np.asarray(fn(self._regs))[: self.n]
 
     def union_size(self, vertex_sets):
@@ -318,50 +317,52 @@ class SketchEngine(abc.ABC):
 
         Accepts a 1-D array (returns a float), a list of 1-D arrays
         (ragged batch) or a 2-D array; batches return float arrays [B].
+        Vertex ids outside [0, n) raise ``ValueError``.
         """
-        ids, mask, n_real, scalar = _normalize_sets(vertex_sets)
-        cfg = self.cfg
-
-        def build():
-            @jax.jit
-            def fn(regs, ids, mask):
-                rows = jnp.where(mask[:, :, None], regs[ids], jnp.uint8(0))
-                return hll.estimate(jnp.max(rows, axis=1), cfg)
-            return fn
-
-        est = self._plan(("union", ids.shape), build)(self._regs, ids, mask)
-        out = np.asarray(est)[:n_real]
+        sets, scalar = plans.split_sets(vertex_sets, self.n)
+        out = self._union_presplit(sets)
         return float(out[0]) if scalar else out
 
+    def _union_presplit(self, sets: list[np.ndarray]) -> np.ndarray:
+        """Batched union over pre-parsed, pre-validated id sets.
+
+        The serving hot path: ``QueryServer`` validates per request on the
+        client thread and calls this with the coalesced batch, so the
+        single worker thread never re-scans the ids.
+        """
+        ids, mask = plans.pad_sets(sets)
+        fn = self._plan("union", bucket=ids.shape,
+                        builder=lambda: plans.build_union_plan(self.cfg))
+        return np.asarray(fn(self._regs, ids, mask))[: len(sets)]
+
     def intersection_size(self, pairs, *, method: str = "mle",
-                          iters: int = intersection._NEWTON_ITERS):
+                          iters: int = _NEWTON_ITERS):
         """|N(x) ∩ N(y)| for one (x, y) pair or a batch (B, 2) of pairs.
 
         ``method="mle"`` is the paper's Ertl maximum-likelihood estimator
         (the T̃(xy) primitive, same solver default as the
         ``DegreeSketch.intersection_size`` reference); ``method="ie"`` is
         the inclusion-exclusion baseline (Eq. 18, can be negative).
+        Vertex ids outside [0, n) raise ``ValueError``.
         """
         if method not in ("mle", "ie"):
             raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
-        ids, mask, n_real, scalar = _normalize_pairs(pairs)
-        cfg = self.cfg
-
-        def build():
-            @jax.jit
-            def fn(regs, pairs, mask):
-                a, b = regs[pairs[:, 0]], regs[pairs[:, 1]]
-                if method == "mle":
-                    est = intersection.mle_intersection(a, b, cfg, iters)
-                else:
-                    est = intersection.inclusion_exclusion(a, b, cfg)
-                return jnp.where(mask, est, 0.0)
-            return fn
-
-        key = ("intersection", ids.shape[0], method, iters)
-        est = self._plan(key, build)(self._regs, ids, mask)
-        out = np.asarray(est)[:n_real]
+        arr, scalar = plans.split_pairs(pairs, self.n)
+        out = self._intersection_presplit(arr, method, iters)
         return float(out[0]) if scalar else out
+
+    def _intersection_presplit(self, arr: np.ndarray, method: str,
+                               iters: int) -> np.ndarray:
+        """Batched intersection over pre-parsed, pre-validated (B, 2) pairs.
+
+        Serving hot path counterpart of :meth:`_union_presplit`.
+        """
+        ids, mask = plans.pad_pairs(arr)
+        fn = self._plan(
+            "intersection", bucket=(ids.shape[0],), extra=(method, iters),
+            builder=lambda: plans.build_intersection_plan(self.cfg, method,
+                                                          iters))
+        return np.asarray(fn(self._regs, ids, mask))[: arr.shape[0]]
 
     def neighborhood(self, t_max: int, schedule: str = "auto",
                      ) -> tuple[np.ndarray, np.ndarray]:
@@ -374,7 +375,8 @@ class SketchEngine(abc.ABC):
         the local backend.
         """
         self._require_edges("neighborhood")
-        est_fn = self._plan(("degrees",), lambda: jax.jit(self._estimate_rows))
+        est_fn = self._plan("degrees", builder=lambda: plans.
+                            build_degrees_plan(self.cfg, self.kernels))
         local = np.zeros((t_max, self.n), dtype=np.float64)
         glob = np.zeros((t_max,), dtype=np.float64)
         regs = self._regs

@@ -1,10 +1,12 @@
 """LocalEngine: single-device backend wrapping the core reference path.
 
-Accumulation and propagation go through ``repro.kernels.ops`` so the
-``impl`` selection ("ref" jnp oracles vs "pallas" kernels) applies to the
-hot paths; ingestion uses the donated ``ops.accumulate_donated`` entry
-(allocation-free block loop, DESIGN.md §3a); triangle queries reuse the
-``core.degreesketch`` reference implementations (DESIGN.md §3).
+Accumulation and propagation go through the engine's resolved
+:class:`~repro.kernels.registry.KernelSet` (capability-checked at open,
+selecting the "ref" jnp oracles or "pallas" kernels); ingestion uses the
+donated accumulate entry (allocation-free block loop, DESIGN.md §3a);
+triangle queries reuse the ``core.degreesketch`` reference
+implementations (DESIGN.md §3). Query plans come from the shared LRU
+plan cache (DESIGN.md §3b).
 """
 from __future__ import annotations
 
@@ -14,9 +16,9 @@ import numpy as np
 
 from repro.core import degreesketch as dsk, hll
 from repro.core.hll import HLLConfig
+from repro.engine import plans
 from repro.engine.base import SketchEngine, bucket
 from repro.graph import stream as gstream
-from repro.kernels import ops
 
 __all__ = ["LocalEngine"]
 
@@ -59,9 +61,9 @@ class LocalEngine(SketchEngine):
 
         Used by loaders and by workloads that build sketches directly via
         ``repro.core.hll`` (edge-free engines answer degrees/union/
-        intersection; neighborhood/triangles need ``edges``). The row
-        layout matches ``open``'s, so a checkpoint taken mid-stream
-        resumes ingestion bit-identically.
+        intersection; neighborhood/triangles need ``edges``, whose ids
+        are validated against [0, n)). The row layout matches ``open``'s,
+        so a checkpoint taken mid-stream resumes ingestion bit-identically.
         """
         regs = jnp.asarray(regs, dtype=jnp.uint8)
         n_pad = dsk.pad_vertices(max(n, regs.shape[0]), 8)
@@ -76,19 +78,20 @@ class LocalEngine(SketchEngine):
         """Insert both orientations of an edge block (scatter-max).
 
         Directed pairs are padded up to a power-of-two shape bucket and
-        pushed through ``ops.accumulate_donated`` — the panel buffer is
-        donated each step, and jax's jit cache keys on the bucketed block
-        shape, so a long stream reuses a handful of compiled programs.
+        pushed through the kernel set's donated accumulate — the panel
+        buffer is donated each step, and jax's jit cache keys on the
+        bucketed block shape, so a long stream reuses a handful of
+        compiled programs.
         """
         directed = np.concatenate([chunk, chunk[:, ::-1]], axis=0)
         cap = 2 * self.INGEST_BLOCK
         for s in range(0, len(directed), cap):
             sub = directed[s:s + cap]
             padded, mask = gstream.pad_block(sub, bucket(len(sub)))
-            self._regs = ops.accumulate_donated(
+            self._regs = self.kernels.accumulate_donated(
                 self._regs, jnp.asarray(padded[:, 0]),
                 jnp.asarray(padded[:, 1].astype(np.uint32)),
-                jnp.asarray(mask), cfg=self.cfg, impl=self.impl)
+                jnp.asarray(mask), cfg=self.cfg)
 
     def _place_rows(self, full: np.ndarray) -> jax.Array:
         """Single device: the row table goes up as one dense array."""
@@ -101,8 +104,8 @@ class LocalEngine(SketchEngine):
             dst = jnp.asarray(np.concatenate([e[:, 1], e[:, 0]]))
             self._prop_src_dst = (src, dst)
         src, dst = self._prop_src_dst
-        fn = self._plan(("propagate",), lambda: jax.jit(
-            lambda r, s, d: ops.propagate(r, s, d, impl=self.impl)))
+        fn = self._plan("propagate", builder=lambda: plans.
+                        build_propagate_plan(self.kernels))
         return fn(regs, src, dst)
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):

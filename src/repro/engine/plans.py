@@ -1,0 +1,351 @@
+"""Backend-independent query planning: normalization, bucketing, plan cache.
+
+A *query plan* is a jitted callable specialized to a (query kind, shape
+bucket, HLLConfig, kernel impl, backend) combination; this module (DESIGN.md
+§3b) owns everything about plans that is independent of any one engine:
+
+* **Input normalization** — :func:`normalize_sets` / :func:`normalize_pairs`
+  turn ragged client input into padded, masked, power-of-two-bucketed host
+  arrays, validating vertex ids against the engine's universe ``[0, n)``
+  (out-of-range ids raise ``ValueError`` like ``ingest`` does, instead of
+  silently clamping through a jnp gather).
+* **Shape bucketing** — :func:`bucket` rounds batch dimensions up to the
+  next power of two, so jittering client batch sizes reuse O(log max-batch)
+  compiled programs per query kind instead of retracing per call.
+* **Plan construction** — the ``build_*_plan`` builders close over nothing
+  engine-specific (config and a hashable :class:`~repro.kernels.registry.
+  KernelSet` only), which is what makes the cache shareable across engines.
+* **The shared cache** — :class:`PlanCache` is an LRU-bounded map from
+  :class:`PlanKey` to compiled plan, shared by every engine with identical
+  ``(cfg, impl, backend)`` through :func:`global_cache` (engines used to
+  each hold a private unbounded dict).
+
+Every plan body bumps a module-level *trace counter* when it is traced
+(python side effects run once per trace), so tests and the serving stats
+can assert "no retrace within a shape bucket" and "N clients served by
+O(log N) compiled programs" directly — see :func:`trace_counts`.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll, intersection
+
+__all__ = [
+    "bucket", "split_sets", "pad_sets", "split_pairs", "pad_pairs",
+    "normalize_sets", "normalize_pairs", "PlanKey",
+    "PlanCache", "global_cache", "trace_counts", "reset_trace_counts",
+    "record_trace", "build_degrees_plan", "build_union_plan",
+    "build_intersection_plan", "build_merge_plan", "build_propagate_plan",
+]
+
+
+def bucket(size: int, minimum: int = 8) -> int:
+    """Next power-of-two shape bucket (>= minimum) for plan caching."""
+    return max(minimum, 1 << max(int(size) - 1, 0).bit_length())
+
+
+# ------------------------------------------------------------ normalization
+def _validate_ids(arr: np.ndarray, n: int | None, query: str) -> None:
+    """Raise ValueError for vertex ids outside [0, n) — mirror of ingest.
+
+    Checked host-side *before* the int32 cast and the device gather: jnp
+    gathers clamp out-of-range indices, which would silently answer the
+    query for a different vertex.
+    """
+    if n is None or arr.size == 0:
+        return
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or hi >= n:
+        raise ValueError(
+            f"{query} got vertex ids [{lo}, {hi}] outside the engine's "
+            f"universe [0, {n}); jnp gathers would silently clamp them")
+
+
+def split_sets(vertex_sets, n: int | None = None,
+               ) -> tuple[list[np.ndarray], bool]:
+    """Parse union-query input into (list of 1-D int64 id arrays, scalar).
+
+    Accepts a single 1-D array of vertex ids (one set -> scalar result), a
+    list/tuple of 1-D arrays (ragged batch), or a 2-D array (rectangular
+    batch). Ids are validated against ``[0, n)`` when ``n`` is given. This
+    is the client-side half of :func:`normalize_sets`, split out so a
+    server can validate/parse per request and pad per coalesced batch.
+    """
+    if isinstance(vertex_sets, (list, tuple)):
+        sets = [np.asarray(s, dtype=np.int64).ravel() for s in vertex_sets]
+        scalar = False
+    else:
+        arr = np.asarray(vertex_sets)
+        if arr.ndim == 1:
+            sets, scalar = [arr.astype(np.int64)], True
+        elif arr.ndim == 2:
+            sets, scalar = list(arr.astype(np.int64)), False
+        else:
+            raise ValueError(f"vertex_sets must be 1-D, 2-D or a list "
+                             f"of 1-D arrays, got ndim={arr.ndim}")
+    if not sets:
+        raise ValueError("union_size needs at least one vertex set")
+    for s in sets:
+        _validate_ids(s, n, "union_size")
+    return sets, scalar
+
+
+def pad_sets(sets: list[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Pad parsed id sets to bucketed (ids int32[B, L], mask bool[B, L]).
+
+    Padding slots are masked out, never merged — a padding slot treated as
+    a real row would gather vertex 0's registers into the union.
+    """
+    longest = max((len(s) for s in sets), default=1)
+    ids = np.zeros((bucket(len(sets)), bucket(max(longest, 1))), np.int32)
+    mask = np.zeros(ids.shape, bool)
+    for i, s in enumerate(sets):
+        ids[i, : len(s)] = s
+        mask[i, : len(s)] = True
+    return ids, mask
+
+
+def normalize_sets(vertex_sets, n: int | None = None,
+                   ) -> tuple[np.ndarray, np.ndarray, int, bool]:
+    """Normalize union-query input to bucketed (ids, mask, n_real, scalar).
+
+    ``split_sets`` (parse + id validation) followed by ``pad_sets``
+    (power-of-two bucketing with validity masks).
+    """
+    sets, scalar = split_sets(vertex_sets, n)
+    ids, mask = pad_sets(sets)
+    return ids, mask, len(sets), scalar
+
+
+def split_pairs(pairs, n: int | None = None) -> tuple[np.ndarray, bool]:
+    """Parse pair-query input into (validated int64[B, 2] ids, scalar).
+
+    The client-side half of :func:`normalize_pairs` (mirror of
+    :func:`split_sets`): shape and id-range validation happens here, so a
+    server can reject a malformed request on the calling thread and pad
+    per coalesced batch.
+    """
+    arr = np.asarray(pairs, dtype=np.int64)
+    scalar = arr.ndim == 1
+    if scalar:
+        arr = arr[None]
+    if arr.ndim != 2 or arr.shape[1] != 2:
+        raise ValueError(f"pairs must have shape (B, 2), got {arr.shape}")
+    _validate_ids(arr, n, "intersection_size")
+    return arr, scalar
+
+
+def pad_pairs(arr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Pad parsed (B, 2) pairs to bucketed (ids int32[B', 2], mask[B'])."""
+    n_real = arr.shape[0]
+    out = np.zeros((bucket(n_real), 2), np.int32)
+    out[:n_real] = arr
+    mask = np.zeros((out.shape[0],), bool)
+    mask[:n_real] = True
+    return out, mask
+
+
+def normalize_pairs(pairs, n: int | None = None,
+                    ) -> tuple[np.ndarray, np.ndarray, int, bool]:
+    """Normalize pair-query input to bucketed ((B, 2) ids, mask, n, scalar).
+
+    Ids are validated against ``[0, n)`` when ``n`` is given (ValueError,
+    like ``ingest`` — never a silent clamp through the register gather).
+    """
+    arr, scalar = split_pairs(pairs, n)
+    out, mask = pad_pairs(arr)
+    return out, mask, arr.shape[0], scalar
+
+
+# ------------------------------------------------------------ trace counter
+_TRACE_LOCK = threading.Lock()
+_TRACE_COUNTS: dict[str, int] = {}
+
+
+def record_trace(query: str) -> None:
+    """Bump the trace counter for ``query`` (call from inside plan bodies).
+
+    Python side effects inside a jitted function body execute once per
+    trace, so this counts *compiled programs*, not calls — the quantity
+    the shape-bucketing design bounds to O(log batch) per query kind.
+    """
+    with _TRACE_LOCK:
+        _TRACE_COUNTS[query] = _TRACE_COUNTS.get(query, 0) + 1
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of {query kind: number of traces since the last reset}."""
+    with _TRACE_LOCK:
+        return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    """Zero the trace counters (test fixtures; serving stats windows)."""
+    with _TRACE_LOCK:
+        _TRACE_COUNTS.clear()
+
+
+# -------------------------------------------------------------- plan cache
+@dataclass(frozen=True)
+class PlanKey:
+    """Identity of a compiled query plan.
+
+    Two engines produce bit-identical answers from the same registers iff
+    they agree on all five coordinates, so the cache is shared exactly at
+    this granularity:
+
+    Attributes:
+      query: query kind ("degrees" | "union" | "intersection" | ...).
+      bucket: the padded/bucketed input shape the plan was built for.
+      cfg: the ``HLLConfig`` (hashable frozen dataclass) — or ``None``
+        for plans whose body never consults it.
+      impl: kernel implementation name ("ref" | "pallas" | ...).
+      backend: engine backend ("local" | "sharded").
+      extra: any further static specialization (method/iters for the MLE,
+        shard count for mesh-closed plans, ...).
+    """
+
+    query: str
+    bucket: tuple = ()
+    cfg: object = None
+    impl: str = "ref"
+    backend: str = "local"
+    extra: tuple = ()
+
+
+class PlanCache:
+    """LRU-bounded, thread-safe cache from :class:`PlanKey` to plan.
+
+    One instance (:func:`global_cache`) is shared by every engine in the
+    process, replacing the per-engine unbounded dicts: engines with
+    identical ``(cfg, impl, backend)`` reuse each other's compiled plans,
+    and the LRU bound keeps a long-lived serving process from accumulating
+    plans for shape buckets it no longer sees. Eviction drops the python
+    reference; XLA executables are garbage-collected with their jitted
+    wrapper.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self._maxsize = int(maxsize)
+        self._entries: OrderedDict[PlanKey, object] = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @property
+    def maxsize(self) -> int:
+        """The LRU bound (entries beyond it evict least-recently-used)."""
+        return self._maxsize
+
+    def __len__(self) -> int:
+        """Number of cached plans."""
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        """Whether ``key`` is cached (does not refresh LRU order)."""
+        with self._lock:
+            return key in self._entries
+
+    def get(self, key: PlanKey, builder):
+        """Return the plan for ``key``, building (and caching) on miss.
+
+        ``builder`` is a zero-arg callable producing the plan; it runs
+        under the cache lock (builders only *create* jitted callables —
+        compilation happens lazily at first call, outside the lock).
+        """
+        with self._lock:
+            fn = self._entries.get(key)
+            if fn is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return fn
+            self.misses += 1
+            fn = builder()
+            self._entries[key] = fn
+            while len(self._entries) > self._maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+            return fn
+
+    def clear(self) -> None:
+        """Drop every cached plan (stats counters are kept)."""
+        with self._lock:
+            self._entries.clear()
+
+    def stats(self) -> dict:
+        """Snapshot {hits, misses, evictions, size, maxsize}."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "size": len(self._entries),
+                    "maxsize": self._maxsize}
+
+
+_GLOBAL_CACHE = PlanCache()
+
+
+def global_cache() -> PlanCache:
+    """The process-wide plan cache engines share by default."""
+    return _GLOBAL_CACHE
+
+
+# ------------------------------------------------------------ plan builders
+def build_degrees_plan(cfg, kernels):
+    """Plan: per-row degree estimates d̃(x) over the full register table."""
+    def fn(regs):
+        record_trace("degrees")
+        return kernels.estimate_rows(regs, cfg)
+    return jax.jit(fn)
+
+
+def build_union_plan(cfg):
+    """Plan: batched |∪ N(x)| over bucketed (ids, mask) set panels."""
+    def fn(regs, ids, mask):
+        record_trace("union")
+        rows = jnp.where(mask[:, :, None], regs[ids], jnp.uint8(0))
+        return hll.estimate(jnp.max(rows, axis=1), cfg)
+    return jax.jit(fn)
+
+
+def build_intersection_plan(cfg, method: str, iters: int):
+    """Plan: batched T̃(xy) over bucketed (pairs, mask) panels.
+
+    ``method="mle"`` is Ertl's maximum-likelihood estimator; ``"ie"`` the
+    inclusion-exclusion baseline (Eq. 18). Both are static plan
+    coordinates (they change the traced program).
+    """
+    def fn(regs, pairs, mask):
+        record_trace("intersection")
+        a, b = regs[pairs[:, 0]], regs[pairs[:, 1]]
+        if method == "mle":
+            est = intersection.mle_intersection(a, b, cfg, iters)
+        else:
+            est = intersection.inclusion_exclusion(a, b, cfg)
+        return jnp.where(mask, est, 0.0)
+    return jax.jit(fn)
+
+
+def build_merge_plan():
+    """Plan: lane-wise register max with the left panel donated."""
+    def fn(mine, theirs):
+        record_trace("merge")
+        return hll.merge(mine, theirs)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def build_propagate_plan(kernels):
+    """Plan: one Algorithm 2 gather-max pass over a static edge routing."""
+    def fn(regs, src, dst):
+        record_trace("propagate")
+        return kernels.propagate(regs, src, dst)
+    return jax.jit(fn)

@@ -5,7 +5,9 @@ never thread ``(mesh, axis, plan, cfg, regs, ...)`` through free functions.
 The register table lives sharded over the mesh axis (block vertex
 partition f); shared queries (degrees, union, intersection) run on the
 global sharded array under jit, while propagation and heavy hitters use
-the shard_map schedules (DESIGN.md §2, §3).
+the shard_map schedules (DESIGN.md §2, §3). Jitted steps — including the
+shard_map programs built by ``sketch_dist`` — are cached through the
+shared query-plan cache with the shard count in the key (DESIGN.md §3b).
 
 Streaming (DESIGN.md §3a): the vertex partition is fixed at ``open`` time
 (``sd.vertex_partition`` is edge-independent), each ``ingest`` block is
@@ -17,7 +19,6 @@ edge list only when a propagation or triangle query needs it.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -43,7 +44,7 @@ class ShardedEngine(SketchEngine):
         self.axis = _AXIS
         self.shards = int(shards)
         self.v_loc = self.n_pad // self.shards
-        self._plan_cache = plan
+        self._dist_plan = plan
 
     # ------------------------------------------------------------- plan
     @property
@@ -55,15 +56,19 @@ class ShardedEngine(SketchEngine):
         matches the one fixed at ``open`` time by construction
         (``sd.vertex_partition``). Requires a tracked edge list.
         """
-        if self._plan_cache is None:
+        if self._dist_plan is None:
             edges = self._require_edges("the distributed routing plan")
-            self._plan_cache = sd.build_plan(edges, self.n, self.shards)
-        return self._plan_cache
+            self._dist_plan = sd.build_plan(edges, self.n, self.shards)
+        return self._dist_plan
 
     def _invalidate_edge_caches(self) -> None:
         """Ingest/merge moved the edge list: drop plan + propagate caches."""
         super()._invalidate_edge_caches()
-        self._plan_cache = None
+        self._dist_plan = None
+
+    def _plan_scope(self) -> tuple:
+        """Shard count distinguishes mesh-closed plans in the shared cache."""
+        return ("shards", self.shards)
 
     # ------------------------------------------------------ construction
     @staticmethod
@@ -135,9 +140,10 @@ class ShardedEngine(SketchEngine):
         ``bucket_by_owner`` expands the block to both directed orientations
         grouped by owner shard (Algorithm 1's Send context, host-side); the
         per-shard panels are padded to a common power-of-two edge capacity
-        (one compile per capacity bucket) and the register panel is donated
-        through the jitted shard_map, so the steady-state ingest loop
-        allocates only the small routed index arrays.
+        (one compile per capacity bucket, cached in the shared plan cache)
+        and the register panel is donated through the jitted shard_map, so
+        the steady-state ingest loop allocates only the small routed index
+        arrays.
         """
         per = gstream.bucket_by_owner(chunk, self.n_pad, self.shards)
         cap = bucket(max(max(len(p) for p in per), 1))
@@ -149,18 +155,18 @@ class ShardedEngine(SketchEngine):
             dst[s, :k] = p[:, 0] - s * self.v_loc
             key[s, :k] = p[:, 1].astype(np.uint32)
             msk[s, :k] = True
-        fn = self._plan(("ingest", cap), self._make_ingest_fn)
+        fn = self._plan("ingest", bucket=(cap,), builder=self._make_ingest_fn)
         sh = NamedSharding(self.mesh, P(_AXIS, None))
         self._regs = fn(self._regs, jax.device_put(dst, sh),
                         jax.device_put(key, sh), jax.device_put(msk, sh))
 
     def _make_ingest_fn(self):
         """Donated jitted shard_map accumulate step (per-capacity cached)."""
-        from repro.kernels import ops
+        kernels, cfg = self.kernels, self.cfg
 
         def body(regs_local, dst_local, key, mask):
-            return ops.accumulate(regs_local, dst_local[0], key[0], self.cfg,
-                                  mask=mask[0], impl=self.impl)
+            return kernels.accumulate(regs_local, dst_local[0], key[0], cfg,
+                                      mask=mask[0])
 
         f = sd._shard_map(
             body, mesh=self.mesh,

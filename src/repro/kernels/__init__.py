@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer (DESIGN.md §4, §9): Pallas TPU kernels for the paper's
+# hot spots + pure-jnp oracles with identical semantics (ref.py is the
+# contract). Implementations register (op, impl) entries in registry.py;
+# ops.py holds the padding/hashing glue and registers the built-in
+# "ref"/"pallas" impls. Engines resolve a capability-checked KernelSet
+# once at open/load via registry.resolve(impl, cfg).

@@ -1,11 +1,14 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Jitted public wrappers around the registered kernel implementations.
 
 Handles padding to block multiples, the padding-index parking conventions
-the kernels rely on, and impl selection:
+the kernels rely on, and impl selection through the ``kernels.registry``
+(the ``impl: str`` if/else dispatch this module used to hard-code is now
+data: ``ref`` and ``pallas`` are ordinary ``(op, impl)`` registrations):
 
-* ``impl="pallas"`` — pl.pallas_call kernels. On this CPU container they run
-  in interpret mode (the TPU lowering is the target; interpret executes the
-  same kernel body for correctness validation).
+* ``impl="pallas"`` — pl.pallas_call kernels. Off-TPU they run in
+  interpret mode (the TPU lowering is the target; interpret executes the
+  same kernel body for correctness validation). Interpret mode is decided
+  per call via ``registry.interpret_mode()``, not at import time.
 * ``impl="ref"``    — the pure-jnp oracles (XLA scatter/gather lowering).
 
 Core modules default to the ref path on CPU; the kernels are the TPU
@@ -20,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.hashing import bucket_rho
 from repro.core.hll import HLLConfig, alpha
-from repro.kernels import ref
+from repro.kernels import ref, registry
 from repro.kernels.hll_accumulate import hll_accumulate as _acc_kernel
 from repro.kernels.hll_propagate import hll_propagate as _prop_kernel
 from repro.kernels.hll_estimate import hll_estimate_stats as _est_kernel
@@ -28,8 +31,6 @@ from repro.kernels.ertl_stats import ertl_stats as _ertl_kernel
 
 __all__ = ["accumulate", "accumulate_donated", "propagate", "estimate",
            "ertl_stats"]
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
@@ -40,6 +41,21 @@ def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
     return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
 
 
+# --------------------------------------------------------------- accumulate
+@registry.register("accumulate", "ref")
+def _accumulate_ref(regs, rows, buckets, rhos, *, edge_block=512):
+    return ref.hll_accumulate_ref(regs, rows, buckets, rhos)
+
+
+@registry.register("accumulate", "pallas")
+def _accumulate_pallas(regs, rows, buckets, rhos, *, edge_block=512):
+    rows = _pad_to(rows.astype(jnp.int32), edge_block, 0)
+    buckets = _pad_to(buckets.astype(jnp.int32), edge_block, 0)
+    rhos = _pad_to(rhos, edge_block, 0)  # rho 0 => no-op
+    return _acc_kernel(regs, rows, buckets, rhos, edge_block=edge_block,
+                       interpret=registry.interpret_mode())
+
+
 def accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
                cfg: HLLConfig, mask: jax.Array | None = None,
                impl: str = "pallas", edge_block: int = 512) -> jax.Array:
@@ -48,13 +64,8 @@ def accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
     if mask is not None:
         rhos = jnp.where(mask, rhos, jnp.uint8(0))
         rows = jnp.where(mask, rows, 0)
-    if impl == "ref":
-        return ref.hll_accumulate_ref(regs, rows, buckets, rhos)
-    rows = _pad_to(rows.astype(jnp.int32), edge_block, 0)
-    buckets = _pad_to(buckets.astype(jnp.int32), edge_block, 0)
-    rhos = _pad_to(rhos, edge_block, 0)  # rho 0 => no-op
-    return _acc_kernel(regs, rows, buckets, rhos, edge_block=edge_block,
-                       interpret=_INTERPRET)
+    fn = registry.lookup("accumulate", impl)
+    return fn(regs, rows, buckets, rhos, edge_block=edge_block)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
@@ -78,6 +89,21 @@ def accumulate_donated(regs: jax.Array, rows: jax.Array, keys: jax.Array,
                       edge_block=edge_block)
 
 
+# ---------------------------------------------------------------- propagate
+@registry.register("propagate", "ref")
+def _propagate_ref(regs, src, dst, mask, *, edge_block=512):
+    m = jnp.ones(src.shape, bool) if mask is None else mask
+    return ref.hll_propagate_ref(regs, src, dst, m)
+
+
+@registry.register("propagate", "pallas")
+def _propagate_pallas(regs, src, dst, mask, *, edge_block=512):
+    src = _pad_to(src.astype(jnp.int32), edge_block, 0)
+    dst = _pad_to(dst.astype(jnp.int32), edge_block, 0)
+    return _prop_kernel(regs, src, dst, edge_block=edge_block,
+                        interpret=registry.interpret_mode())
+
+
 def propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
               mask: jax.Array | None = None, impl: str = "pallas",
               edge_block: int = 512) -> jax.Array:
@@ -85,39 +111,59 @@ def propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
     if mask is not None:
         src = jnp.where(mask, src, 0)
         dst = jnp.where(mask, dst, 0)  # (0,0) self-merge is a no-op
-    if impl == "ref":
-        m = jnp.ones(src.shape, bool) if mask is None else mask
-        return ref.hll_propagate_ref(regs, src, dst, m)
-    src = _pad_to(src.astype(jnp.int32), edge_block, 0)
-    dst = _pad_to(dst.astype(jnp.int32), edge_block, 0)
-    return _prop_kernel(regs, src, dst, edge_block=edge_block,
-                        interpret=_INTERPRET)
+    fn = registry.lookup("propagate", impl)
+    return fn(regs, src, dst, mask, edge_block=edge_block)
+
+
+# ----------------------------------------------------------------- estimate
+@registry.register("estimate", "ref")
+def _estimate_stats_ref(regs, *, row_block=256):
+    return ref.hll_estimate_ref(regs, 0.0)  # alpha unused in the stats form
+
+
+@registry.register("estimate", "pallas")
+def _estimate_stats_pallas(regs, *, row_block=256):
+    n = regs.shape[0]
+    padded = _pad_to(regs, row_block, 0)
+    stats = _est_kernel(padded, row_block=row_block,
+                        interpret=registry.interpret_mode())
+    return stats[:n, 0], stats[:n, 1]
 
 
 def estimate(regs: jax.Array, cfg: HLLConfig, impl: str = "pallas",
              row_block: int = 256) -> jax.Array:
-    """Flajolet + linear-counting estimate per sketch row (uint8[N, r])."""
-    n = regs.shape[0]
-    if impl == "ref":
-        s, z = ref.hll_estimate_ref(regs, alpha(cfg.r))
-    else:
-        padded = _pad_to(regs, row_block, 0)
-        stats = _est_kernel(padded, row_block=row_block, interpret=_INTERPRET)
-        s, z = stats[:n, 0], stats[:n, 1]
+    """Flajolet + linear-counting estimate per sketch row (uint8[N, r]).
+
+    The fused kernels produce the (s, z) harmonic statistics; the final
+    Flajolet/linear-counting combination happens here (O(N) scalar work).
+    Other estimators are handled above this seam — see
+    ``registry.KernelSet.estimate_rows`` for the explicit fallback.
+    """
+    s, z = registry.lookup("estimate", impl)(regs, row_block=row_block)
     r = float(cfg.r)
     raw = alpha(cfg.r) * r * r / s
     lin = r * jnp.log(r / jnp.maximum(z, 1.0))
     return jnp.where((raw <= 2.5 * r) & (z > 0), lin, raw)
 
 
-def ertl_stats(a: jax.Array, b: jax.Array, cfg: HLLConfig,
-               impl: str = "pallas", pair_block: int = 128) -> jax.Array:
-    """Eq. (19) statistics for paired sketch rows uint8[E, r]."""
-    if impl == "ref":
-        return ref.ertl_stats_ref(a, b, cfg.q)
+# --------------------------------------------------------------- ertl_stats
+@registry.register("ertl_stats", "ref")
+def _ertl_stats_ref(a, b, q, *, pair_block=128):
+    return ref.ertl_stats_ref(a, b, q)
+
+
+@registry.register("ertl_stats", "pallas")
+def _ertl_stats_pallas(a, b, q, *, pair_block=128):
     e = a.shape[0]
     a2 = _pad_to(a, pair_block, 0)
     b2 = _pad_to(b, pair_block, 0)
-    out = _ertl_kernel(a2, b2, cfg.q, pair_block=pair_block,
-                       interpret=_INTERPRET)
+    out = _ertl_kernel(a2, b2, q, pair_block=pair_block,
+                       interpret=registry.interpret_mode())
     return out[:e]
+
+
+def ertl_stats(a: jax.Array, b: jax.Array, cfg: HLLConfig,
+               impl: str = "pallas", pair_block: int = 128) -> jax.Array:
+    """Eq. (19) statistics for paired sketch rows uint8[E, r]."""
+    fn = registry.lookup("ertl_stats", impl)
+    return fn(a, b, cfg.q, pair_block=pair_block)

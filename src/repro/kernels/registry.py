@@ -1,0 +1,183 @@
+"""Kernel registry: ``(op, impl)`` entries resolved into capability-checked sets.
+
+Replaces the stringly-typed ``impl: str`` if/else dispatch that used to
+live inline in ``kernels/ops.py``. Implementations *register* themselves
+under an ``(op, impl)`` pair (``ref`` and ``pallas`` are ordinary
+registrations in ``ops.py``, not special cases); callers resolve entries
+through :func:`lookup`, whose error names the registered alternatives
+instead of silently falling through a branch.
+
+Engines resolve a whole :class:`KernelSet` once at open/load time via
+:func:`resolve`: a missing op fails *up front* with the registered impls
+listed, and known capability gaps are recorded explicitly — e.g. the
+fused estimate kernel only implements the Flajolet s/z combination, so a
+``beta``-estimator config gets ``estimate_fallback`` set (and
+:meth:`KernelSet.estimate_rows` routes through the jnp reference) rather
+than silently branching per call inside the engine.
+
+Pallas interpret mode (off-TPU execution of the kernel bodies) is
+resolved per call via :func:`interpret_mode`, never at import time: a
+test or launcher that forces a platform after this module is imported
+still gets the right mode (the old module-level ``_INTERPRET`` constant
+froze the backend seen at import).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+__all__ = ["OPS", "register", "lookup", "impls", "resolve", "KernelSet",
+           "interpret_mode"]
+
+#: op names a complete kernel implementation provides (the §4 hot paths).
+OPS = ("accumulate", "propagate", "estimate", "ertl_stats")
+
+_REGISTRY: dict[tuple[str, str], object] = {}
+_BOOTSTRAPPED = False
+
+
+def _ensure_builtins() -> None:
+    """Import ``kernels.ops`` once so the built-in impls self-register."""
+    global _BOOTSTRAPPED
+    if not _BOOTSTRAPPED:
+        from repro.kernels import ops  # noqa: F401  (registers ref/pallas)
+        _BOOTSTRAPPED = True  # only after success: a failed import must
+        # resurface on retry, not be masked by an empty-registry error
+
+
+def interpret_mode() -> bool:
+    """Whether Pallas kernels should run in interpret mode (i.e. off-TPU).
+
+    Evaluated at call time — ``jax.default_backend()`` is consulted when a
+    kernel actually runs (trace time), so forcing a platform after import
+    (tests, ``JAX_PLATFORMS``, launchers) is honored.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def register(op: str, impl: str):
+    """Decorator registering ``fn`` as the ``impl`` implementation of ``op``.
+
+    Re-registering the same ``(op, impl)`` with a different function is an
+    error — impl names are the unit of selection and must stay unambiguous.
+    """
+    def deco(fn):
+        key = (op, impl)
+        if key in _REGISTRY and _REGISTRY[key] is not fn:
+            raise ValueError(f"kernel {key} is already registered")
+        _REGISTRY[key] = fn
+        return fn
+    return deco
+
+
+def lookup(op: str, impl: str):
+    """Resolve one ``(op, impl)`` entry; the error lists registered impls."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[(op, impl)]
+    except KeyError:
+        raise KeyError(
+            f"no kernel registered for op={op!r} impl={impl!r}; registered "
+            f"impls for {op!r}: {impls(op)}") from None
+
+
+def impls(op: str) -> list[str]:
+    """Sorted impl names registered for ``op``."""
+    _ensure_builtins()
+    return sorted(i for (o, i) in _REGISTRY if o == op)
+
+
+@dataclass(frozen=True)
+class KernelSet:
+    """A capability-checked bundle of kernels for one ``impl``.
+
+    Resolved once per engine (at open/load) by :func:`resolve`; hashable
+    and value-comparable, so it can ride inside plan-cache keys. Methods
+    delegate to the ``kernels.ops`` glue (padding, hashing, donation)
+    with ``impl`` fixed.
+
+    Attributes:
+      impl: registered implementation name ("ref" | "pallas" | ...).
+      estimator: the HLLConfig estimator this set was resolved for.
+      estimate_fallback: ``None`` when the fused estimate kernel serves
+        ``estimator``; otherwise the human-readable reason row estimation
+        routes through the jnp reference instead (explicit, not silent).
+    """
+
+    impl: str
+    estimator: str = "flajolet"
+    estimate_fallback: str | None = None
+
+    def accumulate(self, regs, rows, keys, cfg, mask=None, edge_block=512):
+        """Algorithm 1 INSERT over an edge block (see ``ops.accumulate``)."""
+        from repro.kernels import ops
+        return ops.accumulate(regs, rows, keys, cfg, mask=mask,
+                              impl=self.impl, edge_block=edge_block)
+
+    def accumulate_donated(self, regs, rows, keys, mask, *, cfg,
+                           edge_block=512):
+        """Donating accumulate — the ingestion hot path entry.
+
+        The register panel is donated through the jit boundary (see
+        ``ops.accumulate_donated``); the caller's ``regs`` reference is
+        consumed.
+        """
+        from repro.kernels import ops
+        return ops.accumulate_donated(regs, rows, keys, mask, cfg=cfg,
+                                      impl=self.impl, edge_block=edge_block)
+
+    def propagate(self, regs, src, dst, mask=None, edge_block=512):
+        """One Algorithm 2 merge pass (see ``ops.propagate``)."""
+        from repro.kernels import ops
+        return ops.propagate(regs, src, dst, mask=mask, impl=self.impl,
+                             edge_block=edge_block)
+
+    def ertl_stats(self, a, b, cfg, pair_block=128):
+        """Eq. (19) pair statistics (see ``ops.ertl_stats``)."""
+        from repro.kernels import ops
+        return ops.ertl_stats(a, b, cfg, impl=self.impl,
+                              pair_block=pair_block)
+
+    def estimate_rows(self, regs, cfg):
+        """Per-row cardinality estimates honoring ``cfg.estimator``.
+
+        Routes through the fused s/z kernel when it supports the
+        estimator; otherwise takes the fallback recorded at resolve time
+        (``estimate_fallback`` says why) through the jnp reference. The
+        decision was made once, at :func:`resolve` — this method never
+        silently picks a path the engine did not sign up for.
+        """
+        from repro.core import hll
+        from repro.kernels import ops
+        if self.estimate_fallback is not None:
+            return hll.estimate(regs, cfg)
+        return ops.estimate(regs, cfg, impl=self.impl)
+
+
+def resolve(impl: str, cfg=None) -> KernelSet:
+    """Capability-check ``impl`` against every op and bundle a KernelSet.
+
+    Raises ``ValueError`` (naming the registered impls) if ``impl`` does
+    not provide every op in :data:`OPS` — engines call this at open/load
+    so an unknown or partial impl fails before any accumulation work.
+    ``cfg`` (an ``HLLConfig``) determines estimator capability: the fused
+    estimate kernel implements only the Flajolet combination, so other
+    estimators record an explicit fallback reason.
+    """
+    _ensure_builtins()
+    missing = [op for op in OPS if (op, impl) not in _REGISTRY]
+    if missing:
+        known = sorted({i for (_, i) in _REGISTRY})
+        raise ValueError(
+            f"impl must be a fully registered kernel implementation; "
+            f"{impl!r} lacks {missing} (registered impls: {known})")
+    estimator = getattr(cfg, "estimator", "flajolet") if cfg else "flajolet"
+    fallback = None
+    if estimator != "flajolet":
+        fallback = (
+            f"fused estimate kernel implements only the Flajolet s/z "
+            f"combination; estimator {estimator!r} uses the jnp reference "
+            f"(repro.core.hll.estimate)")
+    return KernelSet(impl=impl, estimator=estimator,
+                     estimate_fallback=fallback)

@@ -1,0 +1,25 @@
+"""Serving frontend: concurrent sketch queries over one ``SketchEngine``.
+
+``repro.serve.QueryServer`` wraps any engine (local or sharded) and turns
+it into the paper's §1 picture of a *persistent query engine under load*:
+many concurrent clients issue ``degrees`` / ``union_size`` /
+``intersection_size`` / ``triangle_heavy_hitters`` requests (and ingest
+blocks) against one accumulated register panel; the server coalesces them
+into micro-batches that ride the shape-bucketed query plans (DESIGN.md
+§3b), so jittering client batch sizes are served by O(log max-batch)
+compiled programs, bit-identical to direct engine calls.
+
+    from repro import engine, serve
+
+    with serve.QueryServer(engine.load("/ckpt/web-graph")) as srv:
+        deg  = srv.degrees()
+        u    = srv.union_size([[0, 1, 2]])        # safe from any thread
+        srv.ingest(next_block)                    # epoch barrier
+        print(srv.stats()["union"]["p99_ms"])
+
+CLI: ``python -m repro.launch.sketch_serve`` drives a multi-client load
+against a freshly built sketch and prints latency/throughput stats.
+"""
+from repro.serve.server import QueryServer, ServerClosed
+
+__all__ = ["QueryServer", "ServerClosed"]

@@ -1,0 +1,363 @@
+"""QueryServer: micro-batched, epoch-guarded serving over a SketchEngine.
+
+Design (DESIGN.md §3b):
+
+* **One worker thread owns the engine.** Every engine touch — query plans
+  *and* donating ingest steps — happens on the worker, so a query can
+  never run concurrently with the donation that invalidates the register
+  panel. The ingest/query *epoch* (one tick per ingest/merge barrier)
+  records which accumulated state served each request.
+* **Micro-batch coalescing.** Pending requests of the same kind are
+  drained together and fused into one engine call: union sets concatenate
+  into one ragged batch, intersection pairs concatenate per
+  ``(method, iters)`` group, degree requests dedupe into a single table
+  scan, triangle requests dedupe per ``(k, mode, iters)``. The fused
+  batch rides the power-of-two shape buckets of the plan layer, so N
+  clients with jittering batch sizes are served by O(log max-batch)
+  compiled programs per query kind — and every per-request answer is
+  bit-identical to a direct engine call, because batched rows are
+  computed independently under the padding masks.
+* **Client calls are plain blocking methods**, safe from any thread;
+  errors raised by a request (bad ids, edge-free engine, ...) propagate
+  to the calling client only, never poisoning the rest of a batch.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.intersection import _NEWTON_ITERS
+from repro.engine import plans
+
+__all__ = ["QueryServer", "ServerClosed"]
+
+_LATENCY_WINDOW = 8192  # per-kind latency samples kept for the stats
+
+
+class ServerClosed(RuntimeError):
+    """Raised by client calls submitted after :meth:`QueryServer.close`."""
+
+
+@dataclass
+class _Request:
+    """One client request in flight (internal)."""
+
+    kind: str
+    payload: tuple
+    done: threading.Event = field(default_factory=threading.Event)
+    result: object = None
+    error: BaseException | None = None
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    epoch: int = -1  # ingest epoch whose panel served this request
+
+    def wait(self):
+        """Block until served; re-raise the request's error in the client."""
+        self.done.wait()
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class QueryServer:
+    """Serve concurrent queries (and ingest blocks) over one engine.
+
+    Wraps any :class:`~repro.engine.base.SketchEngine`; the engine must
+    not be touched directly while the server owns it (every access goes
+    through the single worker thread — that serialization is what makes
+    donated ingestion safe under concurrent reads). Use as a context
+    manager or call :meth:`close` when done.
+    """
+
+    def __init__(self, engine, *, latency_window: int = _LATENCY_WINDOW):
+        self._eng = engine
+        self._cv = threading.Condition()
+        self._queue: deque[_Request] = deque()
+        self._paused = False
+        self._closed = False
+        self._epoch = 0
+        self._t0 = None  # first submit (throughput window start)
+        self._t_last = None
+        self._stats: dict[str, dict] = {}
+        self._latency_window = int(latency_window)
+        self._trace_base = plans.trace_counts()  # delta baseline for stats
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="sketch-query-server")
+        self._worker.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self):
+        """Context-manager entry: the server is already running."""
+        return self
+
+    def __exit__(self, *exc):
+        """Context-manager exit: drain pending requests and stop."""
+        self.close()
+        return False
+
+    def close(self) -> None:
+        """Stop accepting requests, drain the queue, join the worker."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._paused = False
+            self._cv.notify_all()
+        self._worker.join()
+
+    @property
+    def engine(self):
+        """The wrapped engine (read-only access; queries go via methods)."""
+        return self._eng
+
+    @property
+    def epoch(self) -> int:
+        """Ingest/query epoch: bumps once per served ingest barrier.
+
+        A query served at epoch e saw the register panel produced by the
+        first e ingest barriers and none of the later ones — the worker
+        serializes donation against reads, so no request ever observes a
+        donated-away panel.
+        """
+        with self._cv:
+            return self._epoch
+
+    def pause(self) -> None:
+        """Hold the worker: requests queue up but are not served.
+
+        With the worker held, concurrent submissions accumulate and the
+        next :meth:`resume` drains them as maximal micro-batches — used by
+        tests (and benchmarks) to make coalescing deterministic.
+        """
+        with self._cv:
+            self._paused = True
+
+    def resume(self) -> None:
+        """Release a :meth:`pause`; the worker drains the queued batch."""
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------- clients
+    def degrees(self) -> np.ndarray:
+        """d̃(x) for every vertex (coalesced: one table scan per batch)."""
+        return self._submit("degrees", ()).wait()
+
+    def union_size(self, vertex_sets):
+        """|∪ N(x)| — same contract as ``SketchEngine.union_size``.
+
+        Input is parsed and validated (ids against [0, n)) on the calling
+        thread, so malformed requests raise here; well-formed ones are
+        coalesced with concurrent union queries into one ragged batch.
+        """
+        sets, scalar = plans.split_sets(vertex_sets, self._eng.n)
+        return self._submit("union", (sets, scalar)).wait()
+
+    def intersection_size(self, pairs, *, method: str = "mle",
+                          iters: int = _NEWTON_ITERS):
+        """Batched T̃(xy) — same contract as the engine method.
+
+        Requests sharing ``(method, iters)`` coalesce into one fused pair
+        batch; others are served in the same drain, separately compiled.
+        """
+        if method not in ("mle", "ie"):
+            raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        arr, scalar = plans.split_pairs(pairs, self._eng.n)
+        return self._submit("intersection",
+                            (arr, scalar, method, iters)).wait()
+
+    def triangle_heavy_hitters(self, k: int, *, mode: str = "edge",
+                               iters: int = 30):
+        """Algorithms 4/5 — identical requests in a batch are deduped."""
+        return self._submit("triangle", (int(k), mode, int(iters))).wait()
+
+    def ingest(self, edge_block) -> int:
+        """Fold an edge block into the sketch; returns the new epoch.
+
+        Served as a *barrier* on the worker: queries queued before the
+        block observe the pre-ingest panel, queries queued after observe
+        the post-ingest panel, and the donation can never invalidate a
+        read in flight.
+        """
+        block = np.asarray(edge_block)
+        return self._submit("ingest", (block,)).wait()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Serving statistics snapshot.
+
+        Per query kind: ``requests``, ``batches`` (engine calls actually
+        made — coalescing makes this smaller), ``max_coalesced`` and
+        latency percentiles ``p50_ms`` / ``p99_ms``. Top level adds the
+        request rate over the active window (``requests_per_sec``), the
+        current ``epoch``, and the plan layer's compiled-program counters
+        (``plan_traces`` — programs traced since this server was created,
+        the O(log N) quantity — plus the shared-cache hit/miss stats).
+        """
+        with self._cv:
+            out: dict = {"epoch": self._epoch}
+            total = 0
+            for kind, s in self._stats.items():
+                lat = np.asarray(s["latencies"], dtype=np.float64)
+                out[kind] = {
+                    "requests": s["requests"],
+                    "batches": s["batches"],
+                    "max_coalesced": s["max_coalesced"],
+                    "p50_ms": float(np.percentile(lat, 50) * 1e3)
+                    if lat.size else None,
+                    "p99_ms": float(np.percentile(lat, 99) * 1e3)
+                    if lat.size else None,
+                }
+                total += s["requests"]
+            span = ((self._t_last or 0.0) - (self._t0 or 0.0))
+            out["requests_total"] = total
+            out["requests_per_sec"] = (total / span) if span > 0 else None
+        now_traces = plans.trace_counts()
+        out["plan_traces"] = {  # programs compiled since THIS server opened
+            k: v - self._trace_base.get(k, 0) for k, v in now_traces.items()
+            if v - self._trace_base.get(k, 0) > 0}
+        out["plan_cache"] = self._eng.plan_cache.stats()
+        return out
+
+    # -------------------------------------------------------------- worker
+    def _submit(self, kind: str, payload: tuple) -> _Request:
+        req = _Request(kind=kind, payload=payload)
+        req.t_submit = time.monotonic()
+        with self._cv:
+            if self._closed:
+                raise ServerClosed("QueryServer is closed")
+            if self._t0 is None:
+                self._t0 = req.t_submit
+            self._queue.append(req)
+            self._cv.notify_all()
+        return req
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while (not self._queue or self._paused) and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._queue:
+                    return
+                batch = list(self._queue)
+                self._queue.clear()
+            try:
+                self._serve(batch)
+            except BaseException as e:  # noqa: BLE001 — never hang clients
+                for r in batch:
+                    if not r.done.is_set():
+                        if r.error is None:
+                            r.error = e
+                        r.done.set()
+
+    def _serve(self, batch: list[_Request]) -> None:
+        """Serve one drained batch: coalesce contiguous same-kind runs.
+
+        Arrival order is preserved across kinds (an ingest between two
+        query runs stays between them — that is the epoch barrier).
+        """
+        i = 0
+        while i < len(batch):
+            kind = batch[i].kind
+            j = i
+            while j < len(batch) and batch[j].kind == kind:
+                j += 1
+            run = batch[i:j]
+            serve = getattr(self, f"_serve_{kind}")
+            serve(run)
+            now = time.monotonic()
+            with self._cv:
+                self._t_last = now
+                s = self._stats.setdefault(kind, {
+                    "requests": 0, "batches": 0, "max_coalesced": 0,
+                    "latencies": deque(maxlen=self._latency_window)})
+                s["requests"] += len(run)
+                s["batches"] += 1
+                s["max_coalesced"] = max(s["max_coalesced"], len(run))
+                for r in run:
+                    r.t_done = now
+                    s["latencies"].append(now - r.t_submit)
+            for r in run:
+                r.done.set()
+            i = j
+
+    def _fail(self, run: list[_Request], err: BaseException) -> None:
+        for r in run:
+            if not r.done.is_set() and r.error is None and r.result is None:
+                r.error = err
+
+    def _serve_degrees(self, run: list[_Request]) -> None:
+        try:
+            out = self._eng.degrees()
+        except Exception as e:  # noqa: BLE001 — propagate to clients
+            self._fail(run, e)
+            return
+        for r in run:
+            r.result, r.epoch = out, self._epoch
+
+    def _serve_union(self, run: list[_Request]) -> None:
+        all_sets: list[np.ndarray] = []
+        for r in run:
+            all_sets.extend(r.payload[0])
+        try:
+            # pre-split entry: ids were validated on the client threads
+            est = self._eng._union_presplit(all_sets)
+        except Exception as e:  # noqa: BLE001
+            self._fail(run, e)
+            return
+        pos = 0
+        for r in run:
+            sets, scalar = r.payload
+            chunk = est[pos:pos + len(sets)]
+            pos += len(sets)
+            r.result = float(chunk[0]) if scalar else chunk
+            r.epoch = self._epoch
+
+    def _serve_intersection(self, run: list[_Request]) -> None:
+        groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+        for r in run:
+            groups.setdefault(r.payload[2:], []).append(r)
+        for (method, iters), reqs in groups.items():
+            pairs = np.concatenate([r.payload[0] for r in reqs], axis=0)
+            try:
+                # pre-split entry: pairs were validated on client threads
+                est = self._eng._intersection_presplit(pairs, method, iters)
+            except Exception as e:  # noqa: BLE001
+                self._fail(reqs, e)
+                continue
+            pos = 0
+            for r in reqs:
+                arr, scalar = r.payload[0], r.payload[1]
+                chunk = est[pos:pos + len(arr)]
+                pos += len(arr)
+                r.result = float(chunk[0]) if scalar else chunk
+                r.epoch = self._epoch
+
+    def _serve_triangle(self, run: list[_Request]) -> None:
+        groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+        for r in run:
+            groups.setdefault(r.payload, []).append(r)
+        for (k, mode, iters), reqs in groups.items():
+            try:
+                out = self._eng.triangle_heavy_hitters(k, mode=mode,
+                                                       iters=iters)
+            except Exception as e:  # noqa: BLE001
+                self._fail(reqs, e)
+                continue
+            for r in reqs:
+                r.result, r.epoch = out, self._epoch
+
+    def _serve_ingest(self, run: list[_Request]) -> None:
+        for r in run:
+            try:
+                self._eng.ingest(r.payload[0])
+            except Exception as e:  # noqa: BLE001
+                r.error = e
+                continue
+            with self._cv:
+                self._epoch += 1
+                r.result = r.epoch = self._epoch

@@ -1,9 +1,10 @@
-"""Doc-coverage gate for the public ``repro.engine`` surface.
+"""Doc-coverage gate for the public ``repro.engine``/``repro.serve`` surface.
 
 Every public module, class, method and function under ``repro.engine``
-must carry a docstring — this is the same contract CI enforces with
-``interrogate --fail-under 100 src/repro/engine``, duplicated here with
-stdlib ``inspect`` so the tier-1 run needs no extra dependency.
+and ``repro.serve`` must carry a docstring — this is the same contract CI
+enforces with ``interrogate --fail-under 100 src/repro/engine
+src/repro/serve``, duplicated here with stdlib ``inspect`` so the tier-1
+run needs no extra dependency.
 """
 import importlib
 import inspect
@@ -12,10 +13,13 @@ import pkgutil
 import pytest
 
 import repro.engine
+import repro.serve
 
-MODULES = ["repro.engine"] + [
+MODULES = ["repro.engine", "repro.serve"] + [
     f"repro.engine.{m.name}"
-    for m in pkgutil.iter_modules(repro.engine.__path__)]
+    for m in pkgutil.iter_modules(repro.engine.__path__)] + [
+    f"repro.serve.{m.name}"
+    for m in pkgutil.iter_modules(repro.serve.__path__)]
 
 
 def _public_members(obj, modname):

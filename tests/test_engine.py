@@ -146,16 +146,19 @@ def test_intersection_matches_reference(graph, local_eng):
     assert ie.shape == (len(pairs),)
 
 
-def test_query_plan_cache_buckets(graph, local_eng):
+def test_query_plan_cache_buckets(graph):
     """Same shape bucket -> one cached plan; no per-call retrace."""
-    before = len(local_eng._plans)
-    local_eng.intersection_size(graph[0][:9])
-    local_eng.intersection_size(graph[0][:12])   # same bucket of 16
-    mid = len(local_eng._plans)
-    local_eng.intersection_size(graph[0][:30])   # bucket of 32
-    after = len(local_eng._plans)
-    assert mid == before + 1
-    assert after == mid + 1
+    from repro.engine import plans as qplans
+    edges, n = graph
+    eng = engine.build(edges, n, CFG, backend="local")
+    eng._plan_cache = cache = qplans.PlanCache(maxsize=8)  # isolated cache
+    eng.intersection_size(edges[:9])
+    eng.intersection_size(edges[:12])   # same bucket of 16 -> cache hit
+    mid = len(cache)
+    eng.intersection_size(edges[:30])   # bucket of 32 -> new plan
+    assert mid == 1
+    assert len(cache) == 2
+    assert cache.stats()["hits"] == 1
 
 
 def test_save_load_roundtrip_local(graph, local_eng, tmp_path):
@@ -250,6 +253,15 @@ with tempfile.TemporaryDirectory() as d:
     se2 = engine.load(d)
     assert se2.shards == 8
     assert np.array_equal(se2.degrees(), se.degrees()), "roundtrip"
+
+# the saved shard count must restore even when it differs from the
+# visible device count (shards is recorded in the manifest, not inferred)
+s2 = engine.build(edges, n, cfg, backend="sharded", shards=2)
+with tempfile.TemporaryDirectory() as d:
+    s2.save(d)
+    s2b = engine.load(d)
+    assert s2b.shards == 2, f"saved shards=2, loaded shards={s2b.shards}"
+    assert np.array_equal(s2b.degrees(), s2.degrees()), "roundtrip2"
 
 # streaming: blocked ingest == one-shot build, bit-identical on 8 shards
 st = engine.open(n, cfg, backend="sharded", shards=8)

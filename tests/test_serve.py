@@ -1,0 +1,227 @@
+"""QueryServer: coalescing, bit-identity, ingest/query epochs.
+
+Acceptance contract (ISSUE 3):
+(a) N concurrent mixed-size query clients are served with O(log N)
+    compiled programs (asserted via the plan layer's trace counters);
+(b) served answers are bit-identical to direct engine calls, on both
+    backends — micro-batched rows are computed independently under the
+    padding masks, so batch composition cannot leak between requests;
+(c) queries interleaved with ingest blocks never crash or observe a
+    donated-away register panel (the worker serializes donation against
+    reads; the epoch records which panel answered).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+from repro.graph import generators as gen
+from repro.serve import QueryServer, ServerClosed
+
+CFG = HLLConfig(p=8)
+BACKENDS = ["local", "sharded"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+def _open(n, backend):
+    return engine.open(n, CFG, backend=backend,
+                       shards=1 if backend == "sharded" else None)
+
+
+def _build(edges, n, backend):
+    return _open(n, backend).ingest(edges)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_served_answers_bit_identical_to_direct(graph, backend):
+    edges, n = graph
+    direct = _build(edges, n, backend)
+    with QueryServer(_build(edges, n, backend)) as srv:
+        np.testing.assert_array_equal(srv.degrees(), direct.degrees())
+        sets = [np.array([0, 1, 2]), np.array([n - 1]), np.arange(20)]
+        np.testing.assert_array_equal(srv.union_size(sets),
+                                      direct.union_size(sets))
+        assert srv.union_size(np.array([4, 5])) == \
+            direct.union_size(np.array([4, 5]))  # scalar form
+        pairs = edges[:13]
+        np.testing.assert_array_equal(srv.intersection_size(pairs),
+                                      direct.intersection_size(pairs))
+        t_s = srv.triangle_heavy_hitters(k=5)
+        t_d = direct.triangle_heavy_hitters(k=5)
+        assert t_s[0] == t_d[0]
+        np.testing.assert_array_equal(t_s[1], t_d[1])
+        np.testing.assert_array_equal(t_s[2], t_d[2])
+
+
+def test_coalesced_batch_bit_identical_per_request(graph):
+    """Requests fused into one micro-batch answer exactly like solo calls."""
+    edges, n = graph
+    direct = _build(edges, n, "local")
+    with QueryServer(_build(edges, n, "local")) as srv:
+        srv.pause()
+        sets_a = [np.arange(5), np.array([n - 1])]
+        sets_b = [np.arange(30)]  # different length -> shared padding bucket
+        ra = srv._submit("union", plans.split_sets(sets_a, n))
+        rb = srv._submit("union", plans.split_sets(sets_b, n))
+        pa = edges[:3].astype(np.int64)
+        pb = edges[3:20].astype(np.int64)
+        ia = srv._submit("intersection", (pa, False, "mle", 50))
+        ib = srv._submit("intersection", (pb, False, "mle", 50))
+        srv.resume()
+        np.testing.assert_array_equal(ra.wait(), direct.union_size(sets_a))
+        np.testing.assert_array_equal(rb.wait(), direct.union_size(sets_b))
+        np.testing.assert_array_equal(ia.wait(),
+                                      direct.intersection_size(pa))
+        np.testing.assert_array_equal(ib.wait(),
+                                      direct.intersection_size(pb))
+        stats = srv.stats()
+    assert stats["union"]["batches"] == 1       # 2 requests, 1 engine call
+    assert stats["union"]["max_coalesced"] == 2
+    assert stats["intersection"]["batches"] == 1
+
+
+def test_concurrent_mixed_clients_log_bound_programs(graph):
+    """The acceptance bound: N clients, jittering batches, O(log N) programs."""
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng._plan_cache = plans.PlanCache(maxsize=64)  # isolate compile counting
+    plans.reset_trace_counts()
+    n_clients, per_client = 8, 6
+    errors: list = []
+    direct = _build(edges, n, "local")
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(per_client):
+                size = int(rng.integers(1, 33))  # jittering batch sizes
+                idx = rng.integers(0, len(edges), size=size)
+                got = srv.intersection_size(edges[idx])
+                np.testing.assert_array_equal(
+                    got, direct.intersection_size(edges[idx]))
+                sets = [rng.integers(0, n, size=3) for _ in range(size)]
+                np.testing.assert_array_equal(srv.union_size(sets),
+                                              direct.union_size(sets))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    with QueryServer(eng) as srv:
+        threads = [threading.Thread(target=client, args=(100 + i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.stats()
+    assert not errors, errors
+    traces = plans.trace_counts()
+    # worst case coalesced batch: 8 clients * 32 rows = 256 -> buckets
+    # {8..256}: 6 programs. The bound is O(log(N * max_batch)).
+    bound = int(np.log2(n_clients * 32)) + 2
+    assert traces["intersection"] <= bound, traces
+    assert traces["union"] <= bound, traces
+    assert stats["requests_total"] == n_clients * per_client * 2
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_queries_interleaved_with_ingest(graph, backend):
+    """Clients query while blocks stream in: no crash, no stale panel."""
+    edges, n = graph
+    srv_eng = _open(n, backend)
+    srv_eng.ingest(edges[: len(edges) // 4])
+    full = _build(edges, n, backend)
+    errors: list = []
+    stop = threading.Event()
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                srv.degrees()
+                idx = rng.integers(0, len(edges), size=int(rng.integers(1, 9)))
+                srv.intersection_size(edges[idx])
+                srv.union_size([rng.integers(0, n, size=4)])
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    with QueryServer(srv_eng) as srv:
+        threads = [threading.Thread(target=client, args=(7 + i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        rest = edges[len(edges) // 4:]
+        step = max(1, len(rest) // 6)
+        for s in range(0, len(rest), step):  # live ingest under query load
+            srv.ingest(rest[s:s + step])
+        stop.set()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        assert srv.epoch >= 6
+        # after the last barrier the server answers like the full build
+        np.testing.assert_array_equal(srv.degrees(), full.degrees())
+
+
+def test_epoch_barrier_orders_reads(graph):
+    """Queries before/after an ingest barrier see exactly that panel."""
+    edges, n = graph
+    half = len(edges) // 2
+    half_eng = _build(edges[:half], n, "local")
+    full_eng = _build(edges, n, "local")
+    with QueryServer(_build(edges[:half], n, "local")) as srv:
+        srv.pause()
+        before = srv._submit("degrees", ())
+        barrier = srv._submit("ingest", (edges[half:],))
+        after = srv._submit("degrees", ())
+        srv.resume()
+        np.testing.assert_array_equal(before.wait(), half_eng.degrees())
+        assert barrier.wait() == 1
+        np.testing.assert_array_equal(after.wait(), full_eng.degrees())
+    assert before.epoch == 0 and after.epoch == 1
+
+
+def test_request_errors_propagate_to_caller_only(graph):
+    edges, n = graph
+    with QueryServer(_build(edges, n, "local")) as srv:
+        with pytest.raises(ValueError, match="universe"):
+            srv.union_size([np.array([n + 5])])     # client-side validation
+        with pytest.raises(ValueError, match="universe"):
+            srv.ingest(np.array([[0, n]]))          # worker-side validation
+        with pytest.raises(ValueError, match="method"):
+            srv.intersection_size(edges[:2], method="nope")
+        # the server keeps serving afterwards
+        assert srv.degrees().shape == (n,)
+
+
+def test_worker_side_error_does_not_poison_batch(graph):
+    """An edge-free engine fails triangle requests but serves the rest."""
+    edges, n = graph
+    built = _build(edges, n, "local")
+    bare = engine.LocalEngine.from_regs(
+        np.asarray(built.regs)[:n], n, CFG)  # no edges -> no replay queries
+    with QueryServer(bare) as srv:
+        srv.pause()
+        tri = srv._submit("triangle", (5, "edge", 30))
+        deg = srv._submit("degrees", ())
+        srv.resume()
+        with pytest.raises(ValueError, match="edge stream"):
+            tri.wait()
+        np.testing.assert_array_equal(deg.wait(), built.degrees())
+
+
+def test_closed_server_rejects_requests(graph):
+    edges, n = graph
+    srv = QueryServer(_build(edges[:50], n, "local"))
+    assert srv.degrees().shape == (n,)
+    srv.close()
+    with pytest.raises(ServerClosed):
+        srv.degrees()
+    srv.close()  # idempotent

@@ -1,36 +1,102 @@
-"""Paper Figure 1: MRE of local t-neighborhood estimates, t <= 5, p = 8.
+"""Neighborhood queries: paper Figure 1 accuracy + t-hop panel-cache perf.
 
-Expected result (paper §5): MRE small at t=1 (small sets -> near-exact via
-linear counting), grows toward the theoretical HLL standard error
-(1.04/sqrt(256) ~ 0.065) as the balls saturate, then levels off.
+Part 1 (paper §5, Figure 1): MRE of local t-neighborhood estimates,
+t <= 5, p = 8 — small at t=1 (linear counting), growing toward the HLL
+standard error (1.04/sqrt(256) ~ 0.065) as the balls saturate.
+
+Part 2 (DESIGN.md §3c): serving latency of ``neighborhood(t_max)`` cold
+(panels materialized, t_max-1 propagate passes) vs cached (pure estimate
+over the materialized D^t panels, zero passes), both direct and through
+``repro.serve.QueryServer``. Writes ``BENCH_neighborhood.json`` so the
+panel-cache perf trajectory is recorded across PRs.
+
+    PYTHONPATH=src:. python benchmarks/bench_neighborhood.py
 """
 from __future__ import annotations
 
+import json
+import os
+import time
+
+import jax
 import numpy as np
 
 from benchmarks.common import emit, graph_suite, timer
 from repro import engine
 from repro.core import hll
 from repro.core.hll import HLLConfig
+from repro.engine import plans
 from repro.graph import exact
+from repro.serve import QueryServer
+
+T_MAX = 5
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_neighborhood.json")
 
 
-def run(small: bool = True) -> None:
+def _accuracy(small: bool) -> None:
+    """Figure 1: MRE of Ñ(x, t) vs BFS truth over the graph suite."""
     cfg = HLLConfig(p=8)
-    t_max = 5
     for name, edges in graph_suite(small).items():
         n = int(edges.max()) + 1
-        truth = exact.neighborhood_truth(n, edges, t_max)
+        truth = exact.neighborhood_truth(n, edges, T_MAX)
         eng = engine.build(edges, n, cfg, backend="local")
-        (local, glob), secs = timer(lambda: eng.neighborhood(t_max))
-        for t in range(t_max):
+        (local, glob), secs = timer(lambda: eng.neighborhood(T_MAX))
+        for t in range(T_MAX):
             tv = truth[t].astype(float)
             m = tv > 0
             mre = float(np.mean(np.abs(local[t][m] - tv[m]) / tv[m]))
             emit(f"fig1_neighborhood_mre/{name}/t={t+1}",
-                 secs * 1e6 / t_max,
+                 secs * 1e6 / T_MAX,
                  f"mre={mre:.4f};bound={hll.rel_std(8):.4f};"
                  f"global_rel={abs(glob[t]-tv.sum())/tv.sum():.4f}")
+
+
+def _panel_latency(small: bool) -> list[dict]:
+    """Cold vs cached-panel neighborhood latency, direct and served."""
+    cfg = HLLConfig(p=8)
+    records = []
+    for name, edges in graph_suite(small).items():
+        n = int(edges.max()) + 1
+        eng = engine.build(edges, n, cfg, backend="local")
+        eng.neighborhood(1)  # compile the estimate plan outside the timing
+        plans.reset_event_counts()
+        t0 = time.monotonic()
+        eng.neighborhood(T_MAX)  # cold: materializes T_MAX-1 panels
+        cold = time.monotonic() - t0
+        passes_cold = plans.event_counts().get("propagate_pass", 0)
+        t0 = time.monotonic()
+        eng.neighborhood(T_MAX)  # cached: pure estimate over panels
+        warm = time.monotonic() - t0
+        passes_warm = plans.event_counts().get(
+            "propagate_pass", 0) - passes_cold
+        with QueryServer(eng) as srv:
+            t0 = time.monotonic()
+            srv.neighborhood(T_MAX)
+            served = time.monotonic() - t0
+        emit(f"panel_cache/{name}/t_max={T_MAX}", cold * 1e6,
+             f"cached_us={warm * 1e6:.0f};served_us={served * 1e6:.0f};"
+             f"speedup={cold / max(warm, 1e-9):.1f}x")
+        records.append({
+            "graph": name, "n": n, "m": int(len(edges)), "t_max": T_MAX,
+            "cold_seconds": cold, "cached_seconds": warm,
+            "served_cached_seconds": served,
+            "propagate_passes_cold": passes_cold,
+            "propagate_passes_cached": passes_warm,
+            "speedup": cold / max(warm, 1e-9),
+        })
+        assert passes_warm == 0, "panel cache missed on an unchanged engine"
+    return records
+
+
+def run(small: bool = True) -> None:
+    """Figure 1 accuracy sweep + panel-cache latency; prints CSV + JSON."""
+    _accuracy(small)
+    records = _panel_latency(small)
+    payload = {"benchmark": "neighborhood_panels", "p": 8, "t_max": T_MAX,
+               "device": jax.devices()[0].platform, "results": records}
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {OUT} ({len(records)} records)")
 
 
 if __name__ == "__main__":

@@ -152,7 +152,11 @@ def triangle_heavy_hitters(sketch: DegreeSketch, edges: np.ndarray, k: int,
     """Algorithm 4: (T̃ global, top-k values, top-k edges).
 
     T̃ = (1/3) Σ T̃(xy) (Eq. 11; undirected edges each counted once).
-    The max-heap H̃_k is realized as top_k (DESIGN.md §2).
+    The max-heap H̃_k is realized as top_k (DESIGN.md §2). Returns at most
+    ``min(k, len(edges))`` entries, all real edges: the candidate array is
+    never padded here, so — unlike the distributed path, which masks
+    padding lanes to ``-inf`` — no fabricated ids can leak for ``k``
+    beyond the candidate count (audited with the dist padding-leak fix).
     """
     est = edge_triangle_estimates(sketch, edges, block=block, iters=iters)
     total = float(est.sum()) / 3.0
@@ -178,7 +182,13 @@ def vertex_triangle_estimates(sketch: DegreeSketch, edges: np.ndarray,
 def vertex_heavy_hitters(sketch: DegreeSketch, edges: np.ndarray, k: int,
                          block: int = 2048, iters: int = 30,
                          ) -> tuple[float, np.ndarray, np.ndarray]:
-    """Algorithm 5: (T̃ global, top-k values, top-k vertices)."""
+    """Algorithm 5: (T̃ global, top-k values, top-k vertices).
+
+    Returns at most ``min(k, n)`` entries with vertex ids < n: the
+    accumulator covers only true vertex rows (no table padding), so ids
+    >= n cannot surface for any ``k`` (audited with the distributed
+    path's padded-row ``-inf`` masking fix).
+    """
     edge_est = edge_triangle_estimates(sketch, edges, block=block, iters=iters)
     total = float(edge_est.sum()) / 3.0
     acc = np.zeros(sketch.n, dtype=np.float64)

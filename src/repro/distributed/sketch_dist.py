@@ -112,70 +112,88 @@ def vertex_partition(n: int, num_shards: int,
     return n_pad, n_pad // num_shards
 
 
+def _group_by_owner(owner: np.ndarray, num_groups: int,
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Sort-based grouping of row indices by owner group.
+
+    Returns ``(order, group_sorted, within, e_cap)``: ``order`` sorts rows
+    stably by owner (original order preserved within a group),
+    ``group_sorted`` / ``within`` are each sorted row's (group, slot)
+    coordinates in a padded ``[num_groups, e_cap]`` panel, and ``e_cap``
+    is the per-group capacity (max group size rounded up to 8).
+
+    One O(rows log rows) sort replaces the per-group boolean-scan loop
+    (``[rows[owner == g] for g in range(num_groups)]``), which is
+    O(num_groups * rows) — quadratic at a production 256-shard mesh.
+    """
+    order = np.argsort(owner, kind="stable")
+    group_sorted = owner[order]
+    counts = np.bincount(group_sorted, minlength=num_groups)
+    e_cap = _round_up(max(int(counts.max(initial=0)), 1), 8)
+    starts = np.zeros(num_groups, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    within = np.arange(len(owner)) - starts[group_sorted]
+    return order, group_sorted, within, e_cap
+
+
 def build_plan(edges: np.ndarray, n: int, num_shards: int,
                pad_multiple: int = 8) -> DistPlan:
-    """Route edges to owner shards (Algorithm 1 Send context, host-side)."""
+    """Route edges to owner shards (Algorithm 1 Send context, host-side).
+
+    Every grouping (accumulation, ring, all_gather, triangle) is built by
+    the same sort-based scheme (:func:`_group_by_owner`) — O(edges log
+    edges) total, shard-count independent; the old per-shard boolean-scan
+    loops were O(shards * edges).
+    """
     n_pad, v_loc = vertex_partition(n, num_shards, pad_multiple)
     directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
     own = directed[:, 0] // v_loc
 
-    # --- accumulation blocks ---
-    per = [directed[own == s] for s in range(num_shards)]
-    e_acc = _round_up(max(max((len(p) for p in per), default=1), 1), 8)
+    # --- accumulation blocks (grouped by owner shard of dst) ---
+    order, s_own, within, e_acc = _group_by_owner(own, num_shards)
+    d_sorted = directed[order]
     acc_dst = np.zeros((num_shards, e_acc), np.int32)
     acc_key = np.zeros((num_shards, e_acc), np.uint32)
     acc_mask = np.zeros((num_shards, e_acc), bool)
-    for s, p in enumerate(per):
-        k = len(p)
-        acc_dst[s, :k] = p[:, 0] - s * v_loc
-        acc_key[s, :k] = p[:, 1].astype(np.uint32)
-        acc_mask[s, :k] = True
+    acc_dst[s_own, within] = d_sorted[:, 0] - s_own.astype(np.int32) * v_loc
+    acc_key[s_own, within] = d_sorted[:, 1].astype(np.uint32)
+    acc_mask[s_own, within] = True
 
-    # --- ring blocks: group by (dst shard, src block), vectorized ---
-    # (a python loop over S^2 groups is quadratic in shards; at the
-    # production 256-shard mesh that is 65k boolean scans — sort instead)
+    # --- ring blocks: group by (dst shard, src block) ---
     src_block = directed[:, 1] // v_loc
     key = own.astype(np.int64) * num_shards + src_block
-    order = np.argsort(key, kind="stable")
-    key_sorted = key[order]
-    counts = np.bincount(key_sorted, minlength=num_shards * num_shards)
-    e_ring = _round_up(max(int(counts.max()), 1), 8)
-    starts = np.zeros(num_shards * num_shards, np.int64)
-    np.cumsum(counts[:-1], out=starts[1:])
-    within = np.arange(len(directed)) - starts[key_sorted]
+    r_order, key_sorted, r_within, e_ring = _group_by_owner(
+        key, num_shards * num_shards)
     ring_dst = np.zeros((num_shards, num_shards, e_ring), np.int32)
     ring_src = np.zeros((num_shards, num_shards, e_ring), np.int32)
     ring_mask = np.zeros((num_shards, num_shards, e_ring), bool)
     s_idx = key_sorted // num_shards
     b_idx = key_sorted % num_shards
-    d_sorted = directed[order]
-    ring_dst[s_idx, b_idx, within] = d_sorted[:, 0] - s_idx.astype(np.int32) * v_loc
-    ring_src[s_idx, b_idx, within] = d_sorted[:, 1] - b_idx.astype(np.int32) * v_loc
-    ring_mask[s_idx, b_idx, within] = True
+    r_sorted = directed[r_order]
+    ring_dst[s_idx, b_idx, r_within] = \
+        r_sorted[:, 0] - s_idx.astype(np.int32) * v_loc
+    ring_src[s_idx, b_idx, r_within] = \
+        r_sorted[:, 1] - b_idx.astype(np.int32) * v_loc
+    ring_mask[s_idx, b_idx, r_within] = True
 
-    # --- flat (all_gather) blocks ---
-    e_flat = e_acc
-    flat_src = np.zeros((num_shards, e_flat), np.int32)
-    flat_dst = np.zeros((num_shards, e_flat), np.int32)
-    flat_mask = np.zeros((num_shards, e_flat), bool)
-    for s, p in enumerate(per):
-        k = len(p)
-        flat_dst[s, :k] = p[:, 0] - s * v_loc
-        flat_src[s, :k] = p[:, 1]
-        flat_mask[s, :k] = True
+    # --- flat (all_gather) blocks: same grouping as accumulation ---
+    flat_src = np.zeros((num_shards, e_acc), np.int32)
+    flat_dst = np.zeros((num_shards, e_acc), np.int32)
+    flat_mask = np.zeros((num_shards, e_acc), bool)
+    flat_dst[s_own, within] = d_sorted[:, 0] - s_own.astype(np.int32) * v_loc
+    flat_src[s_own, within] = d_sorted[:, 1]
+    flat_mask[s_own, within] = True
 
     # --- triangle edge partition (undirected, owner of u) ---
     own_u = edges[:, 0] // v_loc
-    tri_per = [edges[own_u == s] for s in range(num_shards)]
-    e_tri = _round_up(max(max((len(p) for p in tri_per), default=1), 1), 8)
+    t_order, t_own, t_within, e_tri = _group_by_owner(own_u, num_shards)
+    t_sorted = edges[t_order]
     tri_u = np.zeros((num_shards, e_tri), np.int32)
     tri_v = np.zeros((num_shards, e_tri), np.int32)
     tri_mask = np.zeros((num_shards, e_tri), bool)
-    for s, p in enumerate(tri_per):
-        k = len(p)
-        tri_u[s, :k] = p[:, 0]
-        tri_v[s, :k] = p[:, 1]
-        tri_mask[s, :k] = True
+    tri_u[t_own, t_within] = t_sorted[:, 0]
+    tri_v[t_own, t_within] = t_sorted[:, 1]
+    tri_mask[t_own, t_within] = True
 
     return DistPlan(
         n=n, n_pad=n_pad, v_loc=v_loc, num_shards=num_shards,
@@ -330,10 +348,18 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
     Candidate ids travel through the top-k all_gather as int32 alongside the
     float32 values — packing ids into float32 lanes silently corrupts vertex
     ids above 2^24 (the float32 integer-exactness limit).
+
+    Padded lanes (edge mode: routing slots past a shard's real candidate
+    count; vertex mode: register rows >= n) score ``-inf`` in the top-k
+    inputs, never ``0`` — a zero-scored padding lane would win whenever
+    ``k`` exceeds the real candidate count and surface a fabricated
+    ``(0, 0)`` edge or an out-of-universe vertex id. The non-finite
+    sentinels are trimmed after the global top-k, so the returned arrays
+    hold at most ``min(k, #real candidates)`` entries, all real.
     """
 
-    n_pad, v_loc = plan.n_pad, plan.v_loc  # scalars only: the cached body
-    # must not pin the plan's O(edges) routing arrays in the LRU
+    n, n_pad, v_loc = plan.n, plan.n_pad, plan.v_loc  # scalars only: the
+    # cached body must not pin the plan's O(edges) routing arrays in the LRU
 
     def _body(regs_local, u, v, mask):
         full = jax.lax.all_gather(regs_local, axis, tiled=True)
@@ -344,7 +370,8 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
         total = jax.lax.psum(jnp.sum(est), axis) / 3.0
         if mode == "edge":
             kk = min(k, est.shape[0])
-            vals, idx = jax.lax.top_k(est, kk)
+            cand = jnp.where(mask[0], est, -jnp.inf)  # padding never wins
+            vals, idx = jax.lax.top_k(cand, kk)
             ids = jnp.stack([u[0][idx], v[0][idx]], axis=-1)  # int32 (kk, 2)
             allv = jax.lax.all_gather(vals, axis, tiled=True)  # (S*kk,)
             alli = jax.lax.all_gather(ids, axis, tiled=True)   # (S*kk, 2)
@@ -356,11 +383,13 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
         acc = acc.at[u[0]].add(est).at[v[0]].add(est)
         acc_local = jax.lax.psum_scatter(acc, axis, scatter_dimension=0,
                                          tiled=True) / 2.0
+        vid = (jnp.arange(acc_local.shape[0], dtype=jnp.int32)
+               + jax.lax.axis_index(axis) * v_loc)
+        acc_local = jnp.where(vid < n, acc_local, -jnp.inf)  # padded rows
         kk = min(k, acc_local.shape[0])
         vals, idx = jax.lax.top_k(acc_local, kk)
-        vid = idx + jax.lax.axis_index(axis) * v_loc  # int32 (kk,)
         allv = jax.lax.all_gather(vals, axis, tiled=True)
-        alli = jax.lax.all_gather(vid, axis, tiled=True)
+        alli = jax.lax.all_gather(vid[idx], axis, tiled=True)
         gvals, gidx = jax.lax.top_k(allv, min(k, allv.shape[0]))
         return total, gvals, alli[gidx]
 
@@ -373,11 +402,14 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
 
     f = _jit_cached(
         "dist_triangle_heavy_hitters",
-        (plan.n_pad, plan.num_shards, plan.tri_u.shape[1]),
+        (plan.n, plan.n_pad, plan.num_shards, plan.tri_u.shape[1]),
         cfg, "ref", (axis, k, iters, mode), build)
     total, vals, ids = f(
         regs,
         jax.device_put(plan.tri_u, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.tri_v, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.tri_mask, _shard_spec(mesh, axis, None)))
-    return float(total), np.asarray(vals), np.asarray(ids).astype(np.int64)
+    vals = np.asarray(vals)
+    ids = np.asarray(ids).astype(np.int64)
+    keep = np.isfinite(vals)  # trim the -inf padding sentinels
+    return float(total), vals[keep], ids[keep]

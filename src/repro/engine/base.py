@@ -22,7 +22,11 @@ Queries answered through one typed, batched API:
 * ``degrees()``                        — d̃(x) for all x (Algorithm 1 output)
 * ``union_size(vertex_sets)``          — batched |∪ N(x)| (§6)
 * ``intersection_size(pairs)``         — batched |N(x) ∩ N(y)| (Eq. 10)
-* ``neighborhood(t_max, schedule=...)``— Algorithm 2
+* ``neighborhood(t_max, schedule=...)``— Algorithm 2, served from the
+  t-hop panel cache (DESIGN.md §3c): materialized ``D^t`` panels keyed by
+  ``(version, schedule)``, extended incrementally, invalidated by the
+  ingest/merge version bump — a repeat on an unchanged engine runs zero
+  propagate passes
 * ``triangle_heavy_hitters(k, mode=)`` — Algorithms 4/5
 
 Query planning lives one layer down (DESIGN.md §3b,
@@ -43,6 +47,8 @@ that can keep ingesting where the saved one stopped (DESIGN.md §3, §8).
 from __future__ import annotations
 
 import abc
+import operator
+from dataclasses import dataclass, field
 
 import jax
 import numpy as np
@@ -52,9 +58,46 @@ from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import plans
 from repro.kernels import registry
 
-__all__ = ["SketchEngine", "bucket"]
+__all__ = ["SketchEngine", "bucket", "validate_t_max"]
 
 ENGINE_FORMAT = "degreesketch-engine-v1"
+
+#: Algorithm 2 schedules every backend accepts ("auto" resolves per
+#: backend; the local backend runs one dataflow but still validates).
+SCHEDULES = ("auto", "ring", "allgather")
+
+
+def validate_t_max(t_max) -> int:
+    """Validate a neighborhood horizon: an integer >= 1, returned as int.
+
+    Shared by ``SketchEngine.neighborhood`` and the serving frontend so
+    malformed requests fail on the calling thread with the same message
+    (``t_max <= 0`` used to return empty arrays silently).
+    """
+    try:
+        t = operator.index(t_max)
+    except TypeError:
+        raise ValueError(
+            f"t_max must be an integer >= 1, got {t_max!r}") from None
+    if t < 1:
+        raise ValueError(f"t_max must be >= 1, got {t}")
+    return t
+
+
+@dataclass
+class _PanelSet:
+    """Materialized D^t register panels for one (version, schedule) key.
+
+    ``panels[i]`` is D^{i+1}: ``panels[0]`` is the engine's accumulated
+    t=1 table itself, each later entry one more Algorithm 2 pass over it
+    (DESIGN.md §3c). The set is valid only while the engine's ``version``
+    matches ``version`` — ingest/merge donate the register buffer and bump
+    the version, so a stale set is dropped, never served.
+    """
+
+    version: int
+    schedule: str
+    panels: list = field(default_factory=list)
 
 # Normalization/bucketing moved to repro.engine.plans (DESIGN.md §3b);
 # re-exported here for callers that imported them from the engine core.
@@ -82,6 +125,12 @@ class SketchEngine(abc.ABC):
     #: how callers chunk the stream.
     INGEST_BLOCK = 1 << 15
 
+    #: memory bound of the t-hop panel cache (DESIGN.md §3c): at most this
+    #: many materialized D^t panels are retained (~MAX_CACHED_PANELS *
+    #: n_pad * r bytes). ``neighborhood(t_max)`` beyond the bound computes
+    #: the deeper panels transiently without caching them.
+    MAX_CACHED_PANELS = 8
+
     def __init__(self, regs: jax.Array, n: int, cfg: HLLConfig,
                  edges: np.ndarray | None, impl: str = "ref",
                  plan_cache: plans.PlanCache | None = None):
@@ -91,18 +140,22 @@ class SketchEngine(abc.ABC):
         self.cfg = cfg
         self.impl = impl
         if edges is not None:
-            edges = np.ascontiguousarray(edges, dtype=np.int32)
-            if len(edges):
-                lo, hi = int(edges.min()), int(edges.max())
+            raw = np.asarray(edges)
+            plans.require_integer_ids(raw, "edges")
+            if len(raw):  # range-check before the int32 cast (no wrapping)
+                lo, hi = int(raw.min()), int(raw.max())
                 if lo < 0 or hi >= self.n:
                     raise ValueError(
                         f"edges contain vertex ids [{lo}, {hi}] outside the "
                         f"engine's universe [0, {self.n})")
+            edges = np.ascontiguousarray(raw, dtype=np.int32)
         self._edges0 = edges
         self._edge_chunks: list[np.ndarray] = []
         self._plan_cache = plan_cache or plans.global_cache()
         self._version = 0
-        self._prop_src_dst: tuple[jax.Array, jax.Array] | None = None
+        self._prop_routing: tuple[jax.Array, jax.Array, jax.Array] | None = \
+            None
+        self._panel_set: _PanelSet | None = None
 
     # ------------------------------------------------------------- state
     @property
@@ -202,6 +255,7 @@ class SketchEngine(abc.ABC):
                 f"edge_block must have shape (k, 2), got {raw.shape}")
         if raw.shape[0] == 0:
             return self
+        plans.require_integer_ids(raw, "edge_block vertex ids")
         lo, hi = int(raw.min()), int(raw.max())  # before the int32 cast:
         if lo < 0 or hi >= self.n:               # ids >= 2^31 must not wrap
             raise ValueError(
@@ -275,8 +329,16 @@ class SketchEngine(abc.ABC):
         return self
 
     def _invalidate_edge_caches(self) -> None:
-        """Drop caches derived from the edge list (after ingest/merge)."""
-        self._prop_src_dst = None
+        """Drop caches derived from the edge list or register panel.
+
+        Called after every ingest/merge: the propagate routing may cover
+        new edges, and the materialized t-hop panels were computed from
+        the pre-donation register table — the panel set is keyed by
+        :attr:`version` so a stale set could never be *served*, but
+        dropping it here frees its device memory immediately.
+        """
+        self._prop_routing = None
+        self._panel_set = None
 
     # ----------------------------------------------------- plan caching
     def _plan_scope(self) -> tuple:
@@ -364,6 +426,62 @@ class SketchEngine(abc.ABC):
                                                           iters))
         return np.asarray(fn(self._regs, ids, mask))[: arr.shape[0]]
 
+    # ------------------------------------------------- t-hop panel cache
+    def _canonical_schedule(self, schedule: str) -> str:
+        """Validate ``schedule`` and return the panel-cache key it maps to.
+
+        Raises ``ValueError`` for unknown schedules on *every* backend
+        (the local backend used to silently ignore them). Backends that
+        run one dataflow regardless collapse all schedules onto one key,
+        so semantically identical panel sets are cached once.
+        """
+        if schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {SCHEDULES}, got {schedule!r}")
+        return "ring" if schedule == "auto" else schedule
+
+    @property
+    def panels_cached(self) -> int:
+        """Materialized D^t panels currently cached (0 <= · <= t seen).
+
+        Counts the cached set for the engine's *current* version only —
+        after ingest/merge this is 0 until the next ``neighborhood`` call
+        rematerializes (DESIGN.md §3c).
+        """
+        ps = self._panel_set
+        if ps is None or ps.version != self._version:
+            return 0
+        return len(ps.panels)
+
+    def _panels_up_to(self, t_max: int, sched: str) -> list:
+        """The D^1..D^{t_max} register panels under schedule ``sched``.
+
+        Serves from the cached :class:`_PanelSet` when its
+        ``(version, schedule)`` key matches, extending it incrementally:
+        ``t_max=5`` after a cached ``t_max=3`` runs exactly passes 4-5.
+        On a fully cached horizon zero propagate passes execute (the
+        claim ``plans.event_counts()["propagate_pass"]`` asserts). Panels
+        beyond :attr:`MAX_CACHED_PANELS` are computed but not retained —
+        the cache's memory bound.
+        """
+        ps = self._panel_set
+        if ps is None or ps.version != self._version or ps.schedule != sched:
+            ps = _PanelSet(version=self._version, schedule=sched,
+                           panels=[self._regs])
+            self._panel_set = ps
+        while len(ps.panels) < min(t_max, self.MAX_CACHED_PANELS):
+            ps.panels.append(self._propagate_pass(ps.panels[-1], sched))
+        out = list(ps.panels[:t_max])
+        while len(out) < t_max:  # beyond the memory bound: transient
+            out.append(self._propagate_pass(out[-1], sched))
+        return out
+
+    def _propagate_pass(self, regs: jax.Array, schedule: str) -> jax.Array:
+        """One counted Algorithm 2 pass (the only propagate entry point)."""
+        out = self._propagate(regs, schedule)
+        plans.record_event("propagate_pass")
+        return out
+
     def neighborhood(self, t_max: int, schedule: str = "auto",
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Algorithm 2: t-neighborhood sizes for t = 1..t_max.
@@ -371,18 +489,24 @@ class SketchEngine(abc.ABC):
         Returns (Ñ(x,t) float64[t_max, n], Ñ(t) float64[t_max]). The
         engine's own registers are not mutated — the accumulated t=1 table
         stays queryable afterwards. ``schedule`` selects the distributed
-        dataflow ("ring" | "allgather"; "auto" = ring) and is ignored by
-        the local backend.
+        dataflow ("ring" | "allgather"; "auto" = ring); the local backend
+        validates it but runs its single dataflow either way. ``t_max``
+        must be an integer >= 1 (``ValueError`` otherwise).
+
+        The D^t panels are materialized through the t-hop panel cache
+        (DESIGN.md §3c): repeating the query on an unchanged engine is a
+        pure estimate over cached panels (zero propagate passes), a larger
+        ``t_max`` extends the cached set incrementally, and ingest/merge
+        invalidate it via the :attr:`version` bump.
         """
+        t_max = validate_t_max(t_max)
+        sched = self._canonical_schedule(schedule)
         self._require_edges("neighborhood")
         est_fn = self._plan("degrees", builder=lambda: plans.
                             build_degrees_plan(self.cfg, self.kernels))
         local = np.zeros((t_max, self.n), dtype=np.float64)
         glob = np.zeros((t_max,), dtype=np.float64)
-        regs = self._regs
-        for t in range(1, t_max + 1):
-            if t > 1:
-                regs = self._propagate(regs, schedule)
+        for t, regs in enumerate(self._panels_up_to(t_max, sched), start=1):
             est = np.asarray(est_fn(regs))[: self.n]
             local[t - 1] = est
             glob[t - 1] = est.sum()

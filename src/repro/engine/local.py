@@ -97,16 +97,30 @@ class LocalEngine(SketchEngine):
         """Single device: the row table goes up as one dense array."""
         return jnp.asarray(full)
 
+    def _canonical_schedule(self, schedule: str) -> str:
+        """Validate like the base class, then collapse onto one cache key.
+
+        The local backend runs a single propagate dataflow whichever
+        schedule is named, so ``ring``/``allgather``/``auto`` panel sets
+        are the same arrays — caching them under one key means switching
+        schedule strings never recomputes panels.
+        """
+        super()._canonical_schedule(schedule)  # ValueError on unknown
+        return "local"
+
     def _propagate(self, regs, schedule):
-        if self._prop_src_dst is None:
+        if self._prop_routing is None:
             e = self._require_edges("neighborhood")
-            src = jnp.asarray(np.concatenate([e[:, 0], e[:, 1]]))
-            dst = jnp.asarray(np.concatenate([e[:, 1], e[:, 0]]))
-            self._prop_src_dst = (src, dst)
-        src, dst = self._prop_src_dst
-        fn = self._plan("propagate", builder=lambda: plans.
+            src, dst, mask = plans.pad_routing(
+                np.concatenate([e[:, 0], e[:, 1]]),
+                np.concatenate([e[:, 1], e[:, 0]]))
+            self._prop_routing = (jnp.asarray(src), jnp.asarray(dst),
+                                  jnp.asarray(mask))
+        src, dst, mask = self._prop_routing
+        fn = self._plan("propagate", bucket=(int(src.shape[0]),),
+                        builder=lambda: plans.
                         build_propagate_plan(self.kernels))
-        return fn(regs, src, dst)
+        return fn(regs, src, dst, mask)
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
         """Algorithms 4/5 on one device (see base class for the contract)."""

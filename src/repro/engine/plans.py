@@ -24,6 +24,14 @@ Every plan body bumps a module-level *trace counter* when it is traced
 (python side effects run once per trace), so tests and the serving stats
 can assert "no retrace within a shape bucket" and "N clients served by
 O(log N) compiled programs" directly — see :func:`trace_counts`.
+
+Trace counters count *compiled programs*; some invariants are about
+*executions* (the t-hop panel cache promises zero propagate passes on an
+unchanged engine — a cached program re-run would not retrace). Those are
+counted host-side via the companion *event counters*
+(:func:`record_event` / :func:`event_counts`): engines bump
+``"propagate_pass"`` once per propagate pass they actually execute, so
+tests assert the panel cache by both counters (DESIGN.md §3c).
 """
 from __future__ import annotations
 
@@ -39,9 +47,11 @@ from repro.core import hll, intersection
 
 __all__ = [
     "bucket", "split_sets", "pad_sets", "split_pairs", "pad_pairs",
-    "normalize_sets", "normalize_pairs", "PlanKey",
+    "normalize_sets", "normalize_pairs", "pad_routing",
+    "require_integer_ids", "PlanKey",
     "PlanCache", "global_cache", "trace_counts", "reset_trace_counts",
-    "record_trace", "build_degrees_plan", "build_union_plan",
+    "record_trace", "record_event", "event_counts", "reset_event_counts",
+    "build_degrees_plan", "build_union_plan",
     "build_intersection_plan", "build_merge_plan", "build_propagate_plan",
 ]
 
@@ -52,6 +62,21 @@ def bucket(size: int, minimum: int = 8) -> int:
 
 
 # ------------------------------------------------------------ normalization
+def require_integer_ids(arr: np.ndarray, what: str) -> None:
+    """Raise ValueError unless ``arr`` has an integer (or bool-free) dtype.
+
+    Vertex ids arrive from clients as arbitrary array-likes; a float array
+    cast with ``astype(int)`` silently truncates (3.7 -> 3), answering the
+    query for a *different vertex*. Every id-consuming entry point
+    (``ingest``, :func:`split_sets`, :func:`split_pairs`, ``from_regs``)
+    rejects non-integer dtypes here instead.
+    """
+    if arr.size and arr.dtype.kind not in "iu":
+        raise ValueError(
+            f"{what} must have an integer dtype; got {arr.dtype} — float "
+            f"vertex ids would be silently truncated (e.g. 3.7 -> 3)")
+
+
 def _validate_ids(arr: np.ndarray, n: int | None, query: str) -> None:
     """Raise ValueError for vertex ids outside [0, n) — mirror of ingest.
 
@@ -79,10 +104,14 @@ def split_sets(vertex_sets, n: int | None = None,
     server can validate/parse per request and pad per coalesced batch.
     """
     if isinstance(vertex_sets, (list, tuple)):
-        sets = [np.asarray(s, dtype=np.int64).ravel() for s in vertex_sets]
+        raws = [np.asarray(s).ravel() for s in vertex_sets]
+        for s in raws:
+            require_integer_ids(s, "union_size vertex ids")
+        sets = [s.astype(np.int64) for s in raws]
         scalar = False
     else:
         arr = np.asarray(vertex_sets)
+        require_integer_ids(arr, "union_size vertex ids")
         if arr.ndim == 1:
             sets, scalar = [arr.astype(np.int64)], True
         elif arr.ndim == 2:
@@ -132,7 +161,9 @@ def split_pairs(pairs, n: int | None = None) -> tuple[np.ndarray, bool]:
     server can reject a malformed request on the calling thread and pad
     per coalesced batch.
     """
-    arr = np.asarray(pairs, dtype=np.int64)
+    raw = np.asarray(pairs)
+    require_integer_ids(raw, "intersection_size pair ids")
+    arr = raw.astype(np.int64)
     scalar = arr.ndim == 1
     if scalar:
         arr = arr[None]
@@ -164,6 +195,27 @@ def normalize_pairs(pairs, n: int | None = None,
     return out, mask, arr.shape[0], scalar
 
 
+def pad_routing(src: np.ndarray, dst: np.ndarray,
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a directed edge routing to a power-of-two shape bucket.
+
+    Returns ``(src int32[E'], dst int32[E'], mask bool[E'])`` with E' =
+    ``bucket(len(src))``. This is what keeps propagation plans shape-
+    bucketed: edge counts that land in the same bucket share one compiled
+    program instead of retracing per distinct edge count (DESIGN.md §3c);
+    padding slots are masked out inside :func:`build_propagate_plan`.
+    """
+    m = len(src)
+    cap = bucket(max(m, 1))
+    src_p = np.zeros((cap,), np.int32)
+    dst_p = np.zeros((cap,), np.int32)
+    mask = np.zeros((cap,), bool)
+    src_p[:m] = src
+    dst_p[:m] = dst
+    mask[:m] = True
+    return src_p, dst_p, mask
+
+
 # ------------------------------------------------------------ trace counter
 _TRACE_LOCK = threading.Lock()
 _TRACE_COUNTS: dict[str, int] = {}
@@ -190,6 +242,35 @@ def reset_trace_counts() -> None:
     """Zero the trace counters (test fixtures; serving stats windows)."""
     with _TRACE_LOCK:
         _TRACE_COUNTS.clear()
+
+
+# ------------------------------------------------------------ event counter
+_EVENT_COUNTS: dict[str, int] = {}
+
+
+def record_event(event: str) -> None:
+    """Bump the host-side *execution* counter for ``event``.
+
+    Complement of :func:`record_trace`: trace counters count compiled
+    programs, event counters count host-observed executions — engines bump
+    ``"propagate_pass"`` once per Algorithm 2 pass actually run, which is
+    how the t-hop panel cache's "zero passes on an unchanged engine"
+    guarantee is asserted (a cached program re-run would never retrace).
+    """
+    with _TRACE_LOCK:
+        _EVENT_COUNTS[event] = _EVENT_COUNTS.get(event, 0) + 1
+
+
+def event_counts() -> dict[str, int]:
+    """Snapshot of {event: executions since the last reset}."""
+    with _TRACE_LOCK:
+        return dict(_EVENT_COUNTS)
+
+
+def reset_event_counts() -> None:
+    """Zero the event counters (test fixtures; serving stats windows)."""
+    with _TRACE_LOCK:
+        _EVENT_COUNTS.clear()
 
 
 # -------------------------------------------------------------- plan cache
@@ -344,8 +425,16 @@ def build_merge_plan():
 
 
 def build_propagate_plan(kernels):
-    """Plan: one Algorithm 2 gather-max pass over a static edge routing."""
-    def fn(regs, src, dst):
+    """Plan: one Algorithm 2 gather-max pass over a bucketed edge routing.
+
+    Takes ``(regs, src, dst, mask)`` as produced by :func:`pad_routing`:
+    the routing is padded to a power-of-two shape bucket (the plan key
+    carries the bucket), so engines whose edge counts grow under streaming
+    retrace only when the *bucket* changes, not per distinct edge count.
+    Masked-out slots route ``(0, 0)``, a self-merge no-op under register
+    max.
+    """
+    def fn(regs, src, dst, mask):
         record_trace("propagate")
-        return kernels.propagate(regs, src, dst)
+        return kernels.propagate(regs, src, dst, mask=mask)
     return jax.jit(fn)

@@ -23,6 +23,7 @@ froze the backend seen at import).
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
 
 import jax
@@ -172,6 +173,18 @@ def resolve(impl: str, cfg=None) -> KernelSet:
         raise ValueError(
             f"impl must be a fully registered kernel implementation; "
             f"{impl!r} lacks {missing} (registered impls: {known})")
+    # capability: the shape-bucketed propagate plans (DESIGN.md §3c) hand
+    # every registered propagate a padding mask — an impl that cannot
+    # accept one would silently merge padding edges, so it fails here.
+    prop_sig = inspect.signature(_REGISTRY[("propagate", impl)])
+    accepts_mask = ("mask" in prop_sig.parameters
+                    or any(p.kind is inspect.Parameter.VAR_POSITIONAL
+                           for p in prop_sig.parameters.values()))
+    if not accepts_mask:
+        raise ValueError(
+            f"propagate impl {impl!r} does not accept a 'mask' argument; "
+            f"bucketed propagate plans pad edge routings and require "
+            f"masked-out slots (signature: {prop_sig})")
     estimator = getattr(cfg, "estimator", "flajolet") if cfg else "flajolet"
     fallback = None
     if estimator != "flajolet":

@@ -1,11 +1,12 @@
 """Sketch serving launcher: drive concurrent clients through a QueryServer.
 
 Builds (or loads) a sketch engine, wraps it in ``repro.serve.QueryServer``
-and fires N client threads issuing mixed degree/union/intersection/triangle
-queries with jittering batch sizes — optionally interleaved with live
-ingest blocks — then prints latency/throughput stats and the compiled-
-program counters that demonstrate micro-batch coalescing over the
-shape-bucketed plan cache (DESIGN.md §3b).
+and fires N client threads issuing mixed degree/union/intersection/
+neighborhood/triangle queries with jittering batch sizes and horizons —
+optionally interleaved with live ingest blocks — then prints latency/
+throughput stats and the compiled-program counters that demonstrate
+micro-batch coalescing over the shape-bucketed plan cache (DESIGN.md
+§3b) plus the t-hop panel cache serving neighborhood queries (§3c).
 
     PYTHONPATH=src python -m repro.launch.sketch_serve \
         --scale 10 --clients 6 --requests 40 --ingest-blocks 8
@@ -21,19 +22,20 @@ import numpy as np
 
 from repro import engine
 from repro.core.hll import HLLConfig
-from repro.engine import plans
+from repro.engine import base, plans
 from repro.graph import generators as gen
 from repro.serve import QueryServer
 
 
 def _client(server: QueryServer, edges: np.ndarray, n: int, requests: int,
-            max_batch: int, seed: int, errors: list) -> None:
+            max_batch: int, t_max: int, seed: int, errors: list) -> None:
     """One client: mixed queries with jittering (power-law) batch sizes."""
     rng = np.random.default_rng(seed)
     try:
         for i in range(requests):
             batch = int(rng.integers(1, max_batch + 1))
-            kind = ("union", "intersection", "degrees")[int(rng.integers(3))]
+            kind = ("union", "intersection", "degrees",
+                    "neighborhood")[int(rng.integers(4))]
             if kind == "union":
                 sets = [rng.integers(0, n, size=rng.integers(1, 8))
                         for _ in range(batch)]
@@ -41,6 +43,9 @@ def _client(server: QueryServer, edges: np.ndarray, n: int, requests: int,
             elif kind == "intersection":
                 idx = rng.integers(0, len(edges), size=batch)
                 server.intersection_size(edges[idx])
+            elif kind == "neighborhood":
+                # jittering horizons coalesce onto one panel set per epoch
+                server.neighborhood(int(rng.integers(1, t_max + 1)))
             else:
                 server.degrees()
     except Exception as e:  # noqa: BLE001 — surface in the main thread
@@ -64,11 +69,15 @@ def main(argv: list[str] | None = None) -> None:
                     help="requests per client")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="max per-request batch size (jitters 1..max)")
+    ap.add_argument("--t-max", type=int, default=3,
+                    help="max neighborhood horizon (requests jitter 1..t)")
     ap.add_argument("--ingest-blocks", type=int, default=4,
                     help="edge blocks streamed in WHILE clients query")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast configuration for CI")
     args = ap.parse_args(argv)
+    args.t_max = base.validate_t_max(args.t_max)  # clear error, not an
+    # opaque rng ValueError from inside a client thread
     if args.smoke:
         args.scale, args.clients = 8, 3
         args.requests, args.max_batch, args.ingest_blocks = 8, 16, 2
@@ -88,8 +97,8 @@ def main(argv: list[str] | None = None) -> None:
     with QueryServer(eng) as server:
         threads = [threading.Thread(
             target=_client,
-            args=(server, edges, n, args.requests, args.max_batch, 17 + c,
-                  errors))
+            args=(server, edges, n, args.requests, args.max_batch,
+                  args.t_max, 17 + c, errors))
             for c in range(args.clients)]
         for t in threads:
             t.start()
@@ -100,15 +109,23 @@ def main(argv: list[str] | None = None) -> None:
                 server.ingest(tail[s:s + step])
         for t in threads:
             t.join()
+        # deterministic served-neighborhood sample (the CI smoke contract):
+        # served answers ride the cached panels of the final epoch
+        _, glob = server.neighborhood(args.t_max)
         stats = server.stats()
+        panels = server.engine.panels_cached
     wall = time.monotonic() - t0
     if errors:
         raise errors[0]
+    print(f"neighborhood(t_max={args.t_max}) served: "
+          f"Ñ(t)={np.array2string(glob, precision=0)} "
+          f"({panels} D^t panels cached, t=1 included)")
 
     print(f"served {stats['requests_total']} requests from {args.clients} "
           f"clients in {wall:.2f}s ({stats['requests_total'] / wall:.1f} "
           f"req/s), final epoch={stats['epoch']}")
-    for kind in ("degrees", "union", "intersection", "triangle"):
+    for kind in ("degrees", "union", "intersection", "neighborhood",
+                 "triangle"):
         s = stats.get(kind)
         if not s:
             continue

@@ -11,7 +11,10 @@ Design (DESIGN.md §3b):
   drained together and fused into one engine call: union sets concatenate
   into one ragged batch, intersection pairs concatenate per
   ``(method, iters)`` group, degree requests dedupe into a single table
-  scan, triangle requests dedupe per ``(k, mode, iters)``. The fused
+  scan, triangle requests dedupe per ``(k, mode, iters)``, and
+  neighborhood requests dedupe per canonical schedule — one engine call
+  at the deepest requested horizon rides the t-hop panel cache
+  (DESIGN.md §3c) and every request gets its ``t``-prefix. The fused
   batch rides the power-of-two shape buckets of the plan layer, so N
   clients with jittering batch sizes are served by O(log max-batch)
   compiled programs per query kind — and every per-request answer is
@@ -32,6 +35,7 @@ import numpy as np
 
 from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import plans
+from repro.engine.base import validate_t_max
 
 __all__ = ["QueryServer", "ServerClosed"]
 
@@ -174,6 +178,23 @@ class QueryServer:
                                iters: int = 30):
         """Algorithms 4/5 — identical requests in a batch are deduped."""
         return self._submit("triangle", (int(k), mode, int(iters))).wait()
+
+    def neighborhood(self, t_max: int, schedule: str = "auto"):
+        """Algorithm 2 — same contract as ``SketchEngine.neighborhood``.
+
+        ``t_max``/``schedule`` are validated on the calling thread;
+        concurrent requests whose schedules canonicalize to the same
+        panel-cache key coalesce into ONE engine call at the largest
+        requested horizon, and each request receives the ``t <= t_max``
+        prefix — bit-identical to a direct engine call, because every
+        horizon's estimates come from the same cached D^t panels
+        (DESIGN.md §3c). Served on the worker, so the answer is
+        epoch-guarded like every other kind: it reflects exactly the
+        panels of the epoch that served it.
+        """
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)  # validates schedule
+        return self._submit("neighborhood", (t_max, schedule, key)).wait()
 
     def ingest(self, edge_block) -> int:
         """Fold an edge block into the sketch; returns the new epoch.
@@ -350,6 +371,25 @@ class QueryServer:
                 continue
             for r in reqs:
                 r.result, r.epoch = out, self._epoch
+
+    def _serve_neighborhood(self, run: list[_Request]) -> None:
+        groups: OrderedDict[str, list[_Request]] = OrderedDict()
+        for r in run:
+            groups.setdefault(r.payload[2], []).append(r)  # canonical sched
+        for reqs in groups.values():
+            t_big = max(r.payload[0] for r in reqs)
+            try:
+                # one engine call at the deepest horizon; the panel cache
+                # materializes D^1..D^{t_big} once for the whole group
+                local, glob = self._eng.neighborhood(
+                    t_big, schedule=reqs[0].payload[1])
+            except Exception as e:  # noqa: BLE001
+                self._fail(reqs, e)
+                continue
+            for r in reqs:
+                t = r.payload[0]
+                r.result = (local[:t], glob[:t])
+                r.epoch = self._epoch
 
     def _serve_ingest(self, run: list[_Request]) -> None:
         for r in run:

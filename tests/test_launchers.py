@@ -38,3 +38,14 @@ def test_quickstart_example():
     res = _run(["examples/quickstart.py"])
     assert res.returncode == 0, res.stderr[-800:]
     assert "global triangles" in res.stdout
+
+
+@pytest.mark.slow
+def test_sketch_serve_smoke_serves_neighborhood():
+    """The CI smoke contract: a neighborhood query is served through the
+    QueryServer frontend (t-hop panels) alongside the mixed client load."""
+    res = _run(["-m", "repro.launch.sketch_serve", "--smoke"])
+    assert res.returncode == 0, res.stderr[-800:]
+    assert "neighborhood(t_max=" in res.stdout
+    assert "panels cached" in res.stdout
+    assert "OK: compiled-program count" in res.stdout

@@ -1,0 +1,180 @@
+"""t-hop panel cache: zero-pass re-queries, extension, invalidation.
+
+Acceptance contract (ISSUE 4 / DESIGN.md §3c):
+(a) repeated ``neighborhood(t_max)`` on an unchanged engine executes ZERO
+    propagate passes — asserted through the plan layer's counters (the
+    host-side ``propagate_pass`` event counter counts executions; the
+    ``propagate`` trace counter separately shows no recompilation);
+(b) a larger horizon extends the cached panel set incrementally
+    (``t_max=5`` after ``t_max=3`` runs exactly passes 4-5);
+(c) ingest/merge invalidate the cache via the ``version`` bump and the
+    next query answers for the new panel;
+(d) ``t_max``/``schedule`` are validated up front on BOTH backends
+    (``t_max <= 0`` used to return empty arrays; the local backend used
+    to silently ignore unknown schedule strings);
+(e) panels beyond ``MAX_CACHED_PANELS`` are computed but not retained
+    (the cache's memory bound).
+"""
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+from repro.graph import generators as gen
+
+CFG = HLLConfig(p=8)
+BACKENDS = ["local", "sharded"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+def _build(edges, n, backend):
+    return engine.build(edges, n, CFG, backend=backend,
+                        shards=1 if backend == "sharded" else None)
+
+
+def _passes() -> int:
+    return plans.event_counts().get("propagate_pass", 0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_repeat_query_executes_zero_propagate_passes(graph, backend):
+    """The acceptance criterion: unchanged engine -> pure panel estimate."""
+    edges, n = graph
+    eng = _build(edges, n, backend)
+    plans.reset_event_counts()
+    l1, g1 = eng.neighborhood(3)
+    assert _passes() == 2                     # t=1 is the accumulated table
+    assert eng.panels_cached == 3
+    l2, g2 = eng.neighborhood(3)
+    assert _passes() == 2                     # zero additional passes
+    np.testing.assert_array_equal(l1, l2)     # bit-identical panel answers
+    np.testing.assert_array_equal(g1, g2)
+    l_small, g_small = eng.neighborhood(2)    # shallower: prefix, no work
+    assert _passes() == 2
+    np.testing.assert_array_equal(l_small, l1[:2])
+    np.testing.assert_array_equal(g_small, g1[:2])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_incremental_extension_runs_only_missing_passes(graph, backend):
+    edges, n = graph
+    eng = _build(edges, n, backend)
+    plans.reset_event_counts()
+    l3, _ = eng.neighborhood(3)
+    assert _passes() == 2
+    l5, _ = eng.neighborhood(5)               # extends: passes 4-5 only
+    assert _passes() == 4
+    assert eng.panels_cached == 5
+    np.testing.assert_array_equal(l5[:3], l3)
+
+
+def test_no_propagate_retrace_across_cached_queries(graph):
+    """Trace counters: repeated/extended queries reuse ONE compiled pass."""
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng._plan_cache = plans.PlanCache(maxsize=32)
+    plans.reset_trace_counts()
+    eng.neighborhood(3)
+    eng.neighborhood(3)
+    eng.neighborhood(5)
+    assert plans.trace_counts()["propagate"] == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ingest_invalidates_panels_and_answers_track_new_epoch(graph,
+                                                               backend):
+    edges, n = graph
+    half = len(edges) // 2
+    eng = _build(edges[:half], n, backend)
+    stale_l, _ = eng.neighborhood(2)
+    assert eng.panels_cached == 2
+    eng.ingest(edges[half:])
+    assert eng.panels_cached == 0             # version bump dropped the set
+    plans.reset_event_counts()
+    fresh_l, fresh_g = eng.neighborhood(2)
+    assert _passes() == 1                     # rematerialized for the epoch
+    full_l, full_g = _build(edges, n, backend).neighborhood(2)
+    np.testing.assert_array_equal(fresh_l, full_l)
+    np.testing.assert_array_equal(fresh_g, full_g)
+    assert not np.array_equal(stale_l, fresh_l)
+
+
+def test_merge_invalidates_panels(graph):
+    edges, n = graph
+    half = len(edges) // 2
+    eng = _build(edges[:half], n, "local")
+    eng.neighborhood(2)
+    assert eng.panels_cached == 2
+    eng.merge(_build(edges[half:], n, "local"))
+    assert eng.panels_cached == 0
+    l, _ = eng.neighborhood(2)
+    full_l, _ = _build(edges, n, "local").neighborhood(2)
+    np.testing.assert_array_equal(l, full_l)
+
+
+def test_memory_bound_panels_beyond_cap_not_retained(graph):
+    edges, n = graph
+    eng = _build(edges[:100], n, "local")
+    eng.MAX_CACHED_PANELS = 3
+    plans.reset_event_counts()
+    eng.neighborhood(5)
+    assert _passes() == 4
+    assert eng.panels_cached == 3             # the bound, not the horizon
+    eng.neighborhood(5)                       # cached prefix + 2 transient
+    assert _passes() == 6
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_t_max_validated(graph, backend):
+    edges, n = graph
+    eng = _build(edges[:50], n, backend)
+    for bad in (0, -3, 1.5, "two", None):
+        with pytest.raises(ValueError, match="t_max"):
+            eng.neighborhood(bad)
+    # np integers are fine
+    l, g = eng.neighborhood(np.int64(2))
+    assert l.shape == (2, n) and g.shape == (2,)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_schedule_validated_up_front_on_both_backends(graph, backend):
+    edges, n = graph
+    eng = _build(edges[:50], n, backend)
+    with pytest.raises(ValueError, match="schedule"):
+        eng.neighborhood(2, schedule="nope")
+    for schedule in ("auto", "ring", "allgather"):
+        l, _ = eng.neighborhood(2, schedule=schedule)
+        assert l.shape == (2, n)
+
+
+def test_local_schedules_share_one_panel_set(graph):
+    """The local backend runs one dataflow: schedule strings share panels."""
+    edges, n = graph
+    eng = _build(edges[:100], n, "local")
+    plans.reset_event_counts()
+    l1, _ = eng.neighborhood(3, schedule="ring")
+    assert _passes() == 2
+    l2, _ = eng.neighborhood(3, schedule="allgather")
+    assert _passes() == 2                     # same canonical key: no work
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_sharded_schedules_keyed_separately(graph):
+    """Sharded ring/allgather panel sets cache under their own keys."""
+    edges, n = graph
+    eng = _build(edges[:100], n, "sharded")
+    plans.reset_event_counts()
+    l1, _ = eng.neighborhood(2, schedule="ring")
+    assert _passes() == 1
+    l2, _ = eng.neighborhood(2, schedule="allgather")
+    assert _passes() == 2                     # different dataflow: re-runs
+    np.testing.assert_array_equal(l1, l2)     # ... to bit-identical panels
+    l3, _ = eng.neighborhood(2, schedule="auto")  # auto == ring: recompute
+    assert _passes() == 3                     # (one set cached at a time)
+    np.testing.assert_array_equal(l1, l3)

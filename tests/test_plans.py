@@ -173,6 +173,36 @@ def test_normalize_helpers_validate_and_pad():
         plans.normalize_pairs(np.arange(6).reshape(2, 3), n=10)
 
 
+def test_float_vertex_ids_rejected_not_truncated(graph, isolated):
+    """ingest/queries reject float ids instead of truncating 3.7 -> 3."""
+    edges, n = graph
+    with pytest.raises(ValueError, match="integer dtype"):
+        isolated.ingest(np.array([[0.5, 1.7]]))
+    with pytest.raises(ValueError, match="integer dtype"):
+        isolated.ingest(edges.astype(np.float32))
+    with pytest.raises(ValueError, match="integer dtype"):
+        isolated.union_size([np.array([3.7])])
+    with pytest.raises(ValueError, match="integer dtype"):
+        isolated.union_size(np.array([[0.0, 1.0]]))
+    with pytest.raises(ValueError, match="integer dtype"):
+        isolated.intersection_size(np.array([[0.5, 2.0]]))
+    with pytest.raises(ValueError, match="integer dtype"):
+        isolated.intersection_size((0.5, 2))
+    with pytest.raises(ValueError, match="integer dtype"):
+        plans.split_sets([np.array([1.5, 2.0])], n)
+    with pytest.raises(ValueError, match="integer dtype"):
+        plans.split_pairs(np.array([[1.5, 2.0]]), n)
+    # from_regs edge lists go through the same gate
+    rows = np.zeros((n, CFG.r), np.uint8)
+    with pytest.raises(ValueError, match="integer dtype"):
+        engine.LocalEngine.from_regs(rows, n, CFG,
+                                     edges=np.array([[0.0, 1.5]]))
+    # integer input (any width) still flows; python lists coerce to int
+    assert isolated.union_size(np.array([0, 1], np.uint16)) > 0
+    assert isolated.intersection_size((0, 1)) >= 0
+    isolated.ingest(np.array([[0, 1]], np.uint16))
+
+
 # ------------------------------------------------------------ regs staleness
 def test_regs_version_bumps_on_donation(graph):
     edges, n = graph
@@ -206,6 +236,28 @@ def test_resolve_unknown_impl_fails_up_front():
         registry.resolve("cuda")
     with pytest.raises(ValueError, match="impl"):
         engine.open(8, CFG, impl="cuda")
+
+
+def test_resolve_checks_propagate_mask_capability():
+    """Bucketed propagate plans pass a mask — impls without one fail."""
+    def maskless_op(*a, **k):
+        """A complete-looking impl whose propagate cannot take a mask."""
+        raise AssertionError("never called")
+
+    def maskless_propagate(regs, src, dst):
+        """Propagate missing the mask parameter (the capability gap)."""
+        raise AssertionError("never called")
+
+    impl = "test-maskless"
+    for op in registry.OPS:
+        registry._REGISTRY[(op, impl)] = (
+            maskless_propagate if op == "propagate" else maskless_op)
+    try:
+        with pytest.raises(ValueError, match="mask"):
+            registry.resolve(impl)
+    finally:
+        for op in registry.OPS:
+            registry._REGISTRY.pop((op, impl), None)
 
 
 def test_resolve_records_beta_estimator_fallback(graph):

@@ -170,6 +170,86 @@ def test_queries_interleaved_with_ingest(graph, backend):
         np.testing.assert_array_equal(srv.degrees(), full.degrees())
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_served_neighborhood_bit_identical_to_direct(graph, backend):
+    edges, n = graph
+    direct = _build(edges, n, backend)
+    l_d, g_d = direct.neighborhood(3)
+    with QueryServer(_build(edges, n, backend)) as srv:
+        l_s, g_s = srv.neighborhood(3)
+        np.testing.assert_array_equal(l_s, l_d)
+        np.testing.assert_array_equal(g_s, g_d)
+        # repeat rides the cached panels and stays bit-identical
+        l_s2, g_s2 = srv.neighborhood(3)
+        np.testing.assert_array_equal(l_s2, l_d)
+        np.testing.assert_array_equal(g_s2, g_d)
+
+
+def test_served_neighborhood_coalesces_per_schedule(graph):
+    """Concurrent horizons dedupe into ONE engine call at the deepest t."""
+    edges, n = graph
+    direct = _build(edges, n, "local")
+    l_d, g_d = direct.neighborhood(3)
+    with QueryServer(_build(edges, n, "local")) as srv:
+        srv.pause()
+        key = srv.engine._canonical_schedule("auto")
+        r2 = srv._submit("neighborhood", (2, "auto", key))
+        r3 = srv._submit("neighborhood", (3, "ring", key))  # same key
+        srv.resume()
+        l2, g2 = r2.wait()
+        l3, g3 = r3.wait()
+        np.testing.assert_array_equal(l3, l_d)
+        np.testing.assert_array_equal(g3, g_d)
+        np.testing.assert_array_equal(l2, l_d[:2])  # the t-prefix
+        np.testing.assert_array_equal(g2, g_d[:2])
+        stats = srv.stats()
+    assert stats["neighborhood"]["requests"] == 2
+    assert stats["neighborhood"]["batches"] == 1   # ONE engine call
+    assert stats["neighborhood"]["max_coalesced"] == 2
+
+
+def test_served_neighborhood_panel_cache_hit_asserted(graph):
+    """Second served query: zero propagate passes, no propagate retrace."""
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng._plan_cache = plans.PlanCache(maxsize=32)
+    with QueryServer(eng) as srv:
+        srv.neighborhood(3)
+        plans.reset_trace_counts()
+        plans.reset_event_counts()
+        srv.neighborhood(3)
+        assert plans.event_counts().get("propagate_pass", 0) == 0
+        assert "propagate" not in plans.trace_counts()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_served_neighborhood_ingest_invalidates(graph, backend):
+    """An ingest barrier between queries: the later answer is the new
+    epoch's (panel cache invalidated by the version bump)."""
+    edges, n = graph
+    half = len(edges) // 2
+    full_l, _ = _build(edges, n, backend).neighborhood(2)
+    with QueryServer(_build(edges[:half], n, backend)) as srv:
+        before_l, _ = srv.neighborhood(2)
+        epoch = srv.ingest(edges[half:])
+        after_l, _ = srv.neighborhood(2)
+        assert epoch == 1
+        np.testing.assert_array_equal(after_l, full_l)
+        assert not np.array_equal(before_l, after_l)
+
+
+def test_served_neighborhood_validates_on_client_thread(graph):
+    edges, n = graph
+    with QueryServer(_build(edges, n, "local")) as srv:
+        with pytest.raises(ValueError, match="t_max"):
+            srv.neighborhood(0)
+        with pytest.raises(ValueError, match="schedule"):
+            srv.neighborhood(2, schedule="nope")
+        # an edge-free engine fails the request worker-side, others live
+        l, g = srv.neighborhood(2)
+        assert l.shape == (2, n) and g.shape == (2,)
+
+
 def test_epoch_barrier_orders_reads(graph):
     """Queries before/after an ingest barrier see exactly that panel."""
     edges, n = graph

@@ -51,11 +51,14 @@ def _accuracy(small: bool) -> None:
                  f"global_rel={abs(glob[t]-tv.sum())/tv.sum():.4f}")
 
 
-def _panel_latency(small: bool) -> list[dict]:
+def _panel_latency(small: bool, quick: bool = False) -> list[dict]:
     """Cold vs cached-panel neighborhood latency, direct and served."""
     cfg = HLLConfig(p=8)
     records = []
-    for name, edges in graph_suite(small).items():
+    suite = graph_suite(small)
+    if quick:
+        suite = {"rmat9": suite["rmat9"], "rmat10": suite["rmat10"]}
+    for name, edges in suite.items():
         n = int(edges.max()) + 1
         eng = engine.build(edges, n, cfg, backend="local")
         eng.neighborhood(1)  # compile the estimate plan outside the timing
@@ -88,15 +91,24 @@ def _panel_latency(small: bool) -> list[dict]:
     return records
 
 
-def run(small: bool = True) -> None:
-    """Figure 1 accuracy sweep + panel-cache latency; prints CSV + JSON."""
-    _accuracy(small)
-    records = _panel_latency(small)
+def run(small: bool = True, quick: bool = False, out: str | None = None,
+        ) -> None:
+    """Figure 1 accuracy sweep + panel-cache latency; prints CSV + JSON.
+
+    ``quick`` skips the (slow, BFS-truth) accuracy sweep and reruns only
+    the rmat9/rmat10 panel-latency cells for the CI regression gate;
+    ``out`` overrides the JSON path so a gate run never dirties the
+    checkout.
+    """
+    if not quick:
+        _accuracy(small)
+    records = _panel_latency(small, quick)
     payload = {"benchmark": "neighborhood_panels", "p": 8, "t_max": T_MAX,
                "device": jax.devices()[0].platform, "results": records}
-    with open(OUT, "w") as f:
+    path = out or OUT
+    with open(path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {OUT} ({len(records)} records)")
+    print(f"wrote {path} ({len(records)} records)")
 
 
 if __name__ == "__main__":

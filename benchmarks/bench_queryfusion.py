@@ -1,0 +1,113 @@
+"""Fused mixed-kind batch vs per-kind programs (ISSUE 5 tentpole metric).
+
+Times a coalesced degrees+union+intersection micro-batch — the shape a
+``QueryServer`` drain produces under heterogeneous client load — two
+ways over identical pre-split inputs:
+
+* **per-kind**: three separate compiled programs + host syncs
+  (``degrees`` / ``_union_presplit`` / ``_intersection_presplit``), the
+  pre-fusion serving path;
+* **fused**: ONE mixed-kind program (``_query_batch_presplit``,
+  DESIGN.md §10).
+
+Both paths are warmed first (compile time excluded — steady-state
+serving cost is the quantity) and timed *interleaved* (alternating one
+per-kind batch with one fused batch) so slow machine-load drift cancels
+out of the ratio; per-request answers are bit-identical by construction
+(tests/test_queryfusion.py), so the delta is pure launch + host-sync
+overhead. Writes ``BENCH_queryfusion.json`` so the fusion speedup is
+tracked across PRs and gated in CI.
+
+    PYTHONPATH=src:. python benchmarks/bench_queryfusion.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph_suite
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+
+UNION_SETS = 16       # sets per batch, 4 ids each
+PAIRS = 16            # intersection pairs per batch
+REPEATS = 30
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_queryfusion.json")
+
+
+def _inputs(edges: np.ndarray, n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    sets = [rng.integers(0, n, size=4).astype(np.int64)
+            for _ in range(UNION_SETS)]
+    arr = edges[rng.integers(0, len(edges), size=PAIRS)].astype(np.int64)
+    return sets, arr
+
+
+def _time_interleaved(fn_a, fn_b, repeats: int) -> tuple[float, float]:
+    """Mean seconds/call of two paths, alternated so load drift cancels."""
+    fn_a()  # warmup: compile outside the timed window
+    fn_b()
+    total_a = total_b = 0.0
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        fn_a()
+        total_a += time.monotonic() - t0
+        t0 = time.monotonic()
+        fn_b()
+        total_b += time.monotonic() - t0
+    return total_a / repeats, total_b / repeats
+
+
+def run(small: bool = True, quick: bool = False, out: str | None = None,
+        ) -> None:
+    """Sweep graphs x estimator methods; print CSV + write JSON."""
+    cfg = HLLConfig(p=8)
+    suite = graph_suite(small)
+    if quick:
+        suite = {"rmat9": suite["rmat9"]}
+    records = []
+    for name, edges in suite.items():
+        n = int(edges.max()) + 1
+        eng = engine.build(edges, n, cfg, backend="local")
+        sets, arr = _inputs(edges, n)
+        for method in ("ie", "mle"):
+            iters = 50
+
+            def per_kind():
+                eng.degrees()
+                eng._union_presplit(sets)
+                eng._intersection_presplit(arr, method, iters)
+
+            def fused():
+                eng._query_batch_presplit(sets, arr, True, method, iters)
+
+            plans.reset_trace_counts()
+            unfused_s, fused_s = _time_interleaved(per_kind, fused, REPEATS)
+            traces = plans.trace_counts()
+            assert traces.get("mixed", 0) <= 1, traces  # ONE program
+            speedup = unfused_s / max(fused_s, 1e-9)
+            emit(f"queryfusion/{name}/{method}", fused_s * 1e6,
+                 f"per_kind_us={unfused_s * 1e6:.0f};"
+                 f"speedup={speedup:.2f}x")
+            records.append({
+                "graph": name, "n": n, "m": int(len(edges)),
+                "method": method, "union_sets": UNION_SETS, "pairs": PAIRS,
+                "repeats": REPEATS,
+                "per_kind_seconds": unfused_s, "fused_seconds": fused_s,
+                "speedup": speedup,
+            })
+    payload = {"benchmark": "queryfusion", "p": cfg.p,
+               "device": jax.devices()[0].platform, "results": records}
+    path = out or OUT
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,138 @@
+"""CI perf-regression gate over the committed BENCH_*.json baselines.
+
+Compares fresh quick-mode benchmark JSONs (``python -m benchmarks.run
+--quick --out-dir <dir>``) against the committed baselines in
+``benchmarks/`` and exits non-zero only on a confirmed regression beyond
+a generous tolerance (default: >2x worse). The gate is deliberately
+jitter-aware — shared CI runners are noisy — so it:
+
+* joins records by their configuration keys and compares only cells
+  present in both files (quick mode reruns a subset of the baseline);
+* prefers *ratio* metrics (panel-cache speedup, fusion speedup), which
+  self-normalize across machine speeds, and throughput only where the
+  measurement window is long enough to average jitter out;
+* skips-with-notice any cell whose absolute measurement is too small to
+  be trustworthy on a shared runner, or when the baseline was recorded
+  on a different device class than the fresh run.
+
+    python benchmarks/check_regression.py --fresh /tmp/bench
+
+Every comparison prints one ``OK|SKIP|FAIL`` line; failures are summed
+into the exit code so the CI step shows the full picture before failing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: per-suite comparisons: (file, record key fields, metric, direction,
+#: jitter guard field, guard floor seconds)
+SUITES = [
+    {
+        "file": "BENCH_serve.json",
+        "key": ("graph", "client_batch"),
+        "metric": "queries_per_sec",
+        "higher_is_better": True,
+        "guard": ("seconds", 0.05),  # sub-50ms windows are all jitter
+    },
+    {
+        "file": "BENCH_neighborhood.json",
+        "key": ("graph",),
+        "metric": "speedup",  # cold/cached panel ratio: machine-neutral
+        "higher_is_better": True,
+        "guard": ("cold_seconds", 0.005),
+    },
+    {
+        "file": "BENCH_queryfusion.json",
+        "key": ("graph", "method"),
+        "metric": "speedup",  # per-kind/fused ratio: machine-neutral
+        "higher_is_better": True,
+        "guard": ("per_kind_seconds", 0.0002),
+    },
+]
+
+
+def _load(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _index(payload: dict, key_fields: tuple) -> dict:
+    return {tuple(rec[k] for k in key_fields): rec
+            for rec in payload.get("results", [])}
+
+
+def check(baseline_dir: str, fresh_dir: str, tolerance: float) -> int:
+    """Compare all suites; return the number of confirmed regressions."""
+    failures = 0
+    for suite in SUITES:
+        name = suite["file"]
+        base = _load(os.path.join(baseline_dir, name))
+        fresh = _load(os.path.join(fresh_dir, name))
+        if base is None:
+            print(f"SKIP {name}: no committed baseline")
+            continue
+        if fresh is None:
+            print(f"FAIL {name}: fresh run produced no JSON")
+            failures += 1
+            continue
+        if base.get("device") != fresh.get("device"):
+            print(f"SKIP {name}: baseline device {base.get('device')!r} != "
+                  f"fresh {fresh.get('device')!r} (not comparable)")
+            continue
+        base_idx = _index(base, suite["key"])
+        fresh_idx = _index(fresh, suite["key"])
+        joined = sorted(set(base_idx) & set(fresh_idx), key=str)
+        if not joined:
+            print(f"SKIP {name}: no overlapping record keys")
+            continue
+        metric = suite["metric"]
+        guard_field, guard_floor = suite["guard"]
+        for key in joined:
+            b, f = base_idx[key], fresh_idx[key]
+            label = f"{name}:{'/'.join(str(k) for k in key)}:{metric}"
+            if f.get(guard_field, guard_floor) < guard_floor:
+                print(f"SKIP {label}: {guard_field}="
+                      f"{f.get(guard_field):.2g}s below the jitter floor "
+                      f"({guard_floor}s) — runner too fast/noisy to judge")
+                continue
+            bv, fv = float(b[metric]), float(f[metric])
+            if bv <= 0:
+                print(f"SKIP {label}: degenerate baseline value {bv}")
+                continue
+            ratio = (bv / fv) if suite["higher_is_better"] else (fv / bv)
+            # ratio > 1 means "worse than baseline" in both directions
+            if ratio > tolerance:
+                print(f"FAIL {label}: {fv:.4g} vs baseline {bv:.4g} "
+                      f"({ratio:.2f}x worse > {tolerance}x tolerance)")
+                failures += 1
+            else:
+                print(f"OK   {label}: {fv:.4g} vs baseline {bv:.4g} "
+                      f"({ratio:.2f}x)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory with fresh BENCH_*.json files")
+    ap.add_argument("--baseline",
+                    default=os.path.dirname(os.path.abspath(__file__)),
+                    help="directory with committed baselines "
+                         "(default: benchmarks/)")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="fail only when a metric is this factor worse")
+    args = ap.parse_args()
+    failures = check(args.baseline, args.fresh, args.tolerance)
+    if failures:
+        print(f"{failures} perf regression(s) beyond {args.tolerance}x")
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

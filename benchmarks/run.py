@@ -2,10 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 ``python -m benchmarks.run [--full] [--only fig1,fig2,...]``.
+
+``--quick`` runs only the three JSON-emitting suites (serve,
+neighborhood panels, queryfusion) in their reduced configurations — the
+CI perf-regression gate's input (see benchmarks/check_regression.py);
+``--out-dir`` redirects the fresh ``BENCH_*.json`` files there so a gate
+run never overwrites the committed baselines.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -14,26 +21,49 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger graphs / more trials")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced JSON suites only (the CI perf gate)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig1,kernels")
+    ap.add_argument("--out-dir", default=None,
+                    help="write BENCH_*.json files here instead of "
+                         "benchmarks/ (keeps committed baselines intact)")
     args = ap.parse_args()
     small = not args.full
 
     from benchmarks import (
         bench_density, bench_heavyhitters, bench_intersection,
-        bench_kernels, bench_neighborhood, bench_scaling, bench_theorem1,
-        roofline_report,
+        bench_kernels, bench_neighborhood, bench_queryfusion, bench_scaling,
+        bench_serve, bench_theorem1, roofline_report,
     )
-    suites = {
-        "fig1": bench_neighborhood.run,
-        "fig2": bench_heavyhitters.run,
-        "fig3": bench_density.run,
-        "fig46+fig5": bench_scaling.run,
-        "fig78": bench_intersection.run,
-        "theorem1": bench_theorem1.run,
-        "kernels": bench_kernels.run,
-        "roofline": roofline_report.run,
+
+    def _out(default_path: str) -> str | None:
+        if args.out_dir is None:
+            return None
+        os.makedirs(args.out_dir, exist_ok=True)
+        return os.path.join(args.out_dir, os.path.basename(default_path))
+
+    # the JSON-emitting suites take (small, quick, out); the rest (small)
+    json_suites = {
+        "fig1": lambda: bench_neighborhood.run(
+            small=small, quick=args.quick, out=_out(bench_neighborhood.OUT)),
+        "serve": lambda: bench_serve.run(
+            small=small, quick=args.quick, out=_out(bench_serve.OUT)),
+        "queryfusion": lambda: bench_queryfusion.run(
+            small=small, quick=args.quick, out=_out(bench_queryfusion.OUT)),
     }
+    suites = {
+        **json_suites,
+        "fig2": lambda: bench_heavyhitters.run(small=small),
+        "fig3": lambda: bench_density.run(small=small),
+        "fig46+fig5": lambda: bench_scaling.run(small=small),
+        "fig78": lambda: bench_intersection.run(small=small),
+        "theorem1": lambda: bench_theorem1.run(small=small),
+        "kernels": lambda: bench_kernels.run(small=small),
+        "roofline": lambda: roofline_report.run(small=small),
+    }
+    if args.quick:
+        suites = json_suites
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -42,7 +72,7 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            fn(small=small)
+            fn()
         except Exception as e:  # keep the harness going; surface the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             import traceback

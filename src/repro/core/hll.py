@@ -24,7 +24,8 @@ from repro.core.hashing import bucket_rho
 
 __all__ = [
     "HLLConfig", "empty", "empty_table", "insert", "insert_table", "merge",
-    "alpha", "estimate", "estimate_flajolet", "estimate_beta", "rel_std",
+    "alpha", "estimate", "estimate_from_stats", "estimate_flajolet",
+    "estimate_beta", "rel_std",
 ]
 
 
@@ -115,6 +116,49 @@ def _harmonic_terms(regs: jax.Array) -> tuple[jax.Array, jax.Array]:
     return s, z
 
 
+def _combine_flajolet(s: jax.Array, z: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """Flajolet/linear-counting combination from harmonic statistics."""
+    r = float(cfg.r)
+    raw = alpha(cfg.r) * r * r / s
+    lin = r * jnp.log(r / jnp.maximum(z, 1.0))
+    use_lin = (raw <= 2.5 * r) & (z > 0)
+    return jnp.where(use_lin, lin, raw)
+
+
+def _combine_beta(s: jax.Array, z: jax.Array, cfg: HLLConfig) -> jax.Array:
+    """LogLogBeta combination (Eq. 17) from harmonic statistics."""
+    from repro.core._beta_coeffs import BETA_COEFFS
+    if cfg.p not in BETA_COEFFS:
+        raise ValueError(
+            f"no fitted beta coefficients for p={cfg.p}; "
+            f"run scripts/fit_beta.py (have: {sorted(BETA_COEFFS)})")
+    coeffs = jnp.asarray(BETA_COEFFS[cfg.p], dtype=jnp.float32)
+    r = float(cfg.r)
+    zl = jnp.log(z + 1.0)
+    # beta(r, z) = c0*z + c1*zl + c2*zl^2 + ... + c7*zl^7
+    powers = jnp.stack([z] + [zl ** k for k in range(1, 8)], axis=-1)
+    beta = jnp.einsum("...k,k->...", powers, coeffs)
+    return alpha(cfg.r) * r * (r - z) / (beta + s)
+
+
+def estimate_from_stats(s: jax.Array, z: jax.Array,
+                        cfg: HLLConfig) -> jax.Array:
+    """Cardinality estimate from precomputed (sum 2^-reg, zero count).
+
+    The estimator seam for the fused kernels (DESIGN.md §10): both the
+    Flajolet and beta combinations are pure functions of the per-row
+    harmonic statistics, so a kernel that reduces registers to (s, z)
+    on-chip — per row, per merged set, or per pair — never needs the
+    registers back. Bit-identical to :func:`estimate` on the same row
+    because :func:`estimate` routes through this combination too.
+    """
+    if cfg.estimator == "flajolet":
+        return _combine_flajolet(s, z, cfg)
+    if cfg.estimator == "beta":
+        return _combine_beta(s, z, cfg)
+    raise ValueError(f"unknown estimator {cfg.estimator!r}")
+
+
 def estimate_flajolet(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
     """Flajolet harmonic-mean estimator (Eq. 14) + linear counting.
 
@@ -122,12 +166,8 @@ def estimate_flajolet(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
     2.5*r we switch to linear counting (r * ln(r / z)) when any register is
     empty, the standard bias-safe combination.
     """
-    r = float(cfg.r)
     s, z = _harmonic_terms(regs)
-    raw = alpha(cfg.r) * r * r / s
-    lin = r * jnp.log(r / jnp.maximum(z, 1.0))
-    use_lin = (raw <= 2.5 * r) & (z > 0)
-    return jnp.where(use_lin, lin, raw)
+    return _combine_flajolet(s, z, cfg)
 
 
 def estimate_beta(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
@@ -136,19 +176,8 @@ def estimate_beta(regs: jax.Array, cfg: HLLConfig) -> jax.Array:
     Coefficients are fitted offline by ``scripts/fit_beta.py`` (as in the
     paper, following Qin et al. 2016) and committed in ``_beta_coeffs``.
     """
-    from repro.core._beta_coeffs import BETA_COEFFS
-    if cfg.p not in BETA_COEFFS:
-        raise ValueError(
-            f"no fitted beta coefficients for p={cfg.p}; "
-            f"run scripts/fit_beta.py (have: {sorted(BETA_COEFFS)})")
-    coeffs = jnp.asarray(BETA_COEFFS[cfg.p], dtype=jnp.float32)
-    r = float(cfg.r)
     s, z = _harmonic_terms(regs)
-    zl = jnp.log(z + 1.0)
-    # beta(r, z) = c0*z + c1*zl + c2*zl^2 + ... + c7*zl^7
-    powers = jnp.stack([z] + [zl ** k for k in range(1, 8)], axis=-1)
-    beta = jnp.einsum("...k,k->...", powers, coeffs)
-    return alpha(cfg.r) * r * (r - z) / (beta + s)
+    return _combine_beta(s, z, cfg)
 
 
 def estimate(regs: jax.Array, cfg: HLLConfig) -> jax.Array:

@@ -35,6 +35,7 @@ from repro.core.hll import HLLConfig
 
 __all__ = [
     "ertl_stats", "log_likelihood", "mle_cardinalities", "mle_intersection",
+    "mle_from_stats", "estimate_from_pair_stats",
     "inclusion_exclusion", "domination_flags",
 ]
 
@@ -145,6 +146,48 @@ def inclusion_exclusion(a: jax.Array, b: jax.Array, cfg: HLLConfig) -> jax.Array
     return ea + eb - eu
 
 
+def mle_from_stats(stats: jax.Array, ea: jax.Array, eb: jax.Array,
+                   eu: jax.Array, cfg: HLLConfig,
+                   iters: int = _NEWTON_ITERS,
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """MLE (|A\\B|, |B\\A|, |A ∩ B|) from Eq. 19 stats + HLL estimates.
+
+    ``stats`` is float32[B, 5, q+2] (:func:`ertl_stats` layout); ``ea`` /
+    ``eb`` / ``eu`` are the per-pair |A| / |B| / |A ∪ B| estimates used as
+    the clipped inclusion-exclusion Newton initializer. This is the back
+    half of :func:`mle_cardinalities`, split out so the fused
+    ``intersection_stats`` kernels (DESIGN.md §10) can feed it without
+    ever materializing gathered register panels.
+    """
+    x0 = jnp.maximum(ea + eb - eu, 1.0)
+    a0 = jnp.maximum(ea - x0, 1.0)
+    b0 = jnp.maximum(eb - x0, 1.0)
+    theta0 = jnp.log(jnp.stack([a0, b0, x0], axis=-1))
+    solve = jax.vmap(lambda th, st: _newton_solve(th, st, cfg.q, cfg.r, iters))
+    theta = solve(theta0, stats)
+    lam = jnp.exp(theta)
+    return lam[:, 0], lam[:, 1], lam[:, 2]
+
+
+def estimate_from_pair_stats(stats: jax.Array, sz: jax.Array,
+                             cfg: HLLConfig, method: str,
+                             iters: int = _NEWTON_ITERS) -> jax.Array:
+    """T̃(xy) per pair from fused pair statistics (no register panels).
+
+    ``sz`` is float32[B, 3, 2]: harmonic (s, z) statistics for A, B and
+    A ∪ B — exactly what the fused ``intersection_stats`` kernels emit.
+    ``method="mle"`` runs the Ertl maximum-likelihood estimator seeded by
+    inclusion-exclusion; ``"ie"`` returns the Eq. 18 baseline. Identical
+    ops, in the same order, as the unfused gather-then-estimate path.
+    """
+    ea = hll.estimate_from_stats(sz[:, 0, 0], sz[:, 0, 1], cfg)
+    eb = hll.estimate_from_stats(sz[:, 1, 0], sz[:, 1, 1], cfg)
+    eu = hll.estimate_from_stats(sz[:, 2, 0], sz[:, 2, 1], cfg)
+    if method == "ie":
+        return ea + eb - eu
+    return mle_from_stats(stats, ea, eb, eu, cfg, iters)[2]
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "iters"))
 def mle_cardinalities(a: jax.Array, b: jax.Array, cfg: HLLConfig,
                       iters: int = _NEWTON_ITERS) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -159,18 +202,9 @@ def mle_cardinalities(a: jax.Array, b: jax.Array, cfg: HLLConfig,
     ea = hll.estimate(a2, cfg)
     eb = hll.estimate(b2, cfg)
     eu = hll.estimate(hll.merge(a2, b2), cfg)
-    x0 = jnp.maximum(ea + eb - eu, 1.0)
-    a0 = jnp.maximum(ea - x0, 1.0)
-    b0 = jnp.maximum(eb - x0, 1.0)
-    theta0 = jnp.log(jnp.stack([a0, b0, x0], axis=-1))
-
     stats = ertl_stats(a2, b2, cfg)
-
-    solve = jax.vmap(lambda th, st: _newton_solve(th, st, cfg.q, cfg.r, iters))
-    theta = solve(theta0, stats)
-    lam = jnp.exp(theta)
-    out = tuple(lam[:, i].reshape(batch_shape) for i in range(3))
-    return out
+    out = mle_from_stats(stats, ea, eb, eu, cfg, iters)
+    return tuple(lam.reshape(batch_shape) for lam in out)
 
 
 def mle_intersection(a: jax.Array, b: jax.Array, cfg: HLLConfig,

@@ -27,6 +27,8 @@ semantics the engine is tested against.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core.hll import HLLConfig
@@ -36,7 +38,21 @@ from repro.engine.sharded import ShardedEngine
 from repro.kernels import registry
 
 __all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "open", "build",
-           "load"]
+           "load", "default_impl"]
+
+
+def default_impl() -> str:
+    """Kernel impl used when callers don't pass ``impl=`` explicitly.
+
+    Resolved from the ``REPRO_IMPL`` environment variable (default
+    ``"ref"``), evaluated per call so a test session or launcher that
+    sets it late is still honored. This is how the CI matrix leg runs
+    the whole tier-1 suite over the Pallas kernel bodies (interpret mode
+    off-TPU) without touching every call site: ``REPRO_IMPL=pallas
+    pytest``. ``engine.load`` is unaffected — a checkpoint's recorded
+    impl wins unless overridden at the call.
+    """
+    return os.environ.get("REPRO_IMPL", "ref")
 
 _BACKENDS = {"local": LocalEngine, "sharded": ShardedEngine}
 
@@ -52,7 +68,7 @@ def _validate(backend: str, shards, impl: str) -> None:
 
 
 def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
-         shards: int | None = None, impl: str = "ref") -> SketchEngine:
+         shards: int | None = None, impl: str | None = None) -> SketchEngine:
     """An empty engine over vertex universe [0, n), ready to ingest.
 
     This is the streaming entry point (Algorithm 1 as a lifecycle): the
@@ -70,9 +86,11 @@ def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
         engine owns; ``shards`` defaults to the visible device count, and
         the vertex partition is fixed now, independent of future edges).
       impl: kernel implementation threaded through ``repro.kernels.ops``
-        ("ref" jnp oracles, "pallas" the TPU kernels).
+        ("ref" jnp oracles, "pallas" the TPU kernels); defaults to
+        :func:`default_impl` (the ``REPRO_IMPL`` env var, or "ref").
     """
     cfg = cfg or HLLConfig()
+    impl = impl or default_impl()
     _validate(backend, shards, impl)
     if backend == "sharded":
         return ShardedEngine.open(n, cfg, shards=shards, impl=impl)
@@ -81,7 +99,8 @@ def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
 
 def build(edges: np.ndarray, n: int | None = None,
           cfg: HLLConfig | None = None, *, backend: str = "local",
-          shards: int | None = None, impl: str = "ref") -> SketchEngine:
+          shards: int | None = None,
+          impl: str | None = None) -> SketchEngine:
     """Accumulate a DegreeSketch (Algorithm 1) and return a query engine.
 
     A thin wrapper over :func:`open` + one ``ingest(edges)`` call — batch
@@ -96,7 +115,8 @@ def build(edges: np.ndarray, n: int | None = None,
       backend: "local" (single device) or "sharded" (SPMD over a mesh the
         engine owns; ``shards`` defaults to the visible device count).
       impl: kernel implementation threaded through ``repro.kernels.ops``
-        ("ref" jnp oracles, "pallas" the TPU kernels).
+        ("ref" jnp oracles, "pallas" the TPU kernels); defaults to
+        :func:`default_impl` (the ``REPRO_IMPL`` env var, or "ref").
     """
     edges = np.asarray(edges)
     if n is None:

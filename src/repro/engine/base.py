@@ -28,6 +28,8 @@ Queries answered through one typed, batched API:
   ingest/merge version bump — a repeat on an unchanged engine runs zero
   propagate passes
 * ``triangle_heavy_hitters(k, mode=)`` — Algorithms 4/5
+* ``query_batch(...)``                 — a mixed degrees/union/intersection
+  micro-batch answered by ONE compiled fused program (DESIGN.md §10)
 
 Query planning lives one layer down (DESIGN.md §3b,
 ``repro.engine.plans``): inputs are normalized and validated against the
@@ -394,7 +396,8 @@ class SketchEngine(abc.ABC):
         """
         ids, mask = plans.pad_sets(sets)
         fn = self._plan("union", bucket=ids.shape,
-                        builder=lambda: plans.build_union_plan(self.cfg))
+                        builder=lambda: plans.build_union_plan(self.cfg,
+                                                               self.kernels))
         return np.asarray(fn(self._regs, ids, mask))[: len(sets)]
 
     def intersection_size(self, pairs, *, method: str = "mle",
@@ -422,9 +425,95 @@ class SketchEngine(abc.ABC):
         ids, mask = plans.pad_pairs(arr)
         fn = self._plan(
             "intersection", bucket=(ids.shape[0],), extra=(method, iters),
-            builder=lambda: plans.build_intersection_plan(self.cfg, method,
-                                                          iters))
+            builder=lambda: plans.build_intersection_plan(
+                self.cfg, self.kernels, method, iters))
         return np.asarray(fn(self._regs, ids, mask))[: arr.shape[0]]
+
+    def query_batch(self, *, vertex_sets=None, pairs=None,
+                    degrees: bool = False, method: str = "mle",
+                    iters: int = _NEWTON_ITERS) -> dict:
+        """Answer a mixed degrees/union/intersection micro-batch at once.
+
+        When two or more kinds are requested, the whole batch runs as ONE
+        compiled mixed-kind program (DESIGN.md §10) instead of one program
+        per kind — the serving path for coalesced heterogeneous client
+        batches. Answers are bit-identical to the per-kind methods (each
+        sub-query runs the same fused plan body under the same masks).
+
+        Args:
+          vertex_sets: union input (same forms as :meth:`union_size`), or
+            ``None`` to skip union queries.
+          pairs: intersection input (same forms as
+            :meth:`intersection_size`), or ``None`` to skip.
+          degrees: include the full d̃(x) table in the answer.
+          method / iters: intersection estimator knobs (one group per
+            batch; callers with mixed methods split batches).
+
+        Returns a dict with keys among ``"degrees"`` / ``"union"`` /
+        ``"intersection"`` — arrays shaped exactly like the per-kind
+        methods' batched returns.
+        """
+        if method not in ("mle", "ie"):
+            raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        sets = None
+        if vertex_sets is not None:
+            sets, _ = plans.split_sets(vertex_sets, self.n)
+        arr = None
+        if pairs is not None:
+            arr, _ = plans.split_pairs(pairs, self.n)
+        return self._query_batch_presplit(sets, arr, degrees, method, iters)
+
+    def _query_batch_presplit(self, sets, arr, want_degrees: bool,
+                              method: str, iters: int) -> dict:
+        """Mixed-kind batch over pre-parsed inputs (serving hot path).
+
+        ``sets`` is a list of validated id arrays or ``None``; ``arr`` a
+        validated (B, 2) pair array or ``None``. Single-kind batches fall
+        through to the per-kind plans (their buckets are already cached);
+        two or more kinds resolve one ``mixed`` plan keyed by the combined
+        shape buckets + kinds + estimator coordinates.
+        """
+        kinds = tuple(k for k, want in (
+            ("degrees", want_degrees),
+            ("union", bool(sets)),
+            ("intersection", arr is not None and len(arr) > 0)) if want)
+        if len(kinds) < 2:  # nothing to fuse: reuse the per-kind plans
+            out = {}
+            if want_degrees:
+                out["degrees"] = self.degrees()
+            if sets:
+                out["union"] = self._union_presplit(sets)
+            if arr is not None and len(arr):
+                out["intersection"] = self._intersection_presplit(
+                    arr, method, iters)
+            return out
+        # dummy panels for absent kinds: the traced body never touches
+        # them, but the plan callable takes a fixed argument list
+        if sets:
+            u_ids, u_mask = plans.pad_sets(sets)
+        else:
+            u_ids = np.zeros((1, 1), np.int32)
+            u_mask = np.zeros((1, 1), bool)
+        if arr is not None and len(arr):
+            p_ids, p_mask = plans.pad_pairs(arr)
+        else:
+            p_ids = np.zeros((1, 2), np.int32)
+            p_mask = np.zeros((1,), bool)
+        fn = self._plan(
+            "mixed", bucket=(u_ids.shape, p_ids.shape[0]),
+            extra=(kinds, method, iters),
+            builder=lambda: plans.build_mixed_plan(self.cfg, self.kernels,
+                                                   kinds, method, iters))
+        raw = fn(self._regs, u_ids, u_mask, p_ids, p_mask)
+        out = {}
+        if "degrees" in raw:
+            out["degrees"] = np.asarray(raw["degrees"])[: self.n]
+        if "union" in raw:
+            out["union"] = np.asarray(raw["union"])[: len(sets)]
+        if "intersection" in raw:
+            out["intersection"] = np.asarray(
+                raw["intersection"])[: arr.shape[0]]
+        return out
 
     # ------------------------------------------------- t-hop panel cache
     def _canonical_schedule(self, schedule: str) -> str:

@@ -6,7 +6,10 @@ selecting the "ref" jnp oracles or "pallas" kernels); ingestion uses the
 donated accumulate entry (allocation-free block loop, DESIGN.md §3a);
 triangle queries reuse the ``core.degreesketch`` reference
 implementations (DESIGN.md §3). Query plans come from the shared LRU
-plan cache (DESIGN.md §3b).
+plan cache (DESIGN.md §3b); degrees/union/intersection (and the
+mixed-kind batch) resolve the fused estimation kernels from the same
+``KernelSet`` (DESIGN.md §10), so ``impl="pallas"`` serves queries
+through the single-pass kernel bodies.
 """
 from __future__ import annotations
 

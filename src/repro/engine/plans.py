@@ -52,7 +52,8 @@ __all__ = [
     "PlanCache", "global_cache", "trace_counts", "reset_trace_counts",
     "record_trace", "record_event", "event_counts", "reset_event_counts",
     "build_degrees_plan", "build_union_plan",
-    "build_intersection_plan", "build_merge_plan", "build_propagate_plan",
+    "build_intersection_plan", "build_mixed_plan", "build_merge_plan",
+    "build_propagate_plan",
 ]
 
 
@@ -389,30 +390,73 @@ def build_degrees_plan(cfg, kernels):
     return jax.jit(fn)
 
 
-def build_union_plan(cfg):
-    """Plan: batched |∪ N(x)| over bucketed (ids, mask) set panels."""
+def _union_body(regs, ids, mask, cfg, kernels):
+    """Shared fused-union body (per-kind and mixed plans trace the same)."""
+    return kernels.union_estimate(regs, ids, mask, cfg)
+
+
+def _intersection_body(regs, pairs, mask, cfg, kernels, method, iters):
+    """Shared fused-intersection body: stats kernel + estimator tail."""
+    stats, sz = kernels.intersection_stats(regs, pairs, cfg)
+    est = intersection.estimate_from_pair_stats(stats, sz, cfg, method,
+                                                iters)
+    return jnp.where(mask, est, 0.0)
+
+
+def build_union_plan(cfg, kernels):
+    """Plan: batched |∪ N(x)| over bucketed (ids, mask) set panels.
+
+    Fused (DESIGN.md §10): the kernel set's ``union_estimate`` gathers,
+    max-merges and reduces each set row in one pass — the merged register
+    panels the old two-pass plan materialized between its gather and
+    estimate stages never exist. The ref impl is the bit-checked oracle
+    for that old path (same ops, same order).
+    """
     def fn(regs, ids, mask):
         record_trace("union")
-        rows = jnp.where(mask[:, :, None], regs[ids], jnp.uint8(0))
-        return hll.estimate(jnp.max(rows, axis=1), cfg)
+        return _union_body(regs, ids, mask, cfg, kernels)
     return jax.jit(fn)
 
 
-def build_intersection_plan(cfg, method: str, iters: int):
+def build_intersection_plan(cfg, kernels, method: str, iters: int):
     """Plan: batched T̃(xy) over bucketed (pairs, mask) panels.
 
-    ``method="mle"`` is Ertl's maximum-likelihood estimator; ``"ie"`` the
-    inclusion-exclusion baseline (Eq. 18). Both are static plan
-    coordinates (they change the traced program).
+    Fused (DESIGN.md §10): ``intersection_stats`` gathers both endpoint
+    sketches per pair and emits the Eq. 19 histograms plus the (s, z)
+    panels in one pass; the MLE / inclusion-exclusion tail runs from the
+    statistics alone. ``method="mle"`` is Ertl's maximum-likelihood
+    estimator; ``"ie"`` the inclusion-exclusion baseline (Eq. 18). Both
+    are static plan coordinates (they change the traced program).
     """
     def fn(regs, pairs, mask):
         record_trace("intersection")
-        a, b = regs[pairs[:, 0]], regs[pairs[:, 1]]
-        if method == "mle":
-            est = intersection.mle_intersection(a, b, cfg, iters)
-        else:
-            est = intersection.inclusion_exclusion(a, b, cfg)
-        return jnp.where(mask, est, 0.0)
+        return _intersection_body(regs, pairs, mask, cfg, kernels, method,
+                                  iters)
+    return jax.jit(fn)
+
+
+def build_mixed_plan(cfg, kernels, kinds: tuple, method: str, iters: int):
+    """Plan: one program answering a degrees+union+intersection micro-batch.
+
+    ``kinds`` (a static subset of ``("degrees", "union", "intersection")``)
+    selects which sub-queries the traced program computes; the callable
+    always takes ``(regs, u_ids, u_mask, p_ids, p_mask)`` — panels for
+    absent kinds are dummies the trace never touches. Each sub-answer is
+    computed by the same fused body as its per-kind plan, so a coalesced
+    mixed batch is bit-identical to per-kind calls while costing ONE
+    compiled-program launch instead of ``len(kinds)`` (DESIGN.md §10).
+    """
+    def fn(regs, u_ids, u_mask, p_ids, p_mask):
+        record_trace("mixed")
+        out = {}
+        if "degrees" in kinds:
+            out["degrees"] = kernels.estimate_rows(regs, cfg)
+        if "union" in kinds:
+            out["union"] = _union_body(regs, u_ids, u_mask, cfg, kernels)
+        if "intersection" in kinds:
+            out["intersection"] = _intersection_body(
+                regs, p_ids, p_mask, cfg, kernels, method, iters)
+        return out
     return jax.jit(fn)
 
 

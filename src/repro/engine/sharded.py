@@ -3,11 +3,14 @@
 The engine owns the Mesh, axis name and host-side ``DistPlan`` — callers
 never thread ``(mesh, axis, plan, cfg, regs, ...)`` through free functions.
 The register table lives sharded over the mesh axis (block vertex
-partition f); shared queries (degrees, union, intersection) run on the
-global sharded array under jit, while propagation and heavy hitters use
-the shard_map schedules (DESIGN.md §2, §3). Jitted steps — including the
-shard_map programs built by ``sketch_dist`` — are cached through the
-shared query-plan cache with the shard count in the key (DESIGN.md §3b).
+partition f); shared queries (degrees, union, intersection, mixed-kind
+batches) run on the global sharded array under jit through the same
+fused estimation plans as the local backend (DESIGN.md §10 — the plan
+key's backend/shard coordinates keep the compiled programs distinct),
+while propagation and heavy hitters use the shard_map schedules
+(DESIGN.md §2, §3). Jitted steps — including the shard_map programs
+built by ``sketch_dist`` — are cached through the shared query-plan
+cache with the shard count in the key (DESIGN.md §3b).
 
 Streaming (DESIGN.md §3a): the vertex partition is fixed at ``open`` time
 (``sd.vertex_partition`` is edge-independent), each ``ingest`` block is

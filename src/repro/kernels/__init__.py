@@ -1,6 +1,9 @@
-# Kernel layer (DESIGN.md §4, §9): Pallas TPU kernels for the paper's
-# hot spots + pure-jnp oracles with identical semantics (ref.py is the
-# contract). Implementations register (op, impl) entries in registry.py;
-# ops.py holds the padding/hashing glue and registers the built-in
-# "ref"/"pallas" impls. Engines resolve a capability-checked KernelSet
-# once at open/load via registry.resolve(impl, cfg).
+"""Kernel layer (DESIGN.md §4, §9, §10): Pallas TPU kernels for the
+paper's hot spots + pure-jnp oracles with identical semantics (ref.py is
+the contract). Implementations register (op, impl) entries in
+registry.py; ops.py holds the padding/hashing glue and registers the
+built-in "ref"/"pallas" impls — including the fused query-estimation ops
+(union_estimate, intersection_stats) that serve queries in one pass.
+Engines resolve a capability-checked KernelSet once at open/load via
+registry.resolve(impl, cfg).
+"""

@@ -21,16 +21,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import hll
 from repro.core.hashing import bucket_rho
-from repro.core.hll import HLLConfig, alpha
+from repro.core.hll import HLLConfig
 from repro.kernels import ref, registry
 from repro.kernels.hll_accumulate import hll_accumulate as _acc_kernel
 from repro.kernels.hll_propagate import hll_propagate as _prop_kernel
 from repro.kernels.hll_estimate import hll_estimate_stats as _est_kernel
 from repro.kernels.ertl_stats import ertl_stats as _ertl_kernel
+from repro.kernels.union_estimate import union_estimate_stats as _union_kernel
+from repro.kernels.intersection_stats import (
+    intersection_stats as _inter_kernel)
 
 __all__ = ["accumulate", "accumulate_donated", "propagate", "estimate",
-           "ertl_stats"]
+           "ertl_stats", "union_estimate", "intersection_stats"]
 
 
 def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
@@ -140,10 +144,71 @@ def estimate(regs: jax.Array, cfg: HLLConfig, impl: str = "pallas",
     ``registry.KernelSet.estimate_rows`` for the explicit fallback.
     """
     s, z = registry.lookup("estimate", impl)(regs, row_block=row_block)
-    r = float(cfg.r)
-    raw = alpha(cfg.r) * r * r / s
-    lin = r * jnp.log(r / jnp.maximum(z, 1.0))
-    return jnp.where((raw <= 2.5 * r) & (z > 0), lin, raw)
+    return hll._combine_flajolet(s, z, cfg)
+
+
+# ----------------------------------------------------------- union_estimate
+@registry.register("union_estimate", "ref")
+def _union_estimate_ref(regs, ids, mask, *, set_block=8):
+    return ref.union_estimate_ref(regs, ids, mask)
+
+
+@registry.register("union_estimate", "pallas")
+def _union_estimate_pallas(regs, ids, mask, *, set_block=8):
+    b = ids.shape[0]
+    ids_p = _pad_to(ids.astype(jnp.int32), set_block, 0)
+    mask_p = _pad_to(mask, set_block, False)
+    stats = _union_kernel(regs, ids_p, mask_p, set_block=set_block,
+                          interpret=registry.interpret_mode())
+    return stats[:b, 0], stats[:b, 1]
+
+
+def union_estimate(regs: jax.Array, ids: jax.Array, mask: jax.Array,
+                   cfg: HLLConfig, impl: str = "pallas",
+                   set_block: int = 8) -> jax.Array:
+    """Fused batched |∪ N(x)| over a padded (ids, mask) set panel.
+
+    One pass per set row: gather member sketches, lane-wise max-merge,
+    reduce to (s, z) — the merged register panel never hits HBM
+    (DESIGN.md §10). The O(B) estimator combination honors
+    ``cfg.estimator`` through ``hll.estimate_from_stats``; masked-out
+    lanes merge the empty row, so padding can never inflate a union.
+    """
+    s, z = registry.lookup("union_estimate", impl)(regs, ids, mask,
+                                                   set_block=set_block)
+    return hll.estimate_from_stats(s, z, cfg)
+
+
+# ------------------------------------------------------- intersection_stats
+@registry.register("intersection_stats", "ref")
+def _intersection_stats_ref(regs, pa, pb, q, *, pair_block=64):
+    return ref.intersection_stats_ref(regs, pa, pb, q)
+
+
+@registry.register("intersection_stats", "pallas")
+def _intersection_stats_pallas(regs, pa, pb, q, *, pair_block=64):
+    b = pa.shape[0]
+    pa_p = _pad_to(pa.astype(jnp.int32), pair_block, 0)
+    pb_p = _pad_to(pb.astype(jnp.int32), pair_block, 0)
+    stats, sz = _inter_kernel(regs, pa_p, pb_p, q, pair_block=pair_block,
+                              interpret=registry.interpret_mode())
+    return stats[:b], sz[:b]
+
+
+def intersection_stats(regs: jax.Array, pairs: jax.Array, cfg: HLLConfig,
+                       impl: str = "pallas", pair_block: int = 64,
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Fused per-pair statistics for T̃(xy) over padded (B, 2) pair lanes.
+
+    Gathers both endpoint sketches per pair and emits the Eq. 19 count
+    histograms float32[B, 5, q+2] plus the harmonic (s, z) panels
+    float32[B, 3, 2] for A / B / A ∪ B in one pass — the inputs of
+    ``intersection.estimate_from_pair_stats`` — without materializing the
+    gathered register panels (DESIGN.md §10). Padding pairs gather row 0
+    (harmless; the plan masks the final estimates).
+    """
+    fn = registry.lookup("intersection_stats", impl)
+    return fn(regs, pairs[:, 0], pairs[:, 1], cfg.q, pair_block=pair_block)
 
 
 # --------------------------------------------------------------- ertl_stats

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "hll_accumulate_ref", "hll_propagate_ref", "hll_estimate_ref",
-    "ertl_stats_ref",
+    "ertl_stats_ref", "union_estimate_ref", "intersection_stats_ref",
 ]
 
 
@@ -48,6 +48,44 @@ def hll_estimate_ref(regs: jax.Array, alpha: float) -> tuple[jax.Array, jax.Arra
     s = jnp.sum(jnp.exp2(-x), axis=-1)
     z = jnp.sum(regs == 0, axis=-1).astype(jnp.float32)
     return s, z
+
+
+def union_estimate_ref(regs: jax.Array, ids: jax.Array, mask: jax.Array,
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Fused union statistics: (s, z) of the masked lane-wise row max.
+
+    regs: uint8[V, r]; ids: int32[B, L]; mask: bool[B, L] ->
+    (float32[B], float32[B]). Masked-out lanes contribute the empty row
+    (never vertex 0's registers); a fully masked set row reduces to the
+    empty sketch. This is the exact computation of the old two-pass union
+    plan (gather -> where(mask) -> max -> harmonic stats), restructured so
+    a kernel can keep the merged rows on-chip.
+    """
+    rows = jnp.where(mask[:, :, None], regs[ids], jnp.uint8(0))
+    return hll_estimate_ref(jnp.max(rows, axis=1), 0.0)
+
+
+def intersection_stats_ref(regs: jax.Array, pa: jax.Array, pb: jax.Array,
+                           q: int) -> tuple[jax.Array, jax.Array]:
+    """Fused pair statistics: Eq. 19 histograms + (s, z) for A, B, A ∪ B.
+
+    regs: uint8[V, r]; pa/pb: int32[B] (pair endpoints) ->
+    (float32[B, 5, q+2], float32[B, 3, 2]). The sz panel is stacked
+    [(s_a, z_a), (s_b, z_b), (s_union, z_union)] — everything the MLE /
+    inclusion-exclusion tail (``intersection.estimate_from_pair_stats``)
+    needs, so the gathered register panels never leave the kernel.
+    Padding pairs gather row 0 like the old two-pass plan did; the caller
+    masks the final estimates.
+    """
+    a, b = regs[pa], regs[pb]
+    stats = ertl_stats_ref(a, b, q)
+    s_a, z_a = hll_estimate_ref(a, 0.0)
+    s_b, z_b = hll_estimate_ref(b, 0.0)
+    s_u, z_u = hll_estimate_ref(jnp.maximum(a, b), 0.0)
+    sz = jnp.stack([jnp.stack([s_a, z_a], axis=-1),
+                    jnp.stack([s_b, z_b], axis=-1),
+                    jnp.stack([s_u, z_u], axis=-1)], axis=-2)
+    return stats, sz
 
 
 def ertl_stats_ref(a: jax.Array, b: jax.Array, q: int) -> jax.Array:

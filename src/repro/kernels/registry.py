@@ -31,8 +31,15 @@ import jax
 __all__ = ["OPS", "register", "lookup", "impls", "resolve", "KernelSet",
            "interpret_mode"]
 
-#: op names a complete kernel implementation provides (the §4 hot paths).
-OPS = ("accumulate", "propagate", "estimate", "ertl_stats")
+#: op names a complete kernel implementation provides (the §4 hot paths,
+#: including the §10 fused query-estimation ops).
+OPS = ("accumulate", "propagate", "estimate", "ertl_stats",
+       "union_estimate", "intersection_stats")
+
+#: ops whose plans hand every impl a padding mask (bucketed inputs); an
+#: impl that cannot accept one would silently merge padding, so resolve()
+#: rejects it up front.
+MASKED_OPS = ("propagate", "union_estimate")
 
 _REGISTRY: dict[tuple[str, str], object] = {}
 _BOOTSTRAPPED = False
@@ -140,6 +147,27 @@ class KernelSet:
         return ops.ertl_stats(a, b, cfg, impl=self.impl,
                               pair_block=pair_block)
 
+    def union_estimate(self, regs, ids, mask, cfg, set_block=8):
+        """Fused batched union estimates (see ``ops.union_estimate``).
+
+        Estimator-agnostic: the kernel reduces merged rows to (s, z) and
+        the combination honors ``cfg.estimator`` outside — no fallback
+        needed for beta configs (DESIGN.md §10).
+        """
+        from repro.kernels import ops
+        return ops.union_estimate(regs, ids, mask, cfg, impl=self.impl,
+                                  set_block=set_block)
+
+    def intersection_stats(self, regs, pairs, cfg, pair_block=64):
+        """Fused per-pair T̃(xy) statistics (see ``ops.intersection_stats``).
+
+        Returns ``(stats float32[B, 5, q+2], sz float32[B, 3, 2])`` for
+        ``intersection.estimate_from_pair_stats`` to consume.
+        """
+        from repro.kernels import ops
+        return ops.intersection_stats(regs, pairs, cfg, impl=self.impl,
+                                      pair_block=pair_block)
+
     def estimate_rows(self, regs, cfg):
         """Per-row cardinality estimates honoring ``cfg.estimator``.
 
@@ -173,18 +201,19 @@ def resolve(impl: str, cfg=None) -> KernelSet:
         raise ValueError(
             f"impl must be a fully registered kernel implementation; "
             f"{impl!r} lacks {missing} (registered impls: {known})")
-    # capability: the shape-bucketed propagate plans (DESIGN.md §3c) hand
-    # every registered propagate a padding mask — an impl that cannot
-    # accept one would silently merge padding edges, so it fails here.
-    prop_sig = inspect.signature(_REGISTRY[("propagate", impl)])
-    accepts_mask = ("mask" in prop_sig.parameters
-                    or any(p.kind is inspect.Parameter.VAR_POSITIONAL
-                           for p in prop_sig.parameters.values()))
-    if not accepts_mask:
-        raise ValueError(
-            f"propagate impl {impl!r} does not accept a 'mask' argument; "
-            f"bucketed propagate plans pad edge routings and require "
-            f"masked-out slots (signature: {prop_sig})")
+    # capability: the shape-bucketed plans (DESIGN.md §3c, §10) hand every
+    # impl of a MASKED_OPS op a padding mask — an impl that cannot accept
+    # one would silently merge padding edges/lanes, so it fails here.
+    for op in MASKED_OPS:
+        sig = inspect.signature(_REGISTRY[(op, impl)])
+        accepts_mask = ("mask" in sig.parameters
+                        or any(p.kind is inspect.Parameter.VAR_POSITIONAL
+                               for p in sig.parameters.values()))
+        if not accepts_mask:
+            raise ValueError(
+                f"{op} impl {impl!r} does not accept a 'mask' argument; "
+                f"bucketed {op} plans pad their inputs and require "
+                f"masked-out slots (signature: {sig})")
     estimator = getattr(cfg, "estimator", "flajolet") if cfg else "flajolet"
     fallback = None
     if estimator != "flajolet":

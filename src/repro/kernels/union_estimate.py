@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused union cardinality statistics (DESIGN.md §10).
+
+Semantics = ref.union_estimate_ref: for each padded id set (one row of a
+bucketed (B, L) id panel), gather the member sketches, lane-wise max-merge
+them, and reduce the merged row to the harmonic statistics (s, z) — in one
+pass, without the merged register panel ever leaving the chip. The O(B)
+estimator combination (Flajolet / linear counting / beta) stays outside
+the kernel behind the ``hll.estimate_from_stats`` seam.
+
+TPU design: the register panel (V, r) is pinned in VMEM for the whole grid
+(same contract as accumulate/propagate: caller bounds V*r per shard); ids
+and masks are scalars in SMEM. Each grid step owns a block of set rows and
+a (set_block, r) VMEM scratch: a fori_loop walks the block's lanes doing
+(1, r) row loads max-accumulated into the scratch — masked lanes multiply
+the row by 0, so padding merges the empty row (never vertex 0's sketch) —
+then one vectorized VPU reduction turns the merged panel into the (s, z)
+output columns. HBM traffic is r bytes per *member*, in and nothing out
+but 8 bytes per set; the old two-pass path wrote and re-read the whole
+merged (B, r) panel between its gather and estimate programs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["union_estimate_stats"]
+
+DEFAULT_SET_BLOCK = 8
+
+
+def _kernel(regs_ref, ids_ref, mask_ref, out_ref, acc_ref):
+    bb, lanes = ids_ref.shape
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def member(e, _):
+        b = e // lanes
+        li = e % lanes
+        keep = mask_ref[b, li].astype(jnp.uint8)
+        row = pl.load(regs_ref, (pl.dslice(ids_ref[b, li], 1), slice(None)))
+        cur = pl.load(acc_ref, (pl.dslice(b, 1), slice(None)))
+        pl.store(acc_ref, (pl.dslice(b, 1), slice(None)),
+                 jnp.maximum(cur, row * keep))
+        return 0
+
+    jax.lax.fori_loop(0, bb * lanes, member, 0)
+    x = acc_ref[...].astype(jnp.float32)
+    out_ref[:, 0] = jnp.sum(jnp.exp2(-x), axis=1)
+    out_ref[:, 1] = jnp.sum((x == 0.0).astype(jnp.float32), axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("set_block", "interpret"))
+def union_estimate_stats(regs: jax.Array, ids: jax.Array, mask: jax.Array,
+                         *, set_block: int = DEFAULT_SET_BLOCK,
+                         interpret: bool = True) -> jax.Array:
+    """regs: uint8[V, r]; ids: int32[B, L]; mask: bool[B, L] (B a multiple
+    of set_block) -> float32[B, 2] = (s, z) of each masked union row."""
+    v, r = regs.shape
+    b, lanes = ids.shape
+    assert mask.shape == (b, lanes), (mask.shape, ids.shape)
+    assert b % set_block == 0, (b, set_block)
+    grid = (b // set_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, r), lambda i: (0, 0)),  # panel pinned in VMEM
+            pl.BlockSpec((set_block, lanes), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((set_block, lanes), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((set_block, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((set_block, r), jnp.uint8)],
+        interpret=interpret,
+        name="union_estimate_stats",
+    )(regs, ids.astype(jnp.int32), mask.astype(jnp.int32))

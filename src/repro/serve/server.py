@@ -20,6 +20,13 @@ Design (DESIGN.md §3b):
   compiled programs per query kind — and every per-request answer is
   bit-identical to a direct engine call, because batched rows are
   computed independently under the padding masks.
+* **Mixed-kind fusion.** Contiguous degrees/union/intersection requests
+  coalesce across *kinds* too: the segment is answered by ONE compiled
+  mixed-kind program (``SketchEngine.query_batch``, DESIGN.md §10)
+  instead of one program per kind, cutting launch + host-sync overhead
+  for heterogeneous client mixes. Intersection requests join the fused
+  program only when the segment has a single ``(method, iters)`` group;
+  extra groups are served in the same drain through the per-kind plan.
 * **Client calls are plain blocking methods**, safe from any thread;
   errors raised by a request (bad ids, edge-free engine, ...) propagate
   to the calling client only, never poisoning the rest of a batch.
@@ -40,6 +47,11 @@ from repro.engine.base import validate_t_max
 __all__ = ["QueryServer", "ServerClosed"]
 
 _LATENCY_WINDOW = 8192  # per-kind latency samples kept for the stats
+
+#: kinds the mixed-kind fused program (DESIGN.md §10) can answer — a
+#: contiguous drained run of these coalesces into one segment and, when
+#: at least two kinds are present, one compiled program.
+_FUSABLE = ("degrees", "union", "intersection")
 
 
 class ServerClosed(RuntimeError):
@@ -87,6 +99,7 @@ class QueryServer:
         self._t0 = None  # first submit (throughput window start)
         self._t_last = None
         self._stats: dict[str, dict] = {}
+        self._fused_batches = 0
         self._latency_window = int(latency_window)
         self._trace_base = plans.trace_counts()  # delta baseline for stats
         self._worker = threading.Thread(target=self._run, daemon=True,
@@ -211,13 +224,16 @@ class QueryServer:
     def stats(self) -> dict:
         """Serving statistics snapshot.
 
-        Per query kind: ``requests``, ``batches`` (engine calls actually
-        made — coalescing makes this smaller), ``max_coalesced`` and
-        latency percentiles ``p50_ms`` / ``p99_ms``. Top level adds the
-        request rate over the active window (``requests_per_sec``), the
-        current ``epoch``, and the plan layer's compiled-program counters
-        (``plan_traces`` — programs traced since this server was created,
-        the O(log N) quantity — plus the shared-cache hit/miss stats).
+        Per query kind: ``requests``, ``batches`` (serving drains that
+        touched the kind — coalescing makes this smaller; kinds sharing
+        a fused mixed program each count the segment once),
+        ``max_coalesced`` and latency percentiles ``p50_ms`` / ``p99_ms``.
+        Top level adds the request rate over the active window
+        (``requests_per_sec``), the current ``epoch``, ``fused_batches``
+        (mixed-kind program launches, DESIGN.md §10), and the plan
+        layer's compiled-program counters (``plan_traces`` — programs
+        traced since this server was created, the O(log N) quantity —
+        plus the shared-cache hit/miss stats).
         """
         with self._cv:
             out: dict = {"epoch": self._epoch}
@@ -237,12 +253,30 @@ class QueryServer:
             span = ((self._t_last or 0.0) - (self._t0 or 0.0))
             out["requests_total"] = total
             out["requests_per_sec"] = (total / span) if span > 0 else None
+            out["fused_batches"] = self._fused_batches
         now_traces = plans.trace_counts()
         out["plan_traces"] = {  # programs compiled since THIS server opened
             k: v - self._trace_base.get(k, 0) for k, v in now_traces.items()
             if v - self._trace_base.get(k, 0) > 0}
         out["plan_cache"] = self._eng.plan_cache.stats()
         return out
+
+    def reset_stats(self) -> None:
+        """Zero the serving-statistics window (counters, latencies, rate).
+
+        Benchmarks call this after their warmup requests so first-compile
+        latency outliers (trace + XLA compile time on the first request
+        at a new shape bucket) don't dominate the reported p99 — compile
+        time is real but is a *startup* cost, reported separately from
+        steady-state serving latency. The epoch and the engine's plan
+        cache are untouched.
+        """
+        with self._cv:
+            self._stats.clear()
+            self._fused_batches = 0
+            self._t0 = None
+            self._t_last = None
+        self._trace_base = plans.trace_counts()
 
     # -------------------------------------------------------------- worker
     def _submit(self, kind: str, payload: tuple) -> _Request:
@@ -275,36 +309,108 @@ class QueryServer:
                             r.error = e
                         r.done.set()
 
-    def _serve(self, batch: list[_Request]) -> None:
-        """Serve one drained batch: coalesce contiguous same-kind runs.
+    @staticmethod
+    def _segments(batch: list[_Request]) -> list[list[_Request]]:
+        """Split a drained batch into contiguous serveable segments.
 
-        Arrival order is preserved across kinds (an ingest between two
-        query runs stays between them — that is the epoch barrier).
+        Same-kind requests coalesce as before; additionally, adjacent
+        requests whose kinds are all in :data:`_FUSABLE` merge into one
+        mixed segment for the fused program. Arrival order is preserved
+        across segments (an ingest between two query runs stays between
+        them — that is the epoch barrier).
         """
-        i = 0
-        while i < len(batch):
-            kind = batch[i].kind
-            j = i
-            while j < len(batch) and batch[j].kind == kind:
-                j += 1
-            run = batch[i:j]
-            serve = getattr(self, f"_serve_{kind}")
-            serve(run)
+        segs: list[list[_Request]] = []
+        for r in batch:
+            if segs and (r.kind == segs[-1][-1].kind
+                         or (r.kind in _FUSABLE
+                             and segs[-1][-1].kind in _FUSABLE)):
+                segs[-1].append(r)
+            else:
+                segs.append([r])
+        return segs
+
+    def _serve(self, batch: list[_Request]) -> None:
+        """Serve one drained batch segment by segment (see _segments)."""
+        for seg in self._segments(batch):
+            if len({r.kind for r in seg}) > 1:
+                self._serve_fused(seg)
+            else:
+                getattr(self, f"_serve_{seg[0].kind}")(seg)
             now = time.monotonic()
             with self._cv:
                 self._t_last = now
-                s = self._stats.setdefault(kind, {
-                    "requests": 0, "batches": 0, "max_coalesced": 0,
-                    "latencies": deque(maxlen=self._latency_window)})
-                s["requests"] += len(run)
-                s["batches"] += 1
-                s["max_coalesced"] = max(s["max_coalesced"], len(run))
-                for r in run:
-                    r.t_done = now
-                    s["latencies"].append(now - r.t_submit)
-            for r in run:
+                for kind in dict.fromkeys(r.kind for r in seg):
+                    run = [r for r in seg if r.kind == kind]
+                    s = self._stats.setdefault(kind, {
+                        "requests": 0, "batches": 0, "max_coalesced": 0,
+                        "latencies": deque(maxlen=self._latency_window)})
+                    s["requests"] += len(run)
+                    s["batches"] += 1
+                    s["max_coalesced"] = max(s["max_coalesced"], len(run))
+                    for r in run:
+                        r.t_done = now
+                        s["latencies"].append(now - r.t_submit)
+            for r in seg:
                 r.done.set()
-            i = j
+
+    def _serve_fused(self, seg: list[_Request]) -> None:
+        """Serve a mixed degrees/union/intersection segment.
+
+        When at least two kinds can share the program (intersections
+        require a single ``(method, iters)`` group), the segment is
+        answered by ONE compiled mixed-kind plan via
+        ``SketchEngine._query_batch_presplit`` — bit-identical to the
+        per-kind paths. Non-fusable leftovers (extra intersection groups)
+        are served through their per-kind plan in the same drain.
+        """
+        deg = [r for r in seg if r.kind == "degrees"]
+        uni = [r for r in seg if r.kind == "union"]
+        inter = [r for r in seg if r.kind == "intersection"]
+        groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+        for r in inter:
+            groups.setdefault(r.payload[2:], []).append(r)
+        fused_inter = inter if len(groups) == 1 else []
+        fused_kinds = [k for k, rs in (("degrees", deg), ("union", uni),
+                                       ("intersection", fused_inter)) if rs]
+        if len(fused_kinds) < 2:  # nothing to fuse after grouping
+            for rs, kind in ((deg, "degrees"), (uni, "union"),
+                             (inter, "intersection")):
+                if rs:
+                    getattr(self, f"_serve_{kind}")(rs)
+            return
+        all_sets: list[np.ndarray] = []
+        for r in uni:
+            all_sets.extend(r.payload[0])
+        pairs = (np.concatenate([r.payload[0] for r in fused_inter], axis=0)
+                 if fused_inter else None)
+        method, iters = (next(iter(groups)) if fused_inter
+                         else ("mle", _NEWTON_ITERS))
+        fused = deg + uni + fused_inter
+        try:
+            out = self._eng._query_batch_presplit(
+                all_sets or None, pairs, bool(deg), method, iters)
+        except Exception as e:  # noqa: BLE001 — propagate to clients
+            self._fail(fused, e)
+        else:
+            self._fused_batches += 1
+            for r in deg:
+                r.result, r.epoch = out["degrees"], self._epoch
+            pos = 0
+            for r in uni:
+                sets, scalar = r.payload
+                chunk = out["union"][pos:pos + len(sets)]
+                pos += len(sets)
+                r.result = float(chunk[0]) if scalar else chunk
+                r.epoch = self._epoch
+            pos = 0
+            for r in fused_inter:
+                arr, scalar = r.payload[0], r.payload[1]
+                chunk = out["intersection"][pos:pos + len(arr)]
+                pos += len(arr)
+                r.result = float(chunk[0]) if scalar else chunk
+                r.epoch = self._epoch
+        if inter and not fused_inter:
+            self._serve_intersection(inter)
 
     def _fail(self, run: list[_Request], err: BaseException) -> None:
         for r in run:

@@ -1,0 +1,26 @@
+"""Session configuration: kernel-impl selection for the CI matrix.
+
+The CI matrix runs tier-1 twice — once with the default jnp ``ref``
+oracles and once with ``REPRO_IMPL=pallas``, which flips
+``repro.engine.default_impl()`` so every engine built without an explicit
+``impl=`` exercises the Pallas kernel bodies (interpret mode off-TPU) on
+every push. This conftest threads the flag through pytest: the selected
+impl is validated against the kernel registry up front (a typo fails the
+session immediately, naming the registered impls) and reported in the
+test header so a log always says which leg it is.
+"""
+import os
+
+from repro.kernels import registry
+
+REPRO_IMPL = os.environ.get("REPRO_IMPL", "ref")
+
+
+def pytest_configure(config):
+    """Fail fast (naming registered impls) if REPRO_IMPL is unknown."""
+    registry.resolve(REPRO_IMPL)
+
+
+def pytest_report_header(config):
+    """Show which kernel impl this session's default engines use."""
+    return f"repro kernel impl: {REPRO_IMPL} (set REPRO_IMPL=ref|pallas)"

@@ -1,10 +1,10 @@
-"""Doc-coverage gate for the public ``repro.engine``/``repro.serve`` surface.
+"""Doc-coverage gate: public ``repro.engine``/``serve``/``kernels`` surface.
 
-Every public module, class, method and function under ``repro.engine``
-and ``repro.serve`` must carry a docstring — this is the same contract CI
-enforces with ``interrogate --fail-under 100 src/repro/engine
-src/repro/serve``, duplicated here with stdlib ``inspect`` so the tier-1
-run needs no extra dependency.
+Every public module, class, method and function under ``repro.engine``,
+``repro.serve`` and ``repro.kernels`` must carry a docstring — this is
+the same contract CI enforces with ``interrogate --fail-under 100
+src/repro/engine src/repro/serve src/repro/kernels``, duplicated here
+with stdlib ``inspect`` so the tier-1 run needs no extra dependency.
 """
 import importlib
 import inspect
@@ -13,13 +13,16 @@ import pkgutil
 import pytest
 
 import repro.engine
+import repro.kernels
 import repro.serve
 
-MODULES = ["repro.engine", "repro.serve"] + [
+MODULES = ["repro.engine", "repro.serve", "repro.kernels"] + [
     f"repro.engine.{m.name}"
     for m in pkgutil.iter_modules(repro.engine.__path__)] + [
     f"repro.serve.{m.name}"
-    for m in pkgutil.iter_modules(repro.serve.__path__)]
+    for m in pkgutil.iter_modules(repro.serve.__path__)] + [
+    f"repro.kernels.{m.name}"
+    for m in pkgutil.iter_modules(repro.kernels.__path__)]
 
 
 def _public_members(obj, modname):

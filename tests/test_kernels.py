@@ -68,6 +68,47 @@ def test_ertl_stats_sweep(p, e):
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r))
 
 
+@pytest.mark.parametrize("p", [6, 8])
+@pytest.mark.parametrize("v", [8, 64])
+@pytest.mark.parametrize("b,l", [(1, 1), (3, 7), (8, 16), (17, 4)])
+def test_union_estimate_sweep(p, v, b, l):
+    rng = _rng(p * 91 + v + b * 10 + l)
+    cfg = HLLConfig(p=p)
+    regs = jnp.asarray(rng.integers(0, 30, size=(v, cfg.r)), jnp.uint8)
+    ids = jnp.asarray(rng.integers(0, v, size=(b, l)), jnp.int32)
+    mask = jnp.asarray(rng.random((b, l)) > 0.3)
+    s_k, z_k = ops.registry.lookup("union_estimate", "pallas")(
+        regs, ids, mask, set_block=4)
+    s_r, z_r = ops.registry.lookup("union_estimate", "ref")(regs, ids, mask)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+
+
+@pytest.mark.parametrize("p", [6, 8])
+@pytest.mark.parametrize("v,b", [(8, 1), (64, 65), (32, 128)])
+def test_intersection_stats_sweep(p, v, b):
+    rng = _rng(p * 53 + v + b)
+    cfg = HLLConfig(p=p)
+    regs = jnp.asarray(rng.integers(0, 30, size=(v, cfg.r)), jnp.uint8)
+    pairs = jnp.asarray(rng.integers(0, v, size=(b, 2)), jnp.int32)
+    st_k, sz_k = ops.intersection_stats(regs, pairs, cfg, impl="pallas",
+                                        pair_block=32)
+    st_r, sz_r = ops.intersection_stats(regs, pairs, cfg, impl="ref")
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r))
+    np.testing.assert_allclose(np.asarray(sz_k), np.asarray(sz_r), rtol=1e-6)
+
+
+def test_union_estimate_masked_lanes_merge_empty_row():
+    """A masked lane must contribute the empty row, not vertex 0's regs."""
+    cfg = HLLConfig(p=6)
+    regs = jnp.asarray(np.full((4, cfg.r), 9), jnp.uint8)  # row 0 nonzero
+    ids = jnp.zeros((1, 4), jnp.int32)
+    mask = jnp.asarray([[False, False, False, False]])
+    for impl in ("ref", "pallas"):
+        s, z = ops.registry.lookup("union_estimate", impl)(regs, ids, mask)
+        assert float(z[0]) == cfg.r, impl  # merged row is all-empty
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 50), st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
 def test_accumulate_property(v, e, seed):

@@ -1,0 +1,189 @@
+"""Fused query-estimation plans vs the two-pass oracle (ISSUE 5).
+
+Acceptance contract:
+(a) the fused union/intersection/degrees plans answer bit-identically
+    (ref) / allclose (pallas interpret) to the old two-pass
+    gather -> materialize -> estimate computation, across shape buckets,
+    padded lanes, estimator methods and both backends;
+(b) the mixed-kind batch (``SketchEngine.query_batch``) compiles ONE
+    program per (kinds, bucket) combination — asserted through the plan
+    layer's trace counters — and its answers are bit-identical to the
+    per-kind plans;
+(c) padding lanes never leak into an estimate (masked lanes merge the
+    empty row; padded pairs are masked to 0.0).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import hll, intersection
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+from repro.graph import generators as gen
+
+CFG = HLLConfig(p=8)
+BACKENDS = ["local", "sharded"]
+IMPLS = ["ref", "pallas"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+def _build(edges, n, backend, impl="ref"):
+    shards = 1 if backend == "sharded" else None
+    return engine.build(edges, n, CFG, backend=backend, shards=shards,
+                        impl=impl)
+
+
+def _two_pass_union(regs, sets, cfg):
+    """The old two-pass union plan: gather -> masked max -> estimate."""
+    ids, mask = plans.pad_sets(sets)
+    rows = jnp.where(mask[:, :, None], jnp.asarray(regs)[ids], jnp.uint8(0))
+    return np.asarray(hll.estimate(jnp.max(rows, axis=1), cfg))[: len(sets)]
+
+
+def _two_pass_intersection(regs, arr, cfg, method, iters):
+    """The old two-pass plan: gather panels -> MLE / IE -> mask."""
+    ids, mask = plans.pad_pairs(arr)
+    a, b = jnp.asarray(regs)[ids[:, 0]], jnp.asarray(regs)[ids[:, 1]]
+    if method == "mle":
+        est = intersection.mle_intersection(a, b, cfg, iters)
+    else:
+        est = intersection.inclusion_exclusion(a, b, cfg)
+    return np.asarray(jnp.where(mask, est, 0.0))[: arr.shape[0]]
+
+
+# ------------------------------------------------------- fused vs two-pass
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("sizes", [[3], [5, 1, 30], [4] * 9, [1] * 17])
+def test_union_fused_matches_two_pass(graph, impl, sizes):
+    """Shape buckets + ragged padded lanes, ref exact / pallas allclose."""
+    edges, n = graph
+    eng = _build(edges, n, "local", impl)
+    rng = np.random.default_rng(sum(sizes))
+    sets = [rng.integers(0, n, size=s) for s in sizes]
+    got = eng.union_size(sets)
+    want = _two_pass_union(eng.regs, [s.astype(np.int64) for s in sets], CFG)
+    if impl == "ref":
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("method", ["mle", "ie"])
+@pytest.mark.parametrize("nb", [1, 9, 33])
+def test_intersection_fused_matches_two_pass(graph, impl, method, nb):
+    edges, n = graph
+    eng = _build(edges, n, "local", impl)
+    arr = edges[:nb].astype(np.int64)
+    got = eng.intersection_size(arr, method=method)
+    want = _two_pass_intersection(eng.regs, arr, CFG, method, 50)
+    if impl == "ref":
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_plans_agree_across_backends(graph, backend):
+    """Both backends ride the fused plans and answer identically."""
+    edges, n = graph
+    eng = _build(edges, n, backend)
+    sets = [np.arange(4), np.arange(11)]
+    np.testing.assert_array_equal(
+        eng.union_size(sets), _two_pass_union(eng.regs, sets, CFG))
+    arr = edges[:7].astype(np.int64)
+    np.testing.assert_array_equal(
+        eng.intersection_size(arr),
+        _two_pass_intersection(eng.regs, arr, CFG, "mle", 50))
+
+
+def test_beta_estimator_rides_fused_union(graph):
+    """(s, z) is estimator-agnostic: beta unions need no fallback."""
+    edges, n = graph
+    cfg = HLLConfig(p=8, estimator="beta")
+    eng = engine.build(edges, n, cfg, backend="local")
+    sets = [np.arange(6), np.arange(2)]
+    ids, mask = plans.pad_sets(sets)
+    rows = jnp.where(mask[:, :, None], eng.regs[ids], jnp.uint8(0))
+    want = np.asarray(hll.estimate(jnp.max(rows, axis=1), cfg))[: len(sets)]
+    # the beta einsum fuses differently inside the fused program: allclose
+    np.testing.assert_allclose(eng.union_size(sets), want, rtol=1e-5)
+
+
+def test_union_padding_rows_and_lanes_masked(graph):
+    """Batch composition cannot leak: singles == batched, any padding."""
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    sets = [np.arange(3), np.array([n - 1]), np.arange(25)]
+    batched = eng.union_size(sets)
+    for s, got in zip(sets, batched):
+        assert eng.union_size(s) == pytest.approx(float(got), abs=0.0)
+
+
+# ------------------------------------------------------- mixed-kind batch
+def test_mixed_batch_compiles_one_program(graph):
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng._plan_cache = plans.PlanCache(maxsize=32)
+    sets = [np.arange(5), np.arange(2)]
+    arr = edges[:6]
+    plans.reset_trace_counts()
+    out = eng.query_batch(vertex_sets=sets, pairs=arr, degrees=True)
+    traces = plans.trace_counts()
+    assert traces == {"mixed": 1}, traces  # ONE program, no per-kind plans
+    # same buckets -> no retrace; different bucket -> one more program
+    eng.query_batch(vertex_sets=sets, pairs=edges[:5], degrees=True)
+    assert plans.trace_counts() == {"mixed": 1}
+    eng.query_batch(vertex_sets=sets, pairs=edges[:20], degrees=True)
+    assert plans.trace_counts() == {"mixed": 2}
+    assert set(out) == {"degrees", "union", "intersection"}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mixed_batch_bit_identical_to_per_kind(graph, backend):
+    edges, n = graph
+    eng = _build(edges, n, backend)
+    sets = [np.arange(8), np.array([0])]
+    arr = edges[:11]
+    out = eng.query_batch(vertex_sets=sets, pairs=arr, degrees=True,
+                          method="ie")
+    np.testing.assert_array_equal(out["degrees"], eng.degrees())
+    np.testing.assert_array_equal(out["union"], eng.union_size(sets))
+    np.testing.assert_array_equal(out["intersection"],
+                                  eng.intersection_size(arr, method="ie"))
+
+
+def test_mixed_batch_single_kind_falls_back_to_per_kind_plan(graph):
+    """No point compiling a mixed program for a homogeneous batch."""
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng._plan_cache = plans.PlanCache(maxsize=32)
+    plans.reset_trace_counts()
+    out = eng.query_batch(vertex_sets=[np.arange(4)])
+    assert "mixed" not in plans.trace_counts()
+    assert set(out) == {"union"}
+    np.testing.assert_array_equal(out["union"],
+                                  eng.union_size([np.arange(4)]))
+
+
+def test_mixed_batch_validates_inputs(graph):
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    with pytest.raises(ValueError, match="method"):
+        eng.query_batch(pairs=edges[:2], degrees=True, method="nope")
+    with pytest.raises(ValueError, match="universe"):
+        eng.query_batch(vertex_sets=[np.array([n + 1])], degrees=True)
+    with pytest.raises(ValueError, match="integer dtype"):
+        eng.query_batch(pairs=np.array([[0.5, 1.0]]), degrees=True)
+
+
+def test_empty_query_batch_is_empty(graph):
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    assert eng.query_batch() == {}

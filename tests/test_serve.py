@@ -131,6 +131,70 @@ def test_concurrent_mixed_clients_log_bound_programs(graph):
     assert stats["requests_total"] == n_clients * per_client * 2
 
 
+def test_mixed_kind_segment_fused_into_one_program(graph):
+    """Coalesced degrees+union+intersection ride ONE mixed program and
+    stay bit-identical to direct per-kind engine calls (ISSUE 5)."""
+    edges, n = graph
+    direct = _build(edges, n, "local")
+    eng = _build(edges, n, "local")
+    eng._plan_cache = plans.PlanCache(maxsize=32)
+    sets = [np.arange(5), np.array([n - 1])]
+    pa = edges[:6].astype(np.int64)
+    want_u = direct.union_size(sets)
+    want_d = direct.degrees()
+    want_i = direct.intersection_size(pa)
+    with QueryServer(eng) as srv:
+        srv.pause()
+        ru = srv._submit("union", plans.split_sets(sets, n))
+        rd = srv._submit("degrees", ())
+        ri = srv._submit("intersection", (pa, False, "mle", 50))
+        plans.reset_trace_counts()
+        srv.resume()
+        np.testing.assert_array_equal(ru.wait(), want_u)
+        np.testing.assert_array_equal(rd.wait(), want_d)
+        np.testing.assert_array_equal(ri.wait(), want_i)
+        traces = plans.trace_counts()
+        stats = srv.stats()
+    assert traces == {"mixed": 1}, traces  # one program for three kinds
+    assert stats["fused_batches"] == 1
+    for kind in ("union", "degrees", "intersection"):
+        assert stats[kind]["batches"] == 1
+
+
+def test_mixed_segment_extra_intersection_group_served_unfused(graph):
+    """A second (method, iters) group can't share the fused program — it
+    is served through the per-kind plan in the same drain, correctly."""
+    edges, n = graph
+    direct = _build(edges, n, "local")
+    with QueryServer(_build(edges, n, "local")) as srv:
+        srv.pause()
+        rd = srv._submit("degrees", ())
+        pa = edges[:3].astype(np.int64)
+        pb = edges[3:8].astype(np.int64)
+        ra = srv._submit("intersection", (pa, False, "mle", 50))
+        rb = srv._submit("intersection", (pb, False, "ie", 50))
+        srv.resume()
+        np.testing.assert_array_equal(rd.wait(), direct.degrees())
+        np.testing.assert_array_equal(ra.wait(),
+                                      direct.intersection_size(pa))
+        np.testing.assert_array_equal(
+            rb.wait(), direct.intersection_size(pb, method="ie"))
+
+
+def test_reset_stats_clears_the_window(graph):
+    edges, n = graph
+    with QueryServer(_build(edges, n, "local")) as srv:
+        srv.degrees()
+        assert srv.stats()["requests_total"] == 1
+        srv.reset_stats()
+        stats = srv.stats()
+        assert stats["requests_total"] == 0
+        assert stats["fused_batches"] == 0
+        assert stats["plan_traces"] == {}  # trace baseline re-anchored
+        srv.degrees()  # the server keeps serving after a reset
+        assert srv.stats()["requests_total"] == 1
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_queries_interleaved_with_ingest(graph, backend):
     """Clients query while blocks stream in: no crash, no stale panel."""

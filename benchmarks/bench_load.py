@@ -1,0 +1,234 @@
+"""SLO load harness: continuous vs epoch-barrier serving under ingest.
+
+The ISSUE 6 acceptance metric: with edge blocks arriving *while* query
+clients are running, how much reader tail latency does the epoch-barrier
+``QueryServer`` pay for its donated-accumulate stalls, and how much of it
+does the ``ContinuousServer`` writer/reader split win back by serving
+from rotating snapshots?
+
+Each cell runs the SAME mixed workload (union / intersection / degrees
+thunks via ``repro.serve.loadgen``) twice over the same engine state:
+
+* **barrier** — one ``QueryServer``; an ingest thread pushes blocks
+  through ``server.ingest`` (a barrier: every reader queued behind it
+  waits out the full accumulate step);
+* **continuous** — one ``ContinuousServer`` rotating a snapshot per
+  block; the same ingest thread pushes the same blocks on the same
+  cadence, and readers never stall.
+
+The ingest stream is the graph's second half tiled up to heavyweight
+blocks (~2^17 directed updates each — register max is idempotent, so
+tiling is honest accumulate work), making the barrier stall an
+*execution* cost, not a compile artifact. Compile time is excluded the
+PR 5 way, extended to every plan either mode can reach: per-graph warmup
+compiles the per-kind and fused programs at EVERY shape bucket a
+client-pileup drain can coalesce to (``_warm_coalesced``) plus the
+accumulate plan at each block's bucket — without this, the barrier's
+pileups cascade into first-compile storms and the report measures XLA
+compile time instead of serving architecture. After each continuous run
+the harness flushes and asserts served answers are bit-identical to
+direct engine calls at the published snapshot version. Emits CSV via
+``benchmarks.common.emit`` and writes ``BENCH_load.json``
+(p50/p99/p999, achieved qps, shed rate, snapshot staleness, and the
+headline ``p99_speedup``) into the ``check_regression.py`` gate.
+
+    PYTHONPATH=src:. python benchmarks/bench_load.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph_suite, query_shapes, warmup_queries
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.core.intersection import _NEWTON_ITERS
+from repro.serve import ContinuousServer, QueryServer, RotationPolicy
+from repro.serve import loadgen
+
+CLIENTS = 4
+REQUESTS = 40            # per client, closed loop
+OPEN_RATE = 150.0        # offered req/s, open loop
+OPEN_DURATION = 2.0      # seconds of open-loop arrivals
+BATCH = 8                # per-request batch (pairs / sets)
+INGEST_BLOCKS = 8        # concurrent edge blocks per run
+INGEST_GAP = 0.02        # seconds between block arrivals
+BLOCK_EDGES = 1 << 19    # target directed updates per ingest block
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_load.json")
+
+
+def _mix(srv, pairs, sets):
+    """The mixed query workload, closed over one server."""
+    return [
+        ("union", lambda: srv.union_size(sets)),
+        ("intersection", lambda: srv.intersection_size(pairs)),
+        ("degrees", lambda: srv.degrees()),
+    ]
+
+
+def _blocks(rest: np.ndarray, count: int) -> list[np.ndarray]:
+    """Tile the held-out edges into ``count`` heavyweight ingest blocks."""
+    tile = max(1, -(-BLOCK_EDGES * count // max(len(rest), 1)))
+    return list(np.array_split(np.tile(rest, (tile, 1)), count))
+
+
+def _warm_coalesced(eng, base: np.ndarray, n: int, clients: int) -> None:
+    """Compile every plan a serving drain can reach for this workload.
+
+    Closed-loop clients have one request in flight each, so a drain
+    coalesces at most ``clients`` same-kind requests — i.e. per-kind and
+    fused programs at every power-of-two bucket in
+    [BATCH, clients * BATCH], in any sets x pairs x degrees combination.
+    Warming the full reachable set keeps first-compile storms (seconds
+    each, and self-amplifying: one stall piles up a bigger, colder batch)
+    out of BOTH modes' timed windows.
+    """
+    buckets = []
+    b = BATCH
+    while b <= clients * BATCH:
+        buckets.append(b)
+        b *= 2
+    shapes = {nb: query_shapes(base, n, nb) for nb in buckets}
+    eng.degrees()
+    for nb in buckets:
+        pairs, sets = shapes[nb]
+        eng._union_presplit(sets)
+        eng._intersection_presplit(pairs, "mle", _NEWTON_ITERS)
+        eng._query_batch_presplit(sets, None, True, "mle", _NEWTON_ITERS)
+        eng._query_batch_presplit(None, pairs, True, "mle", _NEWTON_ITERS)
+        for nbp in buckets:
+            pairs2, _ = shapes[nbp]
+            for deg in (True, False):
+                eng._query_batch_presplit(sets, pairs2, deg, "mle",
+                                          _NEWTON_ITERS)
+
+
+def _ingest_thread(ingest, blocks, gap):
+    """Push blocks on a fixed cadence until the list is exhausted."""
+    def run():
+        for b in blocks:
+            ingest(b)
+            time.sleep(gap)
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+def _run_cell(mode: str, loop: str, base: np.ndarray, splits: list,
+              n: int, cfg: HLLConfig, *, clients: int, requests: int) -> dict:
+    """One (serving mode, loop shape) cell; returns its record fields."""
+    eng = engine.build(base, n, cfg, backend="local")
+    pairs, sets = query_shapes(base, n, BATCH)
+    if mode == "barrier":
+        srv = QueryServer(eng)
+    else:
+        srv = ContinuousServer(eng, rotation=RotationPolicy(every_blocks=1))
+    try:
+        wt = _ingest_thread(srv.ingest, splits, INGEST_GAP)
+        mix = _mix(srv, pairs, sets)
+        if loop == "closed":
+            rep = loadgen.closed_loop(mix, clients=clients,
+                                      requests_per_client=requests)
+        else:
+            rep = loadgen.open_loop(mix, rate=OPEN_RATE,
+                                    duration=OPEN_DURATION)
+        wt.join()
+        if mode == "continuous":
+            srv.flush()
+            # rotation must never change an answer: served degrees are
+            # bit-identical to a direct engine call at the published
+            # snapshot version (all blocks applied)
+            direct = engine.build(
+                np.concatenate([base] + splits), n, cfg, backend="local")
+            assert np.array_equal(np.asarray(srv.degrees()),
+                                  np.asarray(direct.degrees())), \
+                "continuous serving diverged from direct engine state"
+        stats = srv.stats()
+    finally:
+        srv.close()
+    out = dict(rep.summary())
+    if mode == "continuous":
+        out["snapshot"] = {k: stats["snapshot"][k]
+                           for k in ("version", "rotations", "age_seconds",
+                                     "version_lag")}
+        out["shed_total"] = stats["shed_total"]
+        out["deadline_misses"] = stats["deadline_misses"]
+    return out
+
+
+def run(small: bool = True, quick: bool = False, out: str | None = None,
+        ) -> None:
+    """Sweep graphs x loop shapes; print CSV + write JSON.
+
+    ``quick`` restricts the sweep to the rmat9 x closed cell with a
+    lighter client load (the CI gate cell; joined against the committed
+    baseline by ``(graph, loop)``, so the baseline's rmat9/closed record
+    is produced with the same quick configuration); ``out`` redirects
+    the JSON so gate runs never dirty the checkout.
+    """
+    cfg = HLLConfig(p=8)
+    suite = graph_suite(small)
+    loops = ["closed", "open"]
+    clients, requests, blocks = CLIENTS, REQUESTS, INGEST_BLOCKS
+    if quick:
+        suite = {"rmat9": suite["rmat9"]}
+        loops = ["closed"]
+        clients, requests, blocks = 2, 24, 4
+    records = []
+    for name, edges in suite.items():
+        n = int(edges.max()) + 1
+        half = len(edges) // 2
+        base, rest = edges[:half], edges[half:]
+        splits = _blocks(rest, blocks)
+        # per-graph warmup (shared plan cache): query + coalesced-shape
+        # plans on a scratch engine, then the accumulate plan at each
+        # ingest block's bucket — both serving modes ride these programs
+        t0 = time.monotonic()
+        scratch = engine.build(base, n, cfg, backend="local")
+        pairs, sets = query_shapes(base, n, BATCH)
+        warmup_queries(scratch, pairs, sets)
+        _warm_coalesced(scratch, base, n, clients)
+        for b in splits:
+            scratch.ingest(b)
+        warmup = time.monotonic() - t0
+        for loop in loops:
+            cells = {}
+            for mode in ("barrier", "continuous"):
+                cells[mode] = _run_cell(mode, loop, base, splits, n, cfg,
+                                        clients=clients, requests=requests)
+            b99 = cells["barrier"]["p99_ms"]
+            c99 = cells["continuous"]["p99_ms"]
+            speedup = (b99 / max(c99, 1e-9)
+                       if b99 is not None and c99 is not None else None)
+            derived = (f"barrier_p99_ms={b99:.2f};"
+                       f"continuous_p99_ms={c99:.2f};"
+                       f"p99_speedup={speedup:.2f}x"
+                       if speedup is not None else "p99_speedup=n/a")
+            emit(f"load/{name}/{loop}", (c99 or 0.0) * 1e3, derived)
+            records.append({
+                "graph": name, "n": n, "m": int(len(edges)), "loop": loop,
+                "clients": clients, "requests_per_client": requests,
+                "batch": BATCH, "ingest_blocks": blocks,
+                "block_edges": int(len(splits[0])),
+                "warmup_seconds": warmup,
+                "barrier": cells["barrier"],
+                "continuous": cells["continuous"],
+                "barrier_p99_ms": b99, "continuous_p99_ms": c99,
+                "p99_speedup": speedup,
+            })
+    payload = {"benchmark": "load", "p": cfg.p,
+               "device": jax.devices()[0].platform, "results": records}
+    path = out or OUT
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

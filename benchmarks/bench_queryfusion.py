@@ -24,12 +24,11 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, graph_suite
+from benchmarks.common import emit, graph_suite, time_interleaved
 from repro import engine
 from repro.core.hll import HLLConfig
 from repro.engine import plans
@@ -46,21 +45,6 @@ def _inputs(edges: np.ndarray, n: int, seed: int = 7):
             for _ in range(UNION_SETS)]
     arr = edges[rng.integers(0, len(edges), size=PAIRS)].astype(np.int64)
     return sets, arr
-
-
-def _time_interleaved(fn_a, fn_b, repeats: int) -> tuple[float, float]:
-    """Mean seconds/call of two paths, alternated so load drift cancels."""
-    fn_a()  # warmup: compile outside the timed window
-    fn_b()
-    total_a = total_b = 0.0
-    for _ in range(repeats):
-        t0 = time.monotonic()
-        fn_a()
-        total_a += time.monotonic() - t0
-        t0 = time.monotonic()
-        fn_b()
-        total_b += time.monotonic() - t0
-    return total_a / repeats, total_b / repeats
 
 
 def run(small: bool = True, quick: bool = False, out: str | None = None,
@@ -87,7 +71,7 @@ def run(small: bool = True, quick: bool = False, out: str | None = None,
                 eng._query_batch_presplit(sets, arr, True, method, iters)
 
             plans.reset_trace_counts()
-            unfused_s, fused_s = _time_interleaved(per_kind, fused, REPEATS)
+            unfused_s, fused_s = time_interleaved(per_kind, fused, REPEATS)
             traces = plans.trace_counts()
             assert traces.get("mixed", 0) <= 1, traces  # ONE program
             speedup = unfused_s / max(fused_s, 1e-9)

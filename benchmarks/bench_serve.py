@@ -29,10 +29,9 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, graph_suite
+from benchmarks.common import emit, graph_suite, query_shapes, warmup_queries
 from repro import engine
 from repro.core.hll import HLLConfig
-from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import plans
 from repro.serve import QueryServer
 
@@ -59,30 +58,15 @@ def _serve_time(edges: np.ndarray, n: int, cfg: HLLConfig,
     """(wall secs, warmup secs, stats) for CLIENTS x REQUESTS requests."""
     eng = engine.build(edges, n, cfg, backend="local")
     plans.reset_trace_counts()  # per-run compiled-program counts
+    # warmup: compile the per-kind AND fused mixed programs at this
+    # batch-size bucket (benchmarks.common.warmup_queries) before the
+    # server opens, so first-compile latency outliers are reported as
+    # warmup_seconds, not as a serving p99. Coalesced super-batches can
+    # still compile their larger buckets inside the timed window; that
+    # is genuine serving cost.
+    pairs, sets = query_shapes(edges, n, batch)
+    warmup = warmup_queries(eng, pairs, sets)
     with QueryServer(eng) as server:
-        # warmup: compile BOTH query kinds at this batch-size bucket —
-        # solo (per-kind plans, for homogeneous drains) AND as one paused
-        # mixed batch (the fused union+intersection program concurrent
-        # clients coalesce onto) — deterministically, never relying on
-        # _drive's coin flips; then reset the stats window so the
-        # first-compile latency outliers are reported as warmup_seconds,
-        # not as a serving p99. Coalesced super-batches can still compile
-        # their larger buckets inside the timed window; that is genuine
-        # serving cost.
-        t0 = time.monotonic()
-        pairs = edges[np.arange(batch) % len(edges)].astype(np.int64)
-        sets = [np.arange(4) % n for _ in range(batch)]
-        server.intersection_size(pairs)
-        server.union_size(sets)
-        server.pause()
-        warm = [server._submit("intersection",
-                               (pairs, False, "mle", _NEWTON_ITERS)),
-                server._submit("union", plans.split_sets(sets, n))]
-        server.resume()
-        for r in warm:
-            r.wait()
-        warmup = time.monotonic() - t0
-        server.reset_stats()
         t0 = time.monotonic()
         threads = [threading.Thread(target=_drive,
                                     args=(server, edges, n, batch, REQUESTS,

@@ -1,13 +1,15 @@
-"""Shared benchmark utilities: graph suite, timing, CSV emission."""
+"""Shared benchmark utilities: graph suite, timing, warmup, CSV emission."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
+from repro.core.intersection import _NEWTON_ITERS
 from repro.graph import generators as gen
 
-__all__ = ["graph_suite", "timer", "emit"]
+__all__ = ["graph_suite", "timer", "emit", "time_interleaved",
+           "query_shapes", "warmup_queries"]
 
 
 def graph_suite(small: bool = True) -> dict:
@@ -40,3 +42,64 @@ def timer(fn, *args, repeats: int = 1, **kw):
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_interleaved(fn_a, fn_b, repeats: int) -> tuple[float, float]:
+    """Mean seconds/call of two paths, alternated so load drift cancels.
+
+    Both paths get one untimed warmup call first (compile time excluded —
+    steady-state cost is the quantity), then A and B alternate inside one
+    loop: slow machine-load drift hits both totals equally and cancels
+    out of the ratio.
+    """
+    fn_a()  # warmup: compile outside the timed window
+    fn_b()
+    total_a = total_b = 0.0
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        fn_a()
+        total_a += time.monotonic() - t0
+        t0 = time.monotonic()
+        fn_b()
+        total_b += time.monotonic() - t0
+    return total_a / repeats, total_b / repeats
+
+
+def query_shapes(edges: np.ndarray, n: int, batch: int,
+                 ) -> tuple[np.ndarray, list]:
+    """Deterministic (pairs, sets) inputs at a per-request batch shape.
+
+    The canonical serving-benchmark request shapes: ``batch``
+    intersection pairs drawn cyclically from the edge list, and ``batch``
+    4-id union sets — matching what the serving benchmarks' client
+    threads issue, so warming these shapes warms the exact plan buckets
+    the timed window hits.
+    """
+    pairs = edges[np.arange(batch) % len(edges)].astype(np.int64)
+    sets = [np.arange(4, dtype=np.int64) % n for _ in range(batch)]
+    return pairs, sets
+
+
+def warmup_queries(eng, pairs, sets, *, method: str = "mle",
+                   iters: int = _NEWTON_ITERS) -> float:
+    """Compile the serving hot paths for these shapes; returns seconds.
+
+    Warms the per-kind plans (degrees / union / intersection, for
+    homogeneous drains) AND the fused mixed-kind program (DESIGN.md §10,
+    what concurrent clients coalesce onto) directly on the engine — the
+    compiled programs land in the process-wide plan cache keyed by the
+    engine's coordinates, so any server (epoch-barrier or continuous)
+    serving this engine *or its snapshots* hits them. Callers report the
+    returned first-compile time separately (``warmup_seconds``) instead
+    of letting the multi-second first-trace outlier pollute steady-state
+    percentiles (the PR 5 exclusion rule).
+    """
+    t0 = time.monotonic()
+    eng.degrees()
+    eng._union_presplit(sets)
+    eng._intersection_presplit(pairs, method, iters)
+    # both fused variants: drains of mixed clients usually carry no
+    # degrees request, which is a DIFFERENT compiled program (deg=False)
+    eng._query_batch_presplit(sets, pairs, True, method, iters)
+    eng._query_batch_presplit(sets, pairs, False, method, iters)
+    return time.monotonic() - t0

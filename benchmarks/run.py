@@ -3,8 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 ``python -m benchmarks.run [--full] [--only fig1,fig2,...]``.
 
-``--quick`` runs only the three JSON-emitting suites (serve,
-neighborhood panels, queryfusion) in their reduced configurations — the
+``--quick`` runs only the JSON-emitting suites (serve, neighborhood
+panels, queryfusion, load) in their reduced configurations — the
 CI perf-regression gate's input (see benchmarks/check_regression.py);
 ``--out-dir`` redirects the fresh ``BENCH_*.json`` files there so a gate
 run never overwrites the committed baselines.
@@ -33,8 +33,8 @@ def main() -> None:
 
     from benchmarks import (
         bench_density, bench_heavyhitters, bench_intersection,
-        bench_kernels, bench_neighborhood, bench_queryfusion, bench_scaling,
-        bench_serve, bench_theorem1, roofline_report,
+        bench_kernels, bench_load, bench_neighborhood, bench_queryfusion,
+        bench_scaling, bench_serve, bench_theorem1, roofline_report,
     )
 
     def _out(default_path: str) -> str | None:
@@ -51,6 +51,8 @@ def main() -> None:
             small=small, quick=args.quick, out=_out(bench_serve.OUT)),
         "queryfusion": lambda: bench_queryfusion.run(
             small=small, quick=args.quick, out=_out(bench_queryfusion.OUT)),
+        "load": lambda: bench_load.run(
+            small=small, quick=args.quick, out=_out(bench_load.OUT)),
     }
     suites = {
         **json_suites,

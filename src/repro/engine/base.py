@@ -49,10 +49,13 @@ that can keep ingesting where the saved one stopped (DESIGN.md §3, §8).
 from __future__ import annotations
 
 import abc
+import copy
 import operator
+import threading
 from dataclasses import dataclass, field
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hll import HLLConfig
@@ -60,13 +63,32 @@ from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import plans
 from repro.kernels import registry
 
-__all__ = ["SketchEngine", "bucket", "validate_t_max"]
+__all__ = ["SketchEngine", "SnapshotFrozen", "bucket", "validate_t_max"]
 
 ENGINE_FORMAT = "degreesketch-engine-v1"
 
 #: Algorithm 2 schedules every backend accepts ("auto" resolves per
 #: backend; the local backend runs one dataflow but still validates).
 SCHEDULES = ("auto", "ring", "allgather")
+
+
+class SnapshotFrozen(RuntimeError):
+    """Raised when a mutating call (``ingest``/``merge``) hits a snapshot.
+
+    Engines returned by :meth:`SketchEngine.snapshot` are frozen read-only
+    views at one version; ingestion goes to the *writer* engine the
+    snapshot was taken from (the continuous-serving subsystem in
+    ``repro.serve`` owns exactly that split — DESIGN.md §3d).
+    """
+
+
+#: Lease release (DESIGN.md §3d): a fresh device buffer with the same
+#: contents, dtype and sharding as ``regs`` (elementwise identity, so a
+#: sharded input yields an identically sharded output). Run by a writer
+#: engine before its next *donating* step when the current panel is
+#: leased to a live snapshot — donation would free the buffer under the
+#: snapshot's readers.
+_clone_panel = jax.jit(lambda regs: regs + jnp.zeros((), regs.dtype))
 
 
 def validate_t_max(t_max) -> int:
@@ -158,6 +180,9 @@ class SketchEngine(abc.ABC):
         self._prop_routing: tuple[jax.Array, jax.Array, jax.Array] | None = \
             None
         self._panel_set: _PanelSet | None = None
+        self._frozen = False        # True only on snapshot() views
+        self._regs_leased = False   # current panel shared with a snapshot
+        self._snap_lock = threading.RLock()  # guards lazy caches on readers
 
     # ------------------------------------------------------------- state
     @property
@@ -176,6 +201,27 @@ class SketchEngine(abc.ABC):
         versions instead of trusting held references.
         """
         return self._version
+
+    @property
+    def frozen(self) -> bool:
+        """True iff this engine is a read-only :meth:`snapshot` view.
+
+        Frozen engines answer every query (bit-identically to the writer
+        at the snapshot's :attr:`version`) but reject ``ingest``/``merge``
+        with :class:`SnapshotFrozen`.
+        """
+        return self._frozen
+
+    @property
+    def regs_leased(self) -> bool:
+        """True while the current register panel is shared with a snapshot.
+
+        Set by :meth:`snapshot`; the next donating step (ingest/merge)
+        clones the panel first (one copy per rotation, on the writer path)
+        so the snapshot's readers never observe a donated-away buffer,
+        then donation resumes until the next snapshot.
+        """
+        return self._regs_leased
 
     @property
     def regs(self) -> jax.Array:
@@ -249,8 +295,10 @@ class SketchEngine(abc.ABC):
         Donation bumps :attr:`version`: ``regs`` handles taken before the
         call are stale after it.
 
-        Returns self (engines mutate in place), so calls chain.
+        Returns self (engines mutate in place), so calls chain. Raises
+        :class:`SnapshotFrozen` on a read-only :meth:`snapshot` view.
         """
+        self._check_mutable("ingest")
         raw = np.asarray(edge_block)
         if raw.ndim != 2 or raw.shape[1] != 2:
             raise ValueError(
@@ -264,6 +312,7 @@ class SketchEngine(abc.ABC):
                 f"edge block contains vertex ids [{lo}, {hi}] outside the "
                 f"engine's universe [0, {self.n}) fixed at open() time")
         block = np.ascontiguousarray(raw, dtype=np.int32)
+        self._release_lease()  # never donate a panel a snapshot still reads
         for s in range(0, len(block), self.INGEST_BLOCK):
             self._accumulate_block(block[s:s + self.INGEST_BLOCK])
         self._version += 1
@@ -305,6 +354,7 @@ class SketchEngine(abc.ABC):
         Mutates and returns self (donating this engine's panel — bumps
         :attr:`version`); ``other`` is left untouched.
         """
+        self._check_mutable("merge")
         if not isinstance(other, SketchEngine):
             raise TypeError(f"can only merge SketchEngine, got {type(other)}")
         if other.cfg != self.cfg:
@@ -319,6 +369,7 @@ class SketchEngine(abc.ABC):
         full = np.zeros((self.n_pad, rows.shape[1]), np.uint8)
         full[: rows.shape[0]] = rows
         fn = self._plan("merge", builder=plans.build_merge_plan)
+        self._release_lease()  # the merge plan donates the left panel
         self._regs = fn(self._regs, self._place_rows(full))
         self._version += 1
         mine, theirs = self.edges, other.edges
@@ -329,6 +380,70 @@ class SketchEngine(abc.ABC):
         self._edge_chunks = []
         self._invalidate_edge_caches()
         return self
+
+    # ----------------------------------------------------------- snapshots
+    def snapshot(self) -> "SketchEngine":
+        """A read-only view of this engine at its current version — O(1).
+
+        The returned engine (same class, same backend) answers every query
+        bit-identically to this engine *right now*, and keeps doing so
+        while this engine ingests further blocks: register panels are
+        immutable arrays, so the snapshot **shares** the current panel
+        (pointer swap, never a copy), the consolidated edge list (numpy
+        concatenation always allocates fresh arrays, so the handle is
+        stable), the resolved kernel set, and the process-wide plan cache
+        — compiled programs hand off for free because the plan key
+        coordinates ``(cfg, impl, backend, shards)`` are identical.
+        Materialized t-hop panels whose version matches hand off too, so
+        a served ``neighborhood`` on the snapshot reruns zero propagate
+        passes (DESIGN.md §3c → §3d).
+
+        Safety: the current panel is *leased* — the writer's next donating
+        ingest/merge clones it first (one copy per rotation, paid on the
+        writer path, never by a reader) so no snapshot ever observes a
+        donated-away buffer. Multiple snapshots at one version share one
+        panel; :class:`SnapshotFrozen` guards the view against mutation.
+        """
+        edges = self.edges  # consolidate chunks into one stable array
+        snap = copy.copy(self)
+        snap._edges0 = edges
+        snap._edge_chunks = []      # never share the writer's chunk list
+        snap._frozen = True
+        snap._regs_leased = False
+        snap._snap_lock = threading.RLock()
+        ps = self._panel_set
+        if ps is not None and ps.version == self._version:
+            # panel-cache handoff: deeper horizons already materialized
+            # at this version keep serving from the snapshot
+            snap._panel_set = _PanelSet(version=ps.version,
+                                        schedule=ps.schedule,
+                                        panels=list(ps.panels))
+        else:
+            snap._panel_set = None
+        self._snapshot_fixup(snap)
+        self._regs_leased = True
+        return snap
+
+    def _snapshot_fixup(self, snap: "SketchEngine") -> None:
+        """Backend hook: adjust a freshly shallow-copied snapshot view."""
+
+    def _check_mutable(self, what: str) -> None:
+        if self._frozen:
+            raise SnapshotFrozen(
+                f"{what} on a read-only snapshot (version {self._version}); "
+                f"ingest into the writer engine it was taken from")
+
+    def _release_lease(self) -> None:
+        """Clone the register panel if a snapshot leases it (pre-donation).
+
+        Called before every donating step; a no-op in the steady state.
+        The clone is an elementwise identity under jit, so it preserves
+        dtype and device sharding, and costs one panel copy per
+        snapshot-then-ingest cycle.
+        """
+        if self._regs_leased:
+            self._regs = _clone_panel(self._regs)
+            self._regs_leased = False
 
     def _invalidate_edge_caches(self) -> None:
         """Drop caches derived from the edge list or register panel.
@@ -552,15 +667,22 @@ class SketchEngine(abc.ABC):
         claim ``plans.event_counts()["propagate_pass"]`` asserts). Panels
         beyond :attr:`MAX_CACHED_PANELS` are computed but not retained —
         the cache's memory bound.
+
+        Serialized under the engine's snapshot lock: read-only snapshot
+        views may be served by several reader threads at once (DESIGN.md
+        §3d), and extending the cached set is the one lazy mutation a
+        query performs.
         """
-        ps = self._panel_set
-        if ps is None or ps.version != self._version or ps.schedule != sched:
-            ps = _PanelSet(version=self._version, schedule=sched,
-                           panels=[self._regs])
-            self._panel_set = ps
-        while len(ps.panels) < min(t_max, self.MAX_CACHED_PANELS):
-            ps.panels.append(self._propagate_pass(ps.panels[-1], sched))
-        out = list(ps.panels[:t_max])
+        with self._snap_lock:
+            ps = self._panel_set
+            if (ps is None or ps.version != self._version
+                    or ps.schedule != sched):
+                ps = _PanelSet(version=self._version, schedule=sched,
+                               panels=[self._regs])
+                self._panel_set = ps
+            while len(ps.panels) < min(t_max, self.MAX_CACHED_PANELS):
+                ps.panels.append(self._propagate_pass(ps.panels[-1], sched))
+            out = list(ps.panels[:t_max])
         while len(out) < t_max:  # beyond the memory bound: transient
             out.append(self._propagate_pass(out[-1], sched))
         return out

@@ -58,10 +58,21 @@ class ShardedEngine(SketchEngine):
         pure function of (edges, n, shards), and its vertex partition
         matches the one fixed at ``open`` time by construction
         (``sd.vertex_partition``). Requires a tracked edge list.
+
+        The lazy build is double-checked under the engine's snapshot lock:
+        read-only snapshot views (DESIGN.md §3d) may field triangle /
+        neighborhood requests from several reader threads at once, and a
+        snapshot taken before the plan existed rebuilds it exactly once.
+        A snapshot taken *after* the writer built it shares the plan
+        outright (it is immutable and matches the snapshot's edge list).
         """
         if self._dist_plan is None:
-            edges = self._require_edges("the distributed routing plan")
-            self._dist_plan = sd.build_plan(edges, self.n, self.shards)
+            with self._snap_lock:
+                if self._dist_plan is None:
+                    edges = self._require_edges(
+                        "the distributed routing plan")
+                    self._dist_plan = sd.build_plan(edges, self.n,
+                                                    self.shards)
         return self._dist_plan
 
     def _invalidate_edge_caches(self) -> None:

@@ -1,20 +1,30 @@
-"""Sketch serving launcher: drive concurrent clients through a QueryServer.
+"""Sketch serving launcher: drive concurrent clients through a server.
 
 Builds (or loads) a sketch engine, wraps it in ``repro.serve.QueryServer``
-and fires N client threads issuing mixed degree/union/intersection/
-neighborhood/triangle queries with jittering batch sizes and horizons —
-optionally interleaved with live ingest blocks — then prints latency/
-throughput stats and the compiled-program counters that demonstrate
-micro-batch coalescing over the shape-bucketed plan cache (DESIGN.md
-§3b) plus the t-hop panel cache serving neighborhood queries (§3c).
+(or, with ``--continuous``, the snapshot-rotating
+``repro.serve.ContinuousServer`` — DESIGN.md §3d) and fires N client
+threads issuing mixed degree/union/intersection/neighborhood/triangle
+queries with jittering batch sizes and horizons — optionally interleaved
+with live ingest blocks — then prints latency/throughput stats and the
+compiled-program counters that demonstrate micro-batch coalescing over
+the shape-bucketed plan cache (DESIGN.md §3b) plus the t-hop panel cache
+serving neighborhood queries (§3c). In continuous mode the run ends with
+a flush and a *deterministic sample assertion*: served answers must be
+bit-identical to a direct engine call on the full edge set — rotation is
+not allowed to change an answer. ``--stats`` dumps the complete stats
+structure (queue depths, latency histograms, shed/deadline counters,
+snapshot staleness) as JSON.
 
     PYTHONPATH=src python -m repro.launch.sketch_serve \
         --scale 10 --clients 6 --requests 40 --ingest-blocks 8
     PYTHONPATH=src python -m repro.launch.sketch_serve --smoke
+    PYTHONPATH=src python -m repro.launch.sketch_serve \
+        --smoke --continuous --stats
 """
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
 
@@ -24,10 +34,10 @@ from repro import engine
 from repro.core.hll import HLLConfig
 from repro.engine import base, plans
 from repro.graph import generators as gen
-from repro.serve import QueryServer
+from repro.serve import ContinuousServer, QueryServer, RotationPolicy
 
 
-def _client(server: QueryServer, edges: np.ndarray, n: int, requests: int,
+def _client(server, edges: np.ndarray, n: int, requests: int,
             max_batch: int, t_max: int, seed: int, errors: list) -> None:
     """One client: mixed queries with jittering (power-law) batch sizes."""
     rng = np.random.default_rng(seed)
@@ -73,6 +83,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="max neighborhood horizon (requests jitter 1..t)")
     ap.add_argument("--ingest-blocks", type=int, default=4,
                     help="edge blocks streamed in WHILE clients query")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve from rotating snapshots (ContinuousServer: "
+                         "writer ingests while readers never stall)")
+    ap.add_argument("--stats", action="store_true",
+                    help="dump the full stats structure as JSON at the end")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast configuration for CI")
     args = ap.parse_args(argv)
@@ -88,13 +103,20 @@ def main(argv: list[str] | None = None) -> None:
     eng = engine.open(n, HLLConfig(p=args.p), backend=args.backend,
                       shards=args.shards, impl=args.impl)
     eng.ingest(edges[: len(edges) - hold])
+    mode = "continuous (snapshot rotation)" if args.continuous else \
+        "epoch barrier"
     print(f"graph: n={n} m={len(edges)} (serving with {hold} edges held "
-          f"back for live ingest); backend={args.backend} impl={args.impl}")
+          f"back for live ingest); backend={args.backend} impl={args.impl} "
+          f"mode={mode}")
 
     plans.reset_trace_counts()
     t0 = time.monotonic()
     errors: list = []
-    with QueryServer(eng) as server:
+    if args.continuous:
+        server = ContinuousServer(eng, rotation=RotationPolicy(every_blocks=1))
+    else:
+        server = QueryServer(eng)
+    with server:
         threads = [threading.Thread(
             target=_client,
             args=(server, edges, n, args.requests, args.max_batch,
@@ -109,16 +131,33 @@ def main(argv: list[str] | None = None) -> None:
                 server.ingest(tail[s:s + step])
         for t in threads:
             t.join()
-        # deterministic served-neighborhood sample (the CI smoke contract):
-        # served answers ride the cached panels of the final epoch
+        if args.continuous:
+            server.flush()  # apply + publish everything queued above
+        # deterministic served sample (the CI smoke contract): the final
+        # answers ride the cached panels of the final epoch / snapshot
         _, glob = server.neighborhood(args.t_max)
+        served_deg = np.asarray(server.degrees())
         stats = server.stats()
-        panels = server.engine.panels_cached
+        panels = (server._slot.get() if args.continuous
+                  else server.engine).panels_cached
     wall = time.monotonic() - t0
     if errors:
         raise errors[0]
+    if args.continuous:
+        # rotation must never change an answer: post-flush served answers
+        # are bit-identical to a direct engine call on the full edge set
+        direct = engine.build(edges, n, HLLConfig(p=args.p),
+                              backend=args.backend, shards=args.shards,
+                              impl=args.impl)
+        assert np.array_equal(served_deg, np.asarray(direct.degrees())), \
+            "served degrees diverged from direct engine state"
+        _, glob_direct = direct.neighborhood(args.t_max)
+        assert np.array_equal(np.asarray(glob), np.asarray(glob_direct)), \
+            "served neighborhood diverged from direct engine state"
+        print("OK: served answers bit-identical to direct engine calls "
+              "at the flushed snapshot version")
     print(f"neighborhood(t_max={args.t_max}) served: "
-          f"Ñ(t)={np.array2string(glob, precision=0)} "
+          f"Ñ(t)={np.array2string(np.asarray(glob), precision=0)} "
           f"({panels} D^t panels cached, t=1 included)")
 
     print(f"served {stats['requests_total']} requests from {args.clients} "
@@ -133,6 +172,14 @@ def main(argv: list[str] | None = None) -> None:
               f"batches={s['batches']:4d} "
               f"max_coalesced={s['max_coalesced']:3d} "
               f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms")
+    if args.continuous:
+        snap = stats["snapshot"]
+        print(f"snapshot: version={snap['version']} "
+              f"rotations={snap['rotations']} "
+              f"staleness={snap['age_seconds'] * 1e3:.0f}ms "
+              f"version_lag={snap['version_lag']}; "
+              f"shed={stats['shed_total']} "
+              f"deadline_misses={stats['deadline_misses']}")
     traces = stats["plan_traces"]
     cache = stats["plan_cache"]
     print(f"compiled programs per query kind (O(log max-batch) by shape "
@@ -146,6 +193,8 @@ def main(argv: list[str] | None = None) -> None:
             bound = int(np.log2(max(max_b, 2))) + 2
             assert traces[kind] <= bound, (kind, traces[kind], bound)
     print("OK: compiled-program count within the O(log batch) bound")
+    if args.stats:
+        print(json.dumps(stats, indent=2, default=str))
 
 
 if __name__ == "__main__":

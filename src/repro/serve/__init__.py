@@ -1,13 +1,22 @@
-"""Serving frontend: concurrent sketch queries over one ``SketchEngine``.
+"""Serving frontends: concurrent sketch queries over ``SketchEngine``\\ s.
 
-``repro.serve.QueryServer`` wraps any engine (local or sharded) and turns
-it into the paper's §1 picture of a *persistent query engine under load*:
-many concurrent clients issue ``degrees`` / ``union_size`` /
-``intersection_size`` / ``triangle_heavy_hitters`` requests (and ingest
-blocks) against one accumulated register panel; the server coalesces them
-into micro-batches that ride the shape-bucketed query plans (DESIGN.md
-§3b), so jittering client batch sizes are served by O(log max-batch)
-compiled programs, bit-identical to direct engine calls.
+Two servers share one coalescing/fused-program core (DESIGN.md §3b, §3d):
+
+* ``QueryServer`` — epoch-barrier serving: ONE worker thread owns the
+  engine, ingest is a barrier between query drains. Strongest freshness
+  (a query sees every prior ingest), but readers stall for each donated
+  accumulate step.
+* ``ContinuousServer`` — writer/reader split: a writer thread ingests
+  continuously while queries are served from rotating read-only
+  snapshots (``SketchEngine.snapshot()``). Readers never stall; they
+  accept a bounded freshness lag (the ``RotationPolicy``), and the
+  frontend adds production controls — ingest backpressure, admission
+  control (``Overloaded``), and per-request deadlines
+  (``DeadlineExceeded``).
+
+Both coalesce concurrent requests into micro-batches riding the
+shape-bucketed query plans, so answers are bit-identical to direct
+engine calls at the serving epoch/snapshot version.
 
     from repro import engine, serve
 
@@ -17,9 +26,26 @@ compiled programs, bit-identical to direct engine calls.
         srv.ingest(next_block)                    # epoch barrier
         print(srv.stats()["union"]["p99_ms"])
 
-CLI: ``python -m repro.launch.sketch_serve`` drives a multi-client load
-against a freshly built sketch and prints latency/throughput stats.
-"""
-from repro.serve.server import QueryServer, ServerClosed
+    with serve.ContinuousServer(engine.open(n, cfg)) as srv:
+        srv.ingest(block)                         # async, backpressured
+        srv.flush()                               # apply + publish
+        t = srv.intersection_size([(0, 1)], deadline=0.05)
 
-__all__ = ["QueryServer", "ServerClosed"]
+``repro.serve.loadgen`` generates open-/closed-loop load over either
+server for the SLO benchmarks. CLI: ``python -m repro.launch.sketch_serve``
+(``--continuous`` for the writer/reader split, ``--stats`` for the dump).
+"""
+from repro.serve.frontend import ContinuousServer, DeadlineExceeded, Overloaded
+from repro.serve.server import QueryServer, ServerClosed
+from repro.serve.snapshot import RotationPolicy, SnapshotFrozen, SnapshotSlot
+
+__all__ = [
+    "QueryServer",
+    "ServerClosed",
+    "ContinuousServer",
+    "Overloaded",
+    "DeadlineExceeded",
+    "RotationPolicy",
+    "SnapshotSlot",
+    "SnapshotFrozen",
+]

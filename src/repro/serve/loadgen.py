@@ -1,0 +1,175 @@
+"""Load generation for the serving layer: open- and closed-loop drivers.
+
+Shared by ``benchmarks/bench_load.py`` and the tests; the generators are
+server-agnostic — a *mix* is a list of ``(kind, thunk)`` pairs where each
+thunk issues one blocking request against whichever server the caller
+closed it over (``QueryServer`` or ``ContinuousServer``), so the same
+workload definition drives both serving modes side by side.
+
+Two driver shapes (they answer different questions):
+
+* **Closed loop** — N clients, each issuing its next request the moment
+  the previous one returns. Measures throughput under a fixed
+  concurrency; latency and throughput are coupled (a slow server slows
+  the offered load, hiding queueing delay).
+* **Open loop** — requests arrive on a Poisson process at a fixed
+  offered rate regardless of completions, each on its own thread.
+  This is the SLO-honest shape: when the server can't keep up, queueing
+  delay (and shed/deadline counts) show up in the tail percentiles
+  instead of silently lowering the offered rate.
+
+Outcomes are classified per request: ``ok``, ``shed`` (admission
+control's ``Overloaded``), ``deadline`` (``DeadlineExceeded``) and
+``error``; :meth:`LoadReport.summary` folds them into p50/p99/p999,
+achieved qps and shed rate for ``BENCH_load.json``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve.frontend import DeadlineExceeded, Overloaded
+
+__all__ = ["LoadReport", "closed_loop", "open_loop"]
+
+
+@dataclass
+class LoadReport:
+    """Outcome of one load-generation run (see :meth:`summary`)."""
+
+    #: per-request (kind, status, latency_seconds) tuples, arrival order
+    records: list = field(default_factory=list)
+    #: wall-clock span of the run, first submit to last completion
+    span_seconds: float = 0.0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def _note(self, kind: str, status: str, latency: float) -> None:
+        with self._lock:
+            self.records.append((kind, status, latency))
+
+    def summary(self) -> dict:
+        """Aggregate the run: counts, tail percentiles, achieved rates.
+
+        Percentiles (``p50_ms``/``p99_ms``/``p999_ms``) cover *served*
+        requests only — shed and deadline-missed requests are reported
+        through ``shed_rate``/``deadline_misses`` instead, so admission
+        control cannot launder tail latency out of the report while the
+        drop counts are in plain view.
+        """
+        ok = [lat for _, status, lat in self.records if status == "ok"]
+        lat = np.asarray(ok, dtype=np.float64)
+        pct = (lambda q: float(np.percentile(lat, q) * 1e3)
+               if lat.size else None)
+        n = len(self.records)
+        shed = sum(1 for _, s, _ in self.records if s == "shed")
+        missed = sum(1 for _, s, _ in self.records if s == "deadline")
+        errors = sum(1 for _, s, _ in self.records if s == "error")
+        span = self.span_seconds
+        return {
+            "requests": n,
+            "served": len(ok),
+            "shed": shed,
+            "deadline_misses": missed,
+            "errors": errors,
+            "shed_rate": (shed / n) if n else 0.0,
+            "p50_ms": pct(50),
+            "p99_ms": pct(99),
+            "p999_ms": pct(99.9),
+            "mean_ms": float(lat.mean() * 1e3) if lat.size else None,
+            "achieved_qps": (len(ok) / span) if span > 0 else None,
+            "offered_qps": (n / span) if span > 0 else None,
+        }
+
+
+def _issue(report: LoadReport, kind: str, thunk) -> None:
+    """Run one request thunk, classify its outcome, record the latency."""
+    t0 = time.monotonic()
+    try:
+        thunk()
+    except Overloaded:
+        report._note(kind, "shed", time.monotonic() - t0)
+    except DeadlineExceeded:
+        report._note(kind, "deadline", time.monotonic() - t0)
+    except Exception:  # noqa: BLE001 — load gen must outlive bad requests
+        report._note(kind, "error", time.monotonic() - t0)
+    else:
+        report._note(kind, "ok", time.monotonic() - t0)
+
+
+def closed_loop(mix, *, clients: int = 4, requests_per_client: int = 32,
+                seed: int = 0) -> LoadReport:
+    """Drive ``mix`` from ``clients`` threads, back-to-back per thread.
+
+    Each client draws its request sequence from the mix with its own
+    deterministic RNG stream (``seed`` + client id), issues one request
+    at a time, and starts the next the moment the previous returns — the
+    classic closed loop. Returns the populated :class:`LoadReport`.
+    """
+    if not mix:
+        raise ValueError("mix must contain at least one (kind, thunk) pair")
+    report = LoadReport()
+    start = threading.Barrier(clients + 1)
+
+    def client(cid: int) -> None:
+        rng = np.random.default_rng(seed + cid)
+        picks = rng.integers(0, len(mix), size=requests_per_client)
+        start.wait()
+        for p in picks:
+            kind, thunk = mix[int(p)]
+            _issue(report, kind, thunk)
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(clients)]
+    for t in threads:
+        t.start()
+    start.wait()
+    t0 = time.monotonic()
+    for t in threads:
+        t.join()
+    report.span_seconds = time.monotonic() - t0
+    return report
+
+
+def open_loop(mix, *, rate: float, duration: float,
+              seed: int = 0) -> LoadReport:
+    """Drive ``mix`` on a Poisson arrival process at ``rate`` req/s.
+
+    A dispatcher thread draws exponential inter-arrival gaps and fires
+    every request on its own thread at its scheduled instant, regardless
+    of how earlier requests are doing — so server slowdown surfaces as
+    queueing delay in the percentiles (and as shed/deadline outcomes),
+    never as silently reduced load. ``duration`` bounds the arrival
+    window in seconds; all in-flight requests are joined before the
+    report is returned.
+    """
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0 req/s, got {rate}")
+    if duration <= 0:
+        raise ValueError(f"duration must be > 0 s, got {duration}")
+    if not mix:
+        raise ValueError("mix must contain at least one (kind, thunk) pair")
+    rng = np.random.default_rng(seed)
+    report = LoadReport()
+    threads: list[threading.Thread] = []
+    t0 = time.monotonic()
+    t_next = t0
+    while True:
+        t_next += float(rng.exponential(1.0 / rate))
+        if t_next - t0 > duration:
+            break
+        delay = t_next - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        kind, thunk = mix[int(rng.integers(0, len(mix)))]
+        th = threading.Thread(target=_issue, args=(report, kind, thunk),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join()
+    report.span_seconds = time.monotonic() - t0
+    return report

@@ -30,6 +30,17 @@ Design (DESIGN.md §3b):
 * **Client calls are plain blocking methods**, safe from any thread;
   errors raised by a request (bad ids, edge-free engine, ...) propagate
   to the calling client only, never poisoning the rest of a batch.
+* **Shutdown never hangs a client.** ``close()``/``shutdown()`` drain
+  the queue before joining the worker; if the worker dies (a
+  ``BaseException`` like ``KeyboardInterrupt``/``SystemExit`` escaping a
+  drain), every queued-but-unserved future fails with a clear
+  :class:`ServerClosed` instead of blocking forever, and later submits
+  are rejected the same way.
+
+The batching/serving core (`serve_segment` and friends) is shared with
+the continuous-serving frontend (``repro.serve.frontend``, DESIGN.md
+§3d), which drives it against read-only snapshot engines instead of the
+live writer.
 """
 from __future__ import annotations
 
@@ -53,9 +64,20 @@ _LATENCY_WINDOW = 8192  # per-kind latency samples kept for the stats
 #: at least two kinds are present, one compiled program.
 _FUSABLE = ("degrees", "union", "intersection")
 
+#: latency histogram bucket upper bounds (milliseconds): log-spaced from
+#: 0.25ms to ~16s; anything slower lands in the +inf bucket. Log spacing
+#: keeps the histogram meaningful across the 1000x spread between a
+#: cached-plan hit and a first-compile outlier.
+_HIST_EDGES_MS = tuple(0.25 * 2 ** k for k in range(17)) + (float("inf"),)
+
 
 class ServerClosed(RuntimeError):
-    """Raised by client calls submitted after :meth:`QueryServer.close`."""
+    """Raised by client calls after ``close`` or after the worker died.
+
+    Also *delivered* to any queued-but-unserved request when the server
+    shuts down or its worker thread crashes — a pending future never
+    hangs forever (DESIGN.md §3b).
+    """
 
 
 @dataclass
@@ -69,7 +91,8 @@ class _Request:
     error: BaseException | None = None
     t_submit: float = 0.0
     t_done: float = 0.0
-    epoch: int = -1  # ingest epoch whose panel served this request
+    epoch: int = -1  # ingest epoch / snapshot version that served this
+    deadline: float | None = None  # absolute time.monotonic() cutoff
 
     def wait(self):
         """Block until served; re-raise the request's error in the client."""
@@ -77,6 +100,259 @@ class _Request:
         if self.error is not None:
             raise self.error
         return self.result
+
+
+class _KindStats:
+    """Per-kind serving counters: window percentiles + latency histogram."""
+
+    __slots__ = ("requests", "batches", "max_coalesced", "latencies",
+                 "hist")
+
+    def __init__(self, window: int):
+        self.requests = 0
+        self.batches = 0
+        self.max_coalesced = 0
+        self.latencies: deque = deque(maxlen=window)
+        self.hist = [0] * len(_HIST_EDGES_MS)
+
+    def observe(self, run: list[_Request], now: float) -> None:
+        """Fold one served same-kind run into the counters."""
+        self.requests += len(run)
+        self.batches += 1
+        self.max_coalesced = max(self.max_coalesced, len(run))
+        for r in run:
+            r.t_done = now
+            lat = now - r.t_submit
+            self.latencies.append(lat)
+            ms = lat * 1e3
+            for i, edge in enumerate(_HIST_EDGES_MS):
+                if ms <= edge:
+                    self.hist[i] += 1
+                    break
+
+    def snapshot(self) -> dict:
+        """Stats dict: counters, p50/p99/p999 and the non-empty buckets."""
+        lat = np.asarray(self.latencies, dtype=np.float64)
+        pct = (lambda q: float(np.percentile(lat, q) * 1e3)
+               if lat.size else None)
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "max_coalesced": self.max_coalesced,
+            "p50_ms": pct(50),
+            "p99_ms": pct(99),
+            "p999_ms": pct(99.9),
+            "histogram_ms": [[edge, n] for edge, n
+                             in zip(_HIST_EDGES_MS, self.hist) if n],
+        }
+
+
+def _note_served(stats: dict, seg: list[_Request], now: float,
+                 window: int) -> None:
+    """Record one served segment into a {kind: _KindStats} map."""
+    for kind in dict.fromkeys(r.kind for r in seg):
+        run = [r for r in seg if r.kind == kind]
+        stats.setdefault(kind, _KindStats(window)).observe(run, now)
+
+
+# --------------------------------------------------------- serving core
+# Module-level so the continuous frontend (DESIGN.md §3d) drives the
+# exact same coalescing paths against read-only snapshot engines; the
+# caller supplies the engine, the epoch tag, and owns stats + wakeups.
+
+def _segments(batch: list[_Request]) -> list[list[_Request]]:
+    """Split a drained batch into contiguous serveable segments.
+
+    Same-kind requests coalesce; additionally, adjacent requests whose
+    kinds are all in :data:`_FUSABLE` merge into one mixed segment for
+    the fused program. Arrival order is preserved across segments (an
+    ingest between two query runs stays between them — that is the
+    epoch barrier).
+    """
+    segs: list[list[_Request]] = []
+    for r in batch:
+        if segs and (r.kind == segs[-1][-1].kind
+                     or (r.kind in _FUSABLE
+                         and segs[-1][-1].kind in _FUSABLE)):
+            segs[-1].append(r)
+        else:
+            segs.append([r])
+    return segs
+
+
+def _fail(run: list[_Request], err: BaseException) -> None:
+    for r in run:
+        if not r.done.is_set() and r.error is None and r.result is None:
+            r.error = err
+
+
+def serve_segment(eng, seg: list[_Request], epoch: int) -> int:
+    """Serve one coalesced segment against ``eng``; returns fused launches.
+
+    Fills ``result``/``error`` and tags ``epoch`` on every request; the
+    caller sets ``done`` (after recording stats) and owns any locking.
+    A mixed-kind segment rides the fused program when it can (the return
+    value counts those launches, 0 or 1).
+    """
+    if len({r.kind for r in seg}) > 1:
+        return _serve_fused(eng, seg, epoch)
+    kind = seg[0].kind
+    _SERVE_BY_KIND[kind](eng, seg, epoch)
+    return 0
+
+
+def _serve_fused(eng, seg: list[_Request], epoch: int) -> int:
+    """Serve a mixed degrees/union/intersection segment.
+
+    When at least two kinds can share the program (intersections require
+    a single ``(method, iters)`` group), the segment is answered by ONE
+    compiled mixed-kind plan via ``SketchEngine._query_batch_presplit``
+    — bit-identical to the per-kind paths. Non-fusable leftovers (extra
+    intersection groups) are served through their per-kind plan in the
+    same drain.
+    """
+    deg = [r for r in seg if r.kind == "degrees"]
+    uni = [r for r in seg if r.kind == "union"]
+    inter = [r for r in seg if r.kind == "intersection"]
+    groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+    for r in inter:
+        groups.setdefault(r.payload[2:], []).append(r)
+    fused_inter = inter if len(groups) == 1 else []
+    fused_kinds = [k for k, rs in (("degrees", deg), ("union", uni),
+                                   ("intersection", fused_inter)) if rs]
+    if len(fused_kinds) < 2:  # nothing to fuse after grouping
+        for rs, kind in ((deg, "degrees"), (uni, "union"),
+                         (inter, "intersection")):
+            if rs:
+                _SERVE_BY_KIND[kind](eng, rs, epoch)
+        return 0
+    all_sets: list[np.ndarray] = []
+    for r in uni:
+        all_sets.extend(r.payload[0])
+    pairs = (np.concatenate([r.payload[0] for r in fused_inter], axis=0)
+             if fused_inter else None)
+    method, iters = (next(iter(groups)) if fused_inter
+                     else ("mle", _NEWTON_ITERS))
+    fused = deg + uni + fused_inter
+    launches = 0
+    try:
+        out = eng._query_batch_presplit(
+            all_sets or None, pairs, bool(deg), method, iters)
+    except Exception as e:  # noqa: BLE001 — propagate to clients
+        _fail(fused, e)
+    else:
+        launches = 1
+        for r in deg:
+            r.result, r.epoch = out["degrees"], epoch
+        pos = 0
+        for r in uni:
+            sets, scalar = r.payload
+            chunk = out["union"][pos:pos + len(sets)]
+            pos += len(sets)
+            r.result = float(chunk[0]) if scalar else chunk
+            r.epoch = epoch
+        pos = 0
+        for r in fused_inter:
+            arr, scalar = r.payload[0], r.payload[1]
+            chunk = out["intersection"][pos:pos + len(arr)]
+            pos += len(arr)
+            r.result = float(chunk[0]) if scalar else chunk
+            r.epoch = epoch
+    if inter and not fused_inter:
+        _serve_intersection(eng, inter, epoch)
+    return launches
+
+
+def _serve_degrees(eng, run: list[_Request], epoch: int) -> None:
+    try:
+        out = eng.degrees()
+    except Exception as e:  # noqa: BLE001 — propagate to clients
+        _fail(run, e)
+        return
+    for r in run:
+        r.result, r.epoch = out, epoch
+
+
+def _serve_union(eng, run: list[_Request], epoch: int) -> None:
+    all_sets: list[np.ndarray] = []
+    for r in run:
+        all_sets.extend(r.payload[0])
+    try:
+        # pre-split entry: ids were validated on the client threads
+        est = eng._union_presplit(all_sets)
+    except Exception as e:  # noqa: BLE001
+        _fail(run, e)
+        return
+    pos = 0
+    for r in run:
+        sets, scalar = r.payload
+        chunk = est[pos:pos + len(sets)]
+        pos += len(sets)
+        r.result = float(chunk[0]) if scalar else chunk
+        r.epoch = epoch
+
+
+def _serve_intersection(eng, run: list[_Request], epoch: int) -> None:
+    groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+    for r in run:
+        groups.setdefault(r.payload[2:], []).append(r)
+    for (method, iters), reqs in groups.items():
+        pairs = np.concatenate([r.payload[0] for r in reqs], axis=0)
+        try:
+            # pre-split entry: pairs were validated on client threads
+            est = eng._intersection_presplit(pairs, method, iters)
+        except Exception as e:  # noqa: BLE001
+            _fail(reqs, e)
+            continue
+        pos = 0
+        for r in reqs:
+            arr, scalar = r.payload[0], r.payload[1]
+            chunk = est[pos:pos + len(arr)]
+            pos += len(arr)
+            r.result = float(chunk[0]) if scalar else chunk
+            r.epoch = epoch
+
+
+def _serve_triangle(eng, run: list[_Request], epoch: int) -> None:
+    groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+    for r in run:
+        groups.setdefault(r.payload, []).append(r)
+    for (k, mode, iters), reqs in groups.items():
+        try:
+            out = eng.triangle_heavy_hitters(k, mode=mode, iters=iters)
+        except Exception as e:  # noqa: BLE001
+            _fail(reqs, e)
+            continue
+        for r in reqs:
+            r.result, r.epoch = out, epoch
+
+
+def _serve_neighborhood(eng, run: list[_Request], epoch: int) -> None:
+    groups: OrderedDict[str, list[_Request]] = OrderedDict()
+    for r in run:
+        groups.setdefault(r.payload[2], []).append(r)  # canonical sched
+    for reqs in groups.values():
+        t_big = max(r.payload[0] for r in reqs)
+        try:
+            # one engine call at the deepest horizon; the panel cache
+            # materializes D^1..D^{t_big} once for the whole group
+            local, glob = eng.neighborhood(t_big, schedule=reqs[0].payload[1])
+        except Exception as e:  # noqa: BLE001
+            _fail(reqs, e)
+            continue
+        for r in reqs:
+            t = r.payload[0]
+            r.result = (local[:t], glob[:t])
+            r.epoch = epoch
+
+
+_SERVE_BY_KIND = {
+    "degrees": _serve_degrees,
+    "union": _serve_union,
+    "intersection": _serve_intersection,
+    "triangle": _serve_triangle,
+    "neighborhood": _serve_neighborhood,
+}
 
 
 class QueryServer:
@@ -95,10 +371,11 @@ class QueryServer:
         self._queue: deque[_Request] = deque()
         self._paused = False
         self._closed = False
+        self._dead = False  # worker exited (clean close or crash)
         self._epoch = 0
         self._t0 = None  # first submit (throughput window start)
         self._t_last = None
-        self._stats: dict[str, dict] = {}
+        self._stats: dict[str, _KindStats] = {}
         self._fused_batches = 0
         self._latency_window = int(latency_window)
         self._trace_base = plans.trace_counts()  # delta baseline for stats
@@ -117,14 +394,37 @@ class QueryServer:
         return False
 
     def close(self) -> None:
-        """Stop accepting requests, drain the queue, join the worker."""
+        """Stop accepting requests, drain the queue, join the worker.
+
+        Pending requests are *served* on a clean close; if the worker
+        already died (crashed), they are failed with
+        :class:`ServerClosed` instead — a future returned by this server
+        never hangs (DESIGN.md §3b).
+        """
         with self._cv:
             if self._closed:
+                self._fail_pending_locked()  # worker may have died since
                 return
             self._closed = True
             self._paused = False
             self._cv.notify_all()
         self._worker.join()
+        with self._cv:
+            self._fail_pending_locked()  # anything a crashed worker left
+
+    def shutdown(self) -> None:
+        """Alias of :meth:`close` (the serving-frontend vocabulary)."""
+        self.close()
+
+    def _fail_pending_locked(self) -> None:
+        """Fail every queued request with ServerClosed (lock held)."""
+        while self._queue:
+            r = self._queue.popleft()
+            if not r.done.is_set():
+                if r.error is None:
+                    r.error = ServerClosed(
+                        "QueryServer shut down before serving this request")
+                r.done.set()
 
     @property
     def engine(self):
@@ -227,33 +527,32 @@ class QueryServer:
         Per query kind: ``requests``, ``batches`` (serving drains that
         touched the kind — coalescing makes this smaller; kinds sharing
         a fused mixed program each count the segment once),
-        ``max_coalesced`` and latency percentiles ``p50_ms`` / ``p99_ms``.
-        Top level adds the request rate over the active window
-        (``requests_per_sec``), the current ``epoch``, ``fused_batches``
-        (mixed-kind program launches, DESIGN.md §10), and the plan
-        layer's compiled-program counters (``plan_traces`` — programs
-        traced since this server was created, the O(log N) quantity —
-        plus the shared-cache hit/miss stats).
+        ``max_coalesced``, latency percentiles ``p50_ms`` / ``p99_ms`` /
+        ``p999_ms`` and the log-bucketed latency ``histogram_ms``
+        (non-empty ``[bucket_upper_ms, count]`` pairs). Top level adds
+        the request rate over the active window (``requests_per_sec``),
+        the live ``queue_depth``, the current ``epoch``,
+        ``fused_batches`` (mixed-kind program launches, DESIGN.md §10),
+        ``shed_total``/``deadline_misses`` (always 0 here — the epoch-
+        barrier server has no admission control; the fields exist so the
+        continuous frontend's stats are a superset of this schema,
+        DESIGN.md §3d), and the plan layer's compiled-program counters
+        (``plan_traces`` — programs traced since this server was created,
+        the O(log N) quantity — plus the shared-cache hit/miss stats).
         """
         with self._cv:
-            out: dict = {"epoch": self._epoch}
+            out: dict = {"epoch": self._epoch,
+                         "queue_depth": len(self._queue)}
             total = 0
             for kind, s in self._stats.items():
-                lat = np.asarray(s["latencies"], dtype=np.float64)
-                out[kind] = {
-                    "requests": s["requests"],
-                    "batches": s["batches"],
-                    "max_coalesced": s["max_coalesced"],
-                    "p50_ms": float(np.percentile(lat, 50) * 1e3)
-                    if lat.size else None,
-                    "p99_ms": float(np.percentile(lat, 99) * 1e3)
-                    if lat.size else None,
-                }
-                total += s["requests"]
+                out[kind] = s.snapshot()
+                total += s.requests
             span = ((self._t_last or 0.0) - (self._t0 or 0.0))
             out["requests_total"] = total
             out["requests_per_sec"] = (total / span) if span > 0 else None
             out["fused_batches"] = self._fused_batches
+            out["shed_total"] = 0
+            out["deadline_misses"] = 0
         now_traces = plans.trace_counts()
         out["plan_traces"] = {  # programs compiled since THIS server opened
             k: v - self._trace_base.get(k, 0) for k, v in now_traces.items()
@@ -283,7 +582,7 @@ class QueryServer:
         req = _Request(kind=kind, payload=payload)
         req.t_submit = time.monotonic()
         with self._cv:
-            if self._closed:
+            if self._closed or self._dead:
                 raise ServerClosed("QueryServer is closed")
             if self._t0 is None:
                 self._t0 = req.t_submit
@@ -292,210 +591,53 @@ class QueryServer:
         return req
 
     def _run(self) -> None:
-        while True:
+        try:
+            while True:
+                with self._cv:
+                    while ((not self._queue or self._paused)
+                           and not self._closed):
+                        self._cv.wait()
+                    if self._closed and not self._queue:
+                        return
+                    batch = list(self._queue)
+                    self._queue.clear()
+                try:
+                    self._serve(batch)
+                except Exception as e:  # noqa: BLE001 — never hang clients
+                    for r in batch:
+                        if not r.done.is_set():
+                            if r.error is None:
+                                r.error = e
+                            r.done.set()
+        except BaseException as e:  # worker is dying: nothing may hang
+            for r in batch:
+                if not r.done.is_set():
+                    if r.error is None:
+                        r.error = e
+                    r.done.set()
+            raise
+        finally:
+            # clean exit or crash: reject the backlog and future submits
             with self._cv:
-                while (not self._queue or self._paused) and not self._closed:
-                    self._cv.wait()
-                if self._closed and not self._queue:
-                    return
-                batch = list(self._queue)
-                self._queue.clear()
-            try:
-                self._serve(batch)
-            except BaseException as e:  # noqa: BLE001 — never hang clients
-                for r in batch:
-                    if not r.done.is_set():
-                        if r.error is None:
-                            r.error = e
-                        r.done.set()
-
-    @staticmethod
-    def _segments(batch: list[_Request]) -> list[list[_Request]]:
-        """Split a drained batch into contiguous serveable segments.
-
-        Same-kind requests coalesce as before; additionally, adjacent
-        requests whose kinds are all in :data:`_FUSABLE` merge into one
-        mixed segment for the fused program. Arrival order is preserved
-        across segments (an ingest between two query runs stays between
-        them — that is the epoch barrier).
-        """
-        segs: list[list[_Request]] = []
-        for r in batch:
-            if segs and (r.kind == segs[-1][-1].kind
-                         or (r.kind in _FUSABLE
-                             and segs[-1][-1].kind in _FUSABLE)):
-                segs[-1].append(r)
-            else:
-                segs.append([r])
-        return segs
+                self._dead = True
+                self._fail_pending_locked()
 
     def _serve(self, batch: list[_Request]) -> None:
         """Serve one drained batch segment by segment (see _segments)."""
-        for seg in self._segments(batch):
-            if len({r.kind for r in seg}) > 1:
-                self._serve_fused(seg)
+        for seg in _segments(batch):
+            if seg[0].kind == "ingest" and len({r.kind for r in seg}) == 1:
+                self._serve_ingest(seg)
             else:
-                getattr(self, f"_serve_{seg[0].kind}")(seg)
+                fused = serve_segment(self._eng, seg, self._epoch)
+                if fused:
+                    with self._cv:
+                        self._fused_batches += fused
             now = time.monotonic()
             with self._cv:
                 self._t_last = now
-                for kind in dict.fromkeys(r.kind for r in seg):
-                    run = [r for r in seg if r.kind == kind]
-                    s = self._stats.setdefault(kind, {
-                        "requests": 0, "batches": 0, "max_coalesced": 0,
-                        "latencies": deque(maxlen=self._latency_window)})
-                    s["requests"] += len(run)
-                    s["batches"] += 1
-                    s["max_coalesced"] = max(s["max_coalesced"], len(run))
-                    for r in run:
-                        r.t_done = now
-                        s["latencies"].append(now - r.t_submit)
+                _note_served(self._stats, seg, now, self._latency_window)
             for r in seg:
                 r.done.set()
-
-    def _serve_fused(self, seg: list[_Request]) -> None:
-        """Serve a mixed degrees/union/intersection segment.
-
-        When at least two kinds can share the program (intersections
-        require a single ``(method, iters)`` group), the segment is
-        answered by ONE compiled mixed-kind plan via
-        ``SketchEngine._query_batch_presplit`` — bit-identical to the
-        per-kind paths. Non-fusable leftovers (extra intersection groups)
-        are served through their per-kind plan in the same drain.
-        """
-        deg = [r for r in seg if r.kind == "degrees"]
-        uni = [r for r in seg if r.kind == "union"]
-        inter = [r for r in seg if r.kind == "intersection"]
-        groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
-        for r in inter:
-            groups.setdefault(r.payload[2:], []).append(r)
-        fused_inter = inter if len(groups) == 1 else []
-        fused_kinds = [k for k, rs in (("degrees", deg), ("union", uni),
-                                       ("intersection", fused_inter)) if rs]
-        if len(fused_kinds) < 2:  # nothing to fuse after grouping
-            for rs, kind in ((deg, "degrees"), (uni, "union"),
-                             (inter, "intersection")):
-                if rs:
-                    getattr(self, f"_serve_{kind}")(rs)
-            return
-        all_sets: list[np.ndarray] = []
-        for r in uni:
-            all_sets.extend(r.payload[0])
-        pairs = (np.concatenate([r.payload[0] for r in fused_inter], axis=0)
-                 if fused_inter else None)
-        method, iters = (next(iter(groups)) if fused_inter
-                         else ("mle", _NEWTON_ITERS))
-        fused = deg + uni + fused_inter
-        try:
-            out = self._eng._query_batch_presplit(
-                all_sets or None, pairs, bool(deg), method, iters)
-        except Exception as e:  # noqa: BLE001 — propagate to clients
-            self._fail(fused, e)
-        else:
-            self._fused_batches += 1
-            for r in deg:
-                r.result, r.epoch = out["degrees"], self._epoch
-            pos = 0
-            for r in uni:
-                sets, scalar = r.payload
-                chunk = out["union"][pos:pos + len(sets)]
-                pos += len(sets)
-                r.result = float(chunk[0]) if scalar else chunk
-                r.epoch = self._epoch
-            pos = 0
-            for r in fused_inter:
-                arr, scalar = r.payload[0], r.payload[1]
-                chunk = out["intersection"][pos:pos + len(arr)]
-                pos += len(arr)
-                r.result = float(chunk[0]) if scalar else chunk
-                r.epoch = self._epoch
-        if inter and not fused_inter:
-            self._serve_intersection(inter)
-
-    def _fail(self, run: list[_Request], err: BaseException) -> None:
-        for r in run:
-            if not r.done.is_set() and r.error is None and r.result is None:
-                r.error = err
-
-    def _serve_degrees(self, run: list[_Request]) -> None:
-        try:
-            out = self._eng.degrees()
-        except Exception as e:  # noqa: BLE001 — propagate to clients
-            self._fail(run, e)
-            return
-        for r in run:
-            r.result, r.epoch = out, self._epoch
-
-    def _serve_union(self, run: list[_Request]) -> None:
-        all_sets: list[np.ndarray] = []
-        for r in run:
-            all_sets.extend(r.payload[0])
-        try:
-            # pre-split entry: ids were validated on the client threads
-            est = self._eng._union_presplit(all_sets)
-        except Exception as e:  # noqa: BLE001
-            self._fail(run, e)
-            return
-        pos = 0
-        for r in run:
-            sets, scalar = r.payload
-            chunk = est[pos:pos + len(sets)]
-            pos += len(sets)
-            r.result = float(chunk[0]) if scalar else chunk
-            r.epoch = self._epoch
-
-    def _serve_intersection(self, run: list[_Request]) -> None:
-        groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
-        for r in run:
-            groups.setdefault(r.payload[2:], []).append(r)
-        for (method, iters), reqs in groups.items():
-            pairs = np.concatenate([r.payload[0] for r in reqs], axis=0)
-            try:
-                # pre-split entry: pairs were validated on client threads
-                est = self._eng._intersection_presplit(pairs, method, iters)
-            except Exception as e:  # noqa: BLE001
-                self._fail(reqs, e)
-                continue
-            pos = 0
-            for r in reqs:
-                arr, scalar = r.payload[0], r.payload[1]
-                chunk = est[pos:pos + len(arr)]
-                pos += len(arr)
-                r.result = float(chunk[0]) if scalar else chunk
-                r.epoch = self._epoch
-
-    def _serve_triangle(self, run: list[_Request]) -> None:
-        groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
-        for r in run:
-            groups.setdefault(r.payload, []).append(r)
-        for (k, mode, iters), reqs in groups.items():
-            try:
-                out = self._eng.triangle_heavy_hitters(k, mode=mode,
-                                                       iters=iters)
-            except Exception as e:  # noqa: BLE001
-                self._fail(reqs, e)
-                continue
-            for r in reqs:
-                r.result, r.epoch = out, self._epoch
-
-    def _serve_neighborhood(self, run: list[_Request]) -> None:
-        groups: OrderedDict[str, list[_Request]] = OrderedDict()
-        for r in run:
-            groups.setdefault(r.payload[2], []).append(r)  # canonical sched
-        for reqs in groups.values():
-            t_big = max(r.payload[0] for r in reqs)
-            try:
-                # one engine call at the deepest horizon; the panel cache
-                # materializes D^1..D^{t_big} once for the whole group
-                local, glob = self._eng.neighborhood(
-                    t_big, schedule=reqs[0].payload[1])
-            except Exception as e:  # noqa: BLE001
-                self._fail(reqs, e)
-                continue
-            for r in reqs:
-                t = r.payload[0]
-                r.result = (local[:t], glob[:t])
-                r.epoch = self._epoch
 
     def _serve_ingest(self, run: list[_Request]) -> None:
         for r in run:

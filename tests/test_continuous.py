@@ -1,0 +1,291 @@
+"""ContinuousServer: writer/reader split, rotation, admission, deadlines.
+
+The ISSUE 6 serving contract (DESIGN.md §3d):
+(a) queries served during concurrent ingest are bit-identical to direct
+    engine calls at the served snapshot's version, on both backends;
+(b) the rotation policy governs publication (every N blocks / staleness
+    budget), and ``flush()`` forces the tail out deterministically;
+(c) admission control sheds with ``Overloaded`` past the watermark;
+    expired deadlines fail fast with ``DeadlineExceeded``;
+(d) shutdown — clean or after a thread crash — never leaves a client
+    hanging: pending and future requests fail with ``ServerClosed``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.graph import generators as gen
+from repro.serve import (ContinuousServer, DeadlineExceeded, Overloaded,
+                         RotationPolicy, ServerClosed)
+
+CFG = HLLConfig(p=8)
+BACKENDS = ["local", "sharded"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+def _build(edges, n, backend):
+    kw = {"shards": 1} if backend == "sharded" else {}
+    return engine.build(edges, n, CFG, backend=backend, **kw)
+
+
+def _hold_reader(srv):
+    """Block the reader thread on a request until the returned event is
+    set — makes queue-depth-dependent behavior deterministic."""
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = srv._serve
+
+    def slow(snap, batch):
+        entered.set()
+        gate.wait(timeout=30)
+        srv._serve = orig
+        orig(snap, batch)
+
+    srv._serve = slow  # patch BEFORE submitting: the reader must block
+    req = srv._submit("degrees", (), None)
+    entered.wait(timeout=30)
+    return gate, req
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestContinuousBitIdentity:
+    def test_queries_during_concurrent_ingest(self, graph, backend):
+        """Concurrent ingest never changes an answer: every served reply
+        matches a direct engine call at SOME published prefix version."""
+        edges, n = graph
+        cuts = [800, 1000, 1285]
+        refs = {c: np.asarray(_build(edges[:c], n, backend).degrees())
+                for c in cuts}
+        eng = _build(edges[:800], n, backend)
+        with ContinuousServer(eng) as srv:
+            stop = threading.Event()
+            seen = []
+
+            def reader():
+                while not stop.is_set():
+                    seen.append(np.asarray(srv.degrees()))
+
+            t = threading.Thread(target=reader, daemon=True)
+            t.start()
+            srv.ingest(edges[800:1000])
+            srv.ingest(edges[1000:])
+            srv.flush()
+            stop.set()
+            t.join()
+            final = np.asarray(srv.degrees())
+        assert np.array_equal(final, refs[1285])
+        for d in seen:
+            assert any(np.array_equal(d, r) for r in refs.values()), \
+                "served answer matches no published snapshot state"
+
+    def test_flush_publishes_everything(self, graph, backend):
+        edges, n = graph
+        eng = _build(edges[:1000], n, backend)
+        with ContinuousServer(
+                eng, rotation=RotationPolicy(every_blocks=100)) as srv:
+            srv.ingest(edges[1000:])
+            v = srv.flush()
+            assert srv.snapshot_version == v
+            st = srv.stats()
+            assert st["snapshot"]["version_lag"] == 0
+            ref = _build(edges, n, backend)
+            assert np.array_equal(np.asarray(srv.degrees()),
+                                  np.asarray(ref.degrees()))
+
+
+class TestRotationBehavior:
+    def test_every_blocks_holds_back(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        with ContinuousServer(
+                eng, rotation=RotationPolicy(every_blocks=100)) as srv:
+            v0 = srv.snapshot_version
+            srv.ingest(edges[1000:1100])
+            # applied but below every_blocks: not published
+            deadline = time.monotonic() + 10
+            while (srv.stats()["ingest_blocks_applied"] < 1
+                   and time.monotonic() < deadline):
+                time.sleep(0.01)
+            assert srv.stats()["ingest_blocks_applied"] == 1
+            assert srv.snapshot_version == v0
+            assert srv.stats()["snapshot"]["version_lag"] == 1
+
+    def test_max_staleness_forces_publication(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        pol = RotationPolicy(every_blocks=100, max_staleness=0.05)
+        with ContinuousServer(eng, rotation=pol) as srv:
+            v0 = srv.snapshot_version
+            srv.ingest(edges[1000:1100])
+            deadline = time.monotonic() + 10
+            while (srv.snapshot_version == v0
+                   and time.monotonic() < deadline):
+                time.sleep(0.01)
+            assert srv.snapshot_version > v0  # staleness timer fired
+
+    def test_close_publishes_tail(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        srv = ContinuousServer(eng,
+                               rotation=RotationPolicy(every_blocks=100))
+        srv.ingest(edges[1000:])
+        srv.close()
+        # clean close applied AND published the pending block
+        ref = _build(edges, n, "local")
+        assert np.array_equal(np.asarray(srv._slot.get().degrees()),
+                              np.asarray(ref.degrees()))
+
+
+class TestAdmissionAndDeadlines:
+    def test_overloaded_past_watermark(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        srv = ContinuousServer(eng, shed_watermark=2)
+        try:
+            gate, held = _hold_reader(srv)
+            q1 = srv._submit("degrees", (), None)
+            q2 = srv._submit("degrees", (), None)
+            with pytest.raises(Overloaded):
+                srv.degrees()
+            st = srv.stats()
+            assert st["shed_total"] == 1
+            assert st["queue_depth"] == 2
+            gate.set()
+            for r in (held, q1, q2):
+                r.wait()
+        finally:
+            srv.close()
+
+    def test_deadline_expired_fails_fast(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        srv = ContinuousServer(eng)
+        try:
+            gate, held = _hold_reader(srv)
+            doomed = srv._submit("degrees", (), 0.001)
+            ok = srv._submit("degrees", (), 60.0)
+            time.sleep(0.05)  # let the deadline lapse while queued
+            gate.set()
+            with pytest.raises(DeadlineExceeded):
+                doomed.wait()
+            ok.wait()  # the live request in the same drain is served
+            held.wait()
+            assert srv.stats()["deadline_misses"] == 1
+        finally:
+            srv.close()
+
+    def test_deadline_validation(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        with ContinuousServer(eng) as srv:
+            with pytest.raises(ValueError):
+                srv.degrees(deadline=-1.0)
+
+
+class TestShutdown:
+    def test_close_fails_pending_and_rejects_new(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        srv = ContinuousServer(eng)
+        srv.close()
+        with pytest.raises(ServerClosed):
+            srv.degrees()
+        with pytest.raises(ServerClosed):
+            srv.ingest(edges[:10])
+        srv.close()  # idempotent
+
+    @pytest.mark.filterwarnings(
+        "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+    def test_reader_crash_fails_pending(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        srv = ContinuousServer(eng)
+        try:
+            def boom(snap, batch):
+                raise SystemExit("reader crash")
+            srv._serve = boom
+            r = srv._submit("degrees", (), None)
+            with pytest.raises(BaseException):
+                r.wait()
+            deadline = time.monotonic() + 10
+            while not srv._reader_dead and time.monotonic() < deadline:
+                time.sleep(0.01)
+            with pytest.raises(ServerClosed):
+                srv.degrees()
+        finally:
+            srv.close()
+
+    @pytest.mark.filterwarnings(
+        "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+    def test_writer_crash_fails_flush(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        srv = ContinuousServer(eng)
+        try:
+            def boom(block):
+                raise RuntimeError("writer crash")
+            srv._eng.ingest = boom
+            srv.ingest(edges[1000:1100])
+            with pytest.raises(ServerClosed):
+                srv.flush(timeout=10)
+            deadline = time.monotonic() + 10
+            while not srv._writer_dead and time.monotonic() < deadline:
+                time.sleep(0.01)
+            with pytest.raises(ServerClosed):
+                srv.ingest(edges[:10])
+            # readers keep serving the last published snapshot
+            assert np.asarray(srv.degrees()).shape == (n,)
+        finally:
+            srv.close()
+
+
+class TestStatsSurface:
+    def test_schema_superset_of_queryserver(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        with ContinuousServer(eng) as srv:
+            srv.degrees()
+            srv.union_size([[0, 1, 2]])
+            srv.ingest(edges[1000:1100])
+            srv.flush()
+            st = srv.stats()
+        for key in ("epoch", "queue_depth", "requests_total",
+                    "requests_per_sec", "fused_batches", "shed_total",
+                    "deadline_misses", "plan_traces", "plan_cache",
+                    "ingest_queue_depth", "ingest_blocks_applied",
+                    "snapshot"):
+            assert key in st, key
+        for key in ("version", "rotations", "age_seconds",
+                    "writer_version", "version_lag"):
+            assert key in st["snapshot"], key
+        for kind in ("degrees", "union"):
+            for key in ("requests", "batches", "max_coalesced", "p50_ms",
+                        "p99_ms", "p999_ms", "histogram_ms"):
+                assert key in st[kind], (kind, key)
+            assert sum(c for _, c in st[kind]["histogram_ms"]) \
+                == st[kind]["requests"]
+
+    def test_reset_stats(self, graph):
+        edges, n = graph
+        eng = _build(edges[:1000], n, "local")
+        with ContinuousServer(eng) as srv:
+            srv.degrees()
+            srv.reset_stats()
+            st = srv.stats()
+            assert st["requests_total"] == 0
+            assert "degrees" not in st
+
+    def test_ingest_validation_kwargs(self):
+        with pytest.raises(ValueError):
+            ContinuousServer(object(), max_ingest_queue=0)
+        with pytest.raises(ValueError):
+            ContinuousServer(object(), shed_watermark=0)

@@ -369,3 +369,71 @@ def test_closed_server_rejects_requests(graph):
     with pytest.raises(ServerClosed):
         srv.degrees()
     srv.close()  # idempotent
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_crash_fails_pending_with_server_closed(graph):
+    """A dying worker (BaseException) never leaves a future hanging:
+    the in-flight batch fails, the backlog fails with ServerClosed, and
+    later submits are rejected (ISSUE 6 satellite: shutdown contract)."""
+    edges, n = graph
+    srv = QueryServer(_build(edges[:200], n, "local"))
+    try:
+        srv.pause()
+        r1 = srv._submit("degrees", ())
+        r2 = srv._submit("union", ([np.array([0, 1])], False))
+
+        def boom(batch):
+            raise SystemExit("worker crash")
+        srv._serve = boom
+        srv.resume()
+        for r in (r1, r2):
+            with pytest.raises(BaseException):
+                r.wait()
+        srv._worker.join(timeout=30)
+        assert srv._dead
+        with pytest.raises(ServerClosed):
+            srv.degrees()
+    finally:
+        srv.close()  # close after a crash is safe and idempotent
+
+
+def test_shutdown_alias_and_stats_schema(graph):
+    """shutdown() == close(); stats() carries the serving-frontend schema
+    (queue depth, p999, histograms, shed/deadline counters)."""
+    edges, n = graph
+    srv = QueryServer(_build(edges[:200], n, "local"))
+    srv.degrees()
+    srv.union_size([[0, 1, 2]])
+    st = srv.stats()
+    for key in ("epoch", "queue_depth", "requests_total", "fused_batches",
+                "shed_total", "deadline_misses", "plan_traces",
+                "plan_cache"):
+        assert key in st, key
+    assert st["queue_depth"] == 0
+    assert st["shed_total"] == 0 and st["deadline_misses"] == 0
+    for kind in ("degrees", "union"):
+        s = st[kind]
+        for key in ("requests", "batches", "max_coalesced", "p50_ms",
+                    "p99_ms", "p999_ms", "histogram_ms"):
+            assert key in s, (kind, key)
+        assert sum(c for _, c in s["histogram_ms"]) == s["requests"]
+        assert all(c > 0 for _, c in s["histogram_ms"])
+    srv.shutdown()
+    with pytest.raises(ServerClosed):
+        srv.degrees()
+    srv.shutdown()  # idempotent
+
+
+def test_queue_depth_reported_while_paused(graph):
+    edges, n = graph
+    with QueryServer(_build(edges[:200], n, "local")) as srv:
+        srv.pause()
+        a = srv._submit("degrees", ())
+        b = srv._submit("degrees", ())
+        assert srv.stats()["queue_depth"] == 2
+        srv.resume()
+        a.wait()
+        b.wait()
+        assert srv.stats()["queue_depth"] == 0

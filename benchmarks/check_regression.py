@@ -52,6 +52,15 @@ SUITES = [
         "guard": ("per_kind_seconds", 0.0002),
     },
     {
+        "file": "BENCH_roofline.json",
+        "key": ("op", "p"),
+        "metric": "bytes_ratio",  # modeled byte/packed HBM bytes per query:
+        # deterministic (no timing), so any drop is a real layout
+        # regression — e.g. a kernel quietly unpacking panels in HBM
+        "higher_is_better": True,
+        "guard": ("bytes_ratio", 0.0),  # analytic metric: no jitter floor
+    },
+    {
         "file": "BENCH_load.json",
         "key": ("graph", "loop"),
         "metric": "p99_speedup",  # barrier/continuous p99: machine-neutral

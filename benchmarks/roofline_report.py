@@ -1,53 +1,85 @@
-"""§Roofline report: read dry-run artifacts -> per-cell three-term table.
+"""Per-op sketch-kernel roofline: modeled HBM bytes/FLOPs by layout.
 
-Emits one CSV row per (arch x shape) single-pod cell:
-  compute/memory/collective seconds, dominant term, useful-FLOPs ratio,
-  and the roofline fraction (compute term / binding term).
+For every kernel op (``analysis.flops.SKETCH_OPS``) and every register
+layout (byte / packed), evaluate the analytic cost model
+(:func:`repro.analysis.flops.sketch_op_costs`) at the paper-scale shapes
+and run the three-term roofline (:func:`repro.analysis.roofline
+.roofline_terms`, TPU v5e constants) on the result. The models are pure
+functions of (op, p, layout, shapes) — no timing, no device — so the
+report is deterministic and machine-neutral.
+
+Emits one CSV row per (op, p, layout) cell and writes
+``BENCH_roofline.json`` whose per-(op, p) records carry ``bytes_ratio``
+= modeled byte-layout HBM bytes / packed HBM bytes — the figure of merit
+for the 4-bit packing (DESIGN.md §11). The CI perf gate
+(benchmarks/check_regression.py) compares ``bytes_ratio`` against the
+committed baseline, so a change that silently re-inflates the packed
+layout's memory traffic fails the gate.
+
+    PYTHONPATH=src:. python benchmarks/roofline_report.py
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 
 from benchmarks.common import emit
+from repro.analysis.flops import SKETCH_OPS, sketch_op_costs
+from repro.analysis.roofline import roofline_terms
 
-ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "artifacts", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_roofline.json")
+
+#: precision sweep: the paper's serving point (p=8) up to the
+#: memory-bound regime the packing targets (p>=12).
+PS = (8, 12, 14)
+
+#: paper-scale query shapes shared by every cell (per-call).
+SHAPES = dict(n=1 << 16, edges=1 << 16, sets=256, set_size=8, pairs=1 << 12)
 
 
-def load_records(mesh: str = "single_pod") -> list[dict]:
-    recs = []
-    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
-        with open(path) as f:
-            recs.append(json.load(f))
-    return recs
-
-
-def run(small: bool = True) -> None:
-    recs = load_records()
-    if not recs:
-        emit("roofline/NO_ARTIFACTS", 0.0,
-             "run scripts/run_dryruns.py first")
-        return
-    n_ok = n_skip = 0
-    for r in recs:
-        cell = f"{r['arch']}/{r['shape']}"
-        if r.get("skipped"):
-            n_skip += 1
-            emit(f"roofline/{cell}", 0.0, "skipped=long-context-inapplicable")
-            continue
-        if not r.get("ok"):
-            emit(f"roofline/{cell}", 0.0, "FAILED")
-            continue
-        n_ok += 1
-        rl = r["roofline"]
-        emit(f"roofline/{cell}", rl["bound_s"] * 1e6,
-             f"t_comp={rl['t_compute_s']:.2e};t_mem={rl['t_memory_s']:.2e};"
-             f"t_coll={rl['t_collective_s']:.2e};dom={rl['dominant']};"
-             f"roofline_frac={rl['compute_fraction']:.3f};"
-             f"useful_flops_ratio={r.get('flops_ratio_useful', 0):.3f}")
-    emit("roofline/summary", 0.0, f"cells_ok={n_ok};cells_skipped={n_skip}")
+def run(small: bool = True, quick: bool = False, out: str | None = None,
+        ) -> None:
+    """Emit the per-op roofline table and write ``BENCH_roofline.json``."""
+    del small, quick  # the analytic models have one (cheap) configuration
+    records = []
+    for op in SKETCH_OPS:
+        for p in PS:
+            cell = {}
+            for layout in ("byte", "packed"):
+                c = sketch_op_costs(op, p=p, layout=layout, **SHAPES)
+                rl = roofline_terms(c["flops"], c["hbm_bytes"], 0.0)
+                cell[layout] = (c, rl)
+                emit(f"roofline/{op}/p={p}/{layout}",
+                     rl["bound_s"] * 1e6,
+                     f"hbm_bytes={c['hbm_bytes']:.3g};"
+                     f"flops={c['flops']:.3g};dom={rl['dominant']};"
+                     f"t_mem={rl['t_memory_s']:.2e}")
+            ratio = (cell["byte"][0]["hbm_bytes"]
+                     / cell["packed"][0]["hbm_bytes"])
+            records.append({
+                "op": op, "p": p,
+                "bytes_byte": cell["byte"][0]["hbm_bytes"],
+                "bytes_packed": cell["packed"][0]["hbm_bytes"],
+                "bytes_ratio": ratio,
+                "flops": cell["byte"][0]["flops"],
+                "dominant": cell["byte"][1]["dominant"],
+                "t_memory_byte_s": cell["byte"][1]["t_memory_s"],
+                "t_memory_packed_s": cell["packed"][1]["t_memory_s"],
+            })
+            emit(f"roofline/{op}/p={p}/bytes_ratio", 0.0,
+                 f"bytes_ratio={ratio:.3f}")
+    payload = {
+        "benchmark": "sketch_roofline",
+        # analytic model — identical on every runner, so the perf gate's
+        # device-match precondition always holds
+        "device": "modeled",
+        "shapes": SHAPES,
+        "results": records,
+    }
+    path = out or OUT
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit("roofline/json", 0.0, f"wrote={path};records={len(records)}")
 
 
 if __name__ == "__main__":

@@ -53,6 +53,8 @@ def main() -> None:
             small=small, quick=args.quick, out=_out(bench_queryfusion.OUT)),
         "load": lambda: bench_load.run(
             small=small, quick=args.quick, out=_out(bench_load.OUT)),
+        "roofline": lambda: roofline_report.run(
+            small=small, quick=args.quick, out=_out(roofline_report.OUT)),
     }
     suites = {
         **json_suites,
@@ -62,7 +64,6 @@ def main() -> None:
         "fig78": lambda: bench_intersection.run(small=small),
         "theorem1": lambda: bench_theorem1.run(small=small),
         "kernels": lambda: bench_kernels.run(small=small),
-        "roofline": lambda: roofline_report.run(small=small),
     }
     if args.quick:
         suites = json_suites

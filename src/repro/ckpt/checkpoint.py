@@ -15,6 +15,13 @@ DESIGN.md §8; the full-array variant keeps this container honest.)
 
 AsyncCheckpointer overlaps serialization with the next training steps —
 the train loop hands off host copies and continues.
+
+Register-panel layouts: the checkpoint layer is layout-agnostic — a
+packed uint8[n, r/2] panel round-trips bit-identically as a plain uint8
+leaf, exactly like a byte-layout uint8[n, r] one. The *interpretation*
+of the bytes (``"layout"``) travels in the engine's ``extra`` dict
+(``repro.engine.save``/``load``), which converts between layouts at
+restore time when the caller asks for the other one (DESIGN.md §11).
 """
 from __future__ import annotations
 

@@ -15,20 +15,21 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["fmix32", "hash64", "bucket_rho"]
 
-_GOLD_HI = jnp.uint32(0x9E3779B9)  # golden-ratio odd constant (splitmix)
-_GOLD_LO = jnp.uint32(0x85EBCA6B)
+_GOLD_HI = np.uint32(0x9E3779B9)  # golden-ratio odd constant (splitmix)
+_GOLD_LO = np.uint32(0x85EBCA6B)
 
 
 def fmix32(x: jax.Array) -> jax.Array:
     """murmur3 32-bit finalizer: full avalanche over a uint32 lane."""
     x = x.astype(jnp.uint32)
     x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x85EBCA6B)
+    x = x * np.uint32(0x85EBCA6B)
     x = x ^ (x >> 13)
-    x = x * jnp.uint32(0xC2B2AE35)
+    x = x * np.uint32(0xC2B2AE35)
     x = x ^ (x >> 16)
     return x
 
@@ -41,9 +42,13 @@ def hash64(keys: jax.Array, seed: int = 0) -> tuple[jax.Array, jax.Array]:
     purposes (bucket from hi, rho window spanning both lanes).
     """
     k = keys.astype(jnp.uint32)
-    s = jnp.uint32(seed)
-    hi = fmix32(k ^ (s * _GOLD_HI + jnp.uint32(0x27D4EB2F)))
-    lo = fmix32((k + _GOLD_LO) ^ (s * _GOLD_LO + jnp.uint32(0x165667B1)))
+    # Seed mixing folds to numpy scalar literals (Python-int arithmetic,
+    # wrapped mod 2^32) so kernel bodies that inline this hash never
+    # close over device-array constants (Pallas rejects captured arrays).
+    s_hi = np.uint32((int(seed) * 0x9E3779B9 + 0x27D4EB2F) & 0xFFFFFFFF)
+    s_lo = np.uint32((int(seed) * 0x85EBCA6B + 0x165667B1) & 0xFFFFFFFF)
+    hi = fmix32(k ^ s_hi)
+    lo = fmix32((k + _GOLD_LO) ^ s_lo)
     # cross-mix so hi/lo are not independent of each other's low bits only
     hi = fmix32(hi + lo * _GOLD_HI)
     return hi, lo
@@ -60,12 +65,12 @@ def bucket_rho(keys: jax.Array, p: int, seed: int = 0) -> tuple[jax.Array, jax.A
         raise ValueError(f"p must be in [1, 31], got {p}")
     q = 64 - p
     hi, lo = hash64(keys, seed=seed)
-    bucket = (hi >> jnp.uint32(32 - p)).astype(jnp.int32)
+    bucket = (hi >> np.uint32(32 - p)).astype(jnp.int32)
     # Build the q-bit window left-aligned in a 64-bit (w_hi, w_lo) pair.
-    w_hi = (hi << jnp.uint32(p)) | (lo >> jnp.uint32(32 - p))
-    w_lo = lo << jnp.uint32(p)
+    w_hi = (hi << np.uint32(p)) | (lo >> np.uint32(32 - p))
+    w_lo = lo << np.uint32(p)
     lz_hi = jax.lax.clz(w_hi)
     lz_lo = jax.lax.clz(w_lo)
-    lz = jnp.where(w_hi != 0, lz_hi, jnp.uint32(32) + lz_lo).astype(jnp.int32)
+    lz = jnp.where(w_hi != 0, lz_hi, np.uint32(32) + lz_lo).astype(jnp.int32)
     rho = jnp.minimum(lz, q) + 1
     return bucket, rho.astype(jnp.uint8)

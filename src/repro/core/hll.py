@@ -66,7 +66,18 @@ def empty(cfg: HLLConfig) -> jax.Array:
     return jnp.zeros((cfg.r,), dtype=jnp.uint8)
 
 
-def empty_table(n: int, cfg: HLLConfig) -> jax.Array:
+def empty_table(n: int, cfg: HLLConfig, layout: str = "byte") -> jax.Array:
+    """Zeroed register table for ``n`` sketches under ``layout``.
+
+    Row width is ``r`` bytes for the byte layout and ``r / 2`` for the
+    packed 4-bit-lane layout (``kernels.packing``; width computed inline
+    to keep ``core`` free of a kernels import). The all-zero byte row is
+    the empty sketch in *both* layouts.
+    """
+    if layout == "packed":
+        return jnp.zeros((n, cfg.r // 2), dtype=jnp.uint8)
+    if layout != "byte":
+        raise ValueError(f"layout must be 'byte' or 'packed', got {layout!r}")
     return jnp.zeros((n, cfg.r), dtype=jnp.uint8)
 
 

@@ -47,7 +47,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hll, intersection
 from repro.core.hll import HLLConfig
-from repro.kernels import ops
+from repro.kernels import ops, packing
 
 __all__ = [
     "DistPlan", "vertex_partition", "build_plan", "dist_accumulate",
@@ -224,11 +224,12 @@ def _jit_cached(query: str, bucket: tuple, cfg, impl: str, extra: tuple,
 
 
 def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
-                    impl: str = "ref") -> jax.Array:
-    """Algorithm 1, distributed: returns regs uint8[n_pad, r] sharded on axis.
+                    impl: str = "ref", layout: str = "byte") -> jax.Array:
+    """Algorithm 1, distributed: returns regs uint8[n_pad, w] sharded on axis.
 
     ``impl`` selects the per-shard insert kernel via ``kernels.ops``
-    ("ref" = jnp scatter-max oracle, "pallas" = the TPU kernel).
+    ("ref" = jnp scatter-max oracle, "pallas" = the TPU kernel);
+    ``layout`` picks the register row width (w = r bytes, or r/2 packed).
     """
 
     v_loc = plan.v_loc  # close over the scalar only — a cached body that
@@ -236,9 +237,9 @@ def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
 
     def build():
         def body(dst_local, key, mask):
-            regs_local = hll.empty_table(v_loc, cfg)
+            regs_local = hll.empty_table(v_loc, cfg, layout=layout)
             return ops.accumulate(regs_local, dst_local[0], key[0], cfg,
-                                  mask=mask[0], impl=impl)
+                                  mask=mask[0], impl=impl, layout=layout)
 
         # pallas_call has no replication rule; the body is purely per-shard
         # anyway, so the check adds nothing here.
@@ -250,7 +251,7 @@ def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
     f = _jit_cached(
         "dist_accumulate",
         (plan.n_pad, plan.num_shards, plan.acc_dst_local.shape[1]),
-        cfg, impl, (axis,), build)
+        cfg, impl, (axis, layout), build)
     return f(
         jax.device_put(plan.acc_dst_local, _shard_spec(mesh, axis, None)),
         jax.device_put(plan.acc_key, _shard_spec(mesh, axis, None)),
@@ -258,15 +259,22 @@ def dist_accumulate(mesh: Mesh, axis: str, plan: DistPlan, cfg: HLLConfig,
 
 
 def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
-                             regs: jax.Array) -> jax.Array:
-    """One Algorithm 2 pass; paper-faithful all_gather dataflow."""
+                             regs: jax.Array,
+                             layout: str = "byte") -> jax.Array:
+    """One Algorithm 2 pass; paper-faithful all_gather dataflow.
+
+    The masked-out fill value 0x00 is empty in *both* layouts (two zero
+    nibbles), but the scatter-merge itself must be nibble-wise when
+    packed — a byte-wise ``.at[].max`` would compare whole packed bytes.
+    """
 
     def build():
         def body(regs_local, src, dst_local, mask):
             full = jax.lax.all_gather(regs_local, axis, tiled=True)
             gathered = jnp.where(mask[0][:, None], full[src[0]],
                                  jnp.uint8(0))
-            return regs_local.at[dst_local[0]].max(gathered)
+            return packing.scatter_max_rows(regs_local, dst_local[0],
+                                            gathered, layout=layout)
 
         return jax.jit(_shard_map(
             body, mesh=mesh,
@@ -277,7 +285,7 @@ def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
     f = _jit_cached(
         "dist_propagate_allgather",
         (plan.n_pad, plan.num_shards, plan.flat_src.shape[1]),
-        None, "ref", (axis,), build)
+        None, "ref", (axis, layout), build)
     return f(
         regs,
         jax.device_put(plan.flat_src, _shard_spec(mesh, axis, None)),
@@ -286,7 +294,7 @@ def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
 
 
 def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
-                        regs: jax.Array) -> jax.Array:
+                        regs: jax.Array, layout: str = "byte") -> jax.Array:
     """One Algorithm 2 pass; ring schedule (beyond-paper optimization).
 
     Step s: shard i holds register block (i - s) mod P in ``buf`` and
@@ -310,7 +318,8 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
                 msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b,
                                                    keepdims=False)
                 gathered = jnp.where(msk[:, None], buf[src], jnp.uint8(0))
-                out = out.at[dst].max(gathered)
+                out = packing.scatter_max_rows(out, dst, gathered,
+                                               layout=layout)
                 buf = jax.lax.ppermute(buf, axis, perm)
                 return buf, out
 
@@ -327,7 +336,7 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
     f = _jit_cached(
         "dist_propagate_ring",
         (plan.n_pad, plan.num_shards, plan.ring_dst_local.shape[2]),
-        None, "ref", (axis,), build)
+        None, "ref", (axis, layout), build)
     return f(
         regs,
         jax.device_put(plan.ring_dst_local, _shard_spec(mesh, axis, None, None)),
@@ -338,6 +347,7 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
 def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
                                 cfg: HLLConfig, regs: jax.Array, k: int,
                                 iters: int = 30, mode: str = "edge",
+                                layout: str = "byte",
                                 ) -> tuple[float, np.ndarray, np.ndarray]:
     """Algorithms 3-5, distributed. mode='edge' (Alg 4) or 'vertex' (Alg 5).
 
@@ -365,6 +375,9 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
         full = jax.lax.all_gather(regs_local, axis, tiled=True)
         a = full[u[0]]
         b = full[v[0]]
+        if layout == "packed":  # MLE stats read byte registers
+            a = packing.unpack_rows(a)
+            b = packing.unpack_rows(b)
         est = intersection.mle_intersection(a, b, cfg, iters)
         est = jnp.where(mask[0], est, 0.0)
         total = jax.lax.psum(jnp.sum(est), axis) / 3.0
@@ -403,7 +416,7 @@ def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,
     f = _jit_cached(
         "dist_triangle_heavy_hitters",
         (plan.n, plan.n_pad, plan.num_shards, plan.tri_u.shape[1]),
-        cfg, "ref", (axis, k, iters, mode), build)
+        cfg, "ref", (axis, k, iters, mode, layout), build)
     total, vals, ids = f(
         regs,
         jax.device_put(plan.tri_u, _shard_spec(mesh, axis, None)),

@@ -38,7 +38,7 @@ from repro.engine.sharded import ShardedEngine
 from repro.kernels import registry
 
 __all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "open", "build",
-           "load", "default_impl"]
+           "load", "default_impl", "default_layout"]
 
 
 def default_impl() -> str:
@@ -54,21 +54,37 @@ def default_impl() -> str:
     """
     return os.environ.get("REPRO_IMPL", "ref")
 
+
+def default_layout() -> str:
+    """Register-panel layout used when callers don't pass ``layout=``.
+
+    Resolved from the ``REPRO_LAYOUT`` environment variable (default
+    ``"byte"``), evaluated per call like :func:`default_impl` — the CI
+    matrix runs a ``REPRO_LAYOUT=packed`` leg over the whole tier-1
+    suite the same way the impl legs work (DESIGN.md §11).
+    ``engine.load`` is unaffected — a checkpoint's recorded layout wins
+    unless overridden at the call.
+    """
+    return os.environ.get("REPRO_LAYOUT", "byte")
+
 _BACKENDS = {"local": LocalEngine, "sharded": ShardedEngine}
 
 
-def _validate(backend: str, shards, impl: str) -> None:
+def _validate(backend: str, shards, impl: str,
+              layout: str = "byte") -> None:
     """Shared argument validation — fail before any accumulation work."""
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
                          f"got {backend!r}")
-    registry.resolve(impl)  # capability check against the kernel registry
+    # capability check against the kernel registry (incl. layout support)
+    registry.resolve(impl, layout=layout)
     if backend != "sharded" and shards is not None:
         raise ValueError("shards= only applies to backend='sharded'")
 
 
 def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
-         shards: int | None = None, impl: str | None = None) -> SketchEngine:
+         shards: int | None = None, impl: str | None = None,
+         layout: str | None = None) -> SketchEngine:
     """An empty engine over vertex universe [0, n), ready to ingest.
 
     This is the streaming entry point (Algorithm 1 as a lifecycle): the
@@ -88,19 +104,25 @@ def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
       impl: kernel implementation threaded through ``repro.kernels.ops``
         ("ref" jnp oracles, "pallas" the TPU kernels); defaults to
         :func:`default_impl` (the ``REPRO_IMPL`` env var, or "ref").
+      layout: register-panel layout ("byte" exact-width, "packed" 4-bit
+        lanes halving panel bytes — DESIGN.md §11); defaults to
+        :func:`default_layout` (the ``REPRO_LAYOUT`` env var, or "byte").
     """
     cfg = cfg or HLLConfig()
     impl = impl or default_impl()
-    _validate(backend, shards, impl)
+    layout = layout or default_layout()
+    _validate(backend, shards, impl, layout)
     if backend == "sharded":
-        return ShardedEngine.open(n, cfg, shards=shards, impl=impl)
-    return LocalEngine.open(n, cfg, impl=impl)
+        return ShardedEngine.open(n, cfg, shards=shards, impl=impl,
+                                  layout=layout)
+    return LocalEngine.open(n, cfg, impl=impl, layout=layout)
 
 
 def build(edges: np.ndarray, n: int | None = None,
           cfg: HLLConfig | None = None, *, backend: str = "local",
           shards: int | None = None,
-          impl: str | None = None) -> SketchEngine:
+          impl: str | None = None,
+          layout: str | None = None) -> SketchEngine:
     """Accumulate a DegreeSketch (Algorithm 1) and return a query engine.
 
     A thin wrapper over :func:`open` + one ``ingest(edges)`` call — batch
@@ -122,17 +144,21 @@ def build(edges: np.ndarray, n: int | None = None,
     if n is None:
         n = int(edges.max()) + 1 if len(edges) else 1
     return open(n, cfg, backend=backend, shards=shards,
-                impl=impl).ingest(edges)
+                impl=impl, layout=layout).ingest(edges)
 
 
 def load(path: str, *, backend: str | None = None, shards: int | None = None,
-         impl: str | None = None, step: int | None = None) -> SketchEngine:
+         impl: str | None = None, step: int | None = None,
+         layout: str | None = None) -> SketchEngine:
     """Restore a saved engine; queries answer identically to pre-save.
 
-    ``backend`` / ``shards`` / ``impl`` default to the values recorded at
-    save time but may be overridden — the register rows are canonical, so
-    a locally-built sketch can be re-hosted sharded and vice versa. A
-    checkpoint taken mid-stream restores to an engine that resumes
+    ``backend`` / ``shards`` / ``impl`` / ``layout`` default to the
+    values recorded at save time but may be overridden — the register
+    rows are canonical, so a locally-built sketch can be re-hosted
+    sharded and vice versa, and a byte checkpoint can be re-hosted
+    packed (rows convert through ``kernels.packing``; byte -> packed
+    saturates registers above 15, which is merge-exact — DESIGN.md §11).
+    A checkpoint taken mid-stream restores to an engine that resumes
     ingestion exactly where the saved one stopped (same row layout, same
     tracked edge list).
     """
@@ -159,9 +185,16 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
     n = int(extra["n"])
     backend = backend or extra["backend"]
     impl = impl or extra.get("impl", "ref")
-    _validate(backend, shards, impl)  # same contract as open()/build()
+    layout_saved = extra.get("layout", "byte")
+    layout = layout or layout_saved
+    _validate(backend, shards, impl, layout)  # same contract as open()
+    if layout != layout_saved:
+        from repro.kernels import packing
+        regs = np.asarray(packing.to_layout(regs, layout_saved, layout),
+                          np.uint8)
     if backend == "local":
-        return LocalEngine.from_regs(regs, n, cfg, edges=edges, impl=impl)
+        return LocalEngine.from_regs(regs, n, cfg, edges=edges, impl=impl,
+                                     layout=layout)
     return ShardedEngine.from_regs(
         regs, n, cfg, edges=edges,
-        shards=shards or extra.get("shards"), impl=impl)
+        shards=shards or extra.get("shards"), impl=impl, layout=layout)

@@ -157,12 +157,16 @@ class SketchEngine(abc.ABC):
 
     def __init__(self, regs: jax.Array, n: int, cfg: HLLConfig,
                  edges: np.ndarray | None, impl: str = "ref",
-                 plan_cache: plans.PlanCache | None = None):
-        self.kernels = registry.resolve(impl, cfg)  # capability check, once
+                 plan_cache: plans.PlanCache | None = None,
+                 layout: str = "byte"):
+        # capability check, once — includes the layout keyword every op
+        # must accept (DESIGN.md §11)
+        self.kernels = registry.resolve(impl, cfg, layout=layout)
         self._regs = regs
         self.n = int(n)
         self.cfg = cfg
         self.impl = impl
+        self.layout = layout
         if edges is not None:
             raw = np.asarray(edges)
             plans.require_integer_ids(raw, "edges")
@@ -365,10 +369,16 @@ class SketchEngine(abc.ABC):
             raise ValueError(
                 f"merge requires identical vertex universe: n={self.n} vs "
                 f"n={other.n}")
+        from repro.kernels import packing
         rows = np.asarray(other.regs, dtype=np.uint8)[: self.n]
+        if other.layout != self.layout:
+            # byte -> packed saturates (merge-exact); packed -> byte exact
+            rows = np.asarray(packing.to_layout(rows, other.layout,
+                                                self.layout), np.uint8)
         full = np.zeros((self.n_pad, rows.shape[1]), np.uint8)
         full[: rows.shape[0]] = rows
-        fn = self._plan("merge", builder=plans.build_merge_plan)
+        fn = self._plan("merge",
+                        builder=lambda: plans.build_merge_plan(self.layout))
         self._release_lease()  # the merge plan donates the left panel
         self._regs = fn(self._regs, self._place_rows(full))
         self._version += 1
@@ -472,6 +482,7 @@ class SketchEngine(abc.ABC):
         """
         key = plans.PlanKey(query=query, bucket=tuple(bucket), cfg=self.cfg,
                             impl=self.impl, backend=self.backend,
+                            layout=self.layout,
                             extra=self._plan_scope() + tuple(extra))
         return self._plan_cache.get(key, builder)
 
@@ -769,6 +780,7 @@ class SketchEngine(abc.ABC):
             "backend": self.backend,
             "n": self.n,
             "impl": self.impl,
+            "layout": self.layout,
             "m_ingested": self.m,
             "cfg": {"p": self.cfg.p, "seed": self.cfg.seed,
                     "estimator": self.cfg.estimator},

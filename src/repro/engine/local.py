@@ -34,47 +34,58 @@ class LocalEngine(SketchEngine):
     # ------------------------------------------------------ construction
     @classmethod
     def open(cls, n: int, cfg: HLLConfig, *, impl: str = "ref",
-             ) -> "LocalEngine":
+             layout: str = "byte") -> "LocalEngine":
         """An empty engine over vertex universe [0, n), ready to ingest.
 
-        Allocates the zeroed register table uint8[n_pad, r] (n padded to a
-        multiple of 8 for the kernels); every subsequent ``ingest`` block
-        folds into that one panel via a donated jitted step.
+        Allocates the zeroed register table uint8[n_pad, w] (n padded to
+        a multiple of 8 for the kernels; w is the layout-dependent row
+        width — r bytes, or r/2 packed); every subsequent ``ingest``
+        block folds into that one panel via a donated jitted step.
         """
         n_pad = dsk.pad_vertices(n, 8)
-        regs = hll.empty_table(n_pad, cfg)
-        return cls(regs, n, cfg, np.zeros((0, 2), np.int32), impl=impl)
+        regs = hll.empty_table(n_pad, cfg, layout=layout)
+        return cls(regs, n, cfg, np.zeros((0, 2), np.int32), impl=impl,
+                   layout=layout)
 
     @classmethod
     def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
-              impl: str = "ref") -> "LocalEngine":
+              impl: str = "ref", layout: str = "byte") -> "LocalEngine":
         """Algorithm 1 in one call: ``open(n, cfg)`` + ``ingest(edges)``.
 
         Batch construction is a thin wrapper over the streaming path, so
         one-shot and block-streamed accumulation are the same code and
         produce bit-identical registers (tested).
         """
-        return cls.open(n, cfg, impl=impl).ingest(edges)
+        return cls.open(n, cfg, impl=impl, layout=layout).ingest(edges)
 
     @classmethod
     def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
                   edges: np.ndarray | None = None,
-                  impl: str = "ref") -> "LocalEngine":
-        """Wrap an existing register table uint8[>=n, r] as a query engine.
+                  impl: str = "ref", layout: str = "byte") -> "LocalEngine":
+        """Wrap an existing register table uint8[>=n, w] as a query engine.
 
         Used by loaders and by workloads that build sketches directly via
         ``repro.core.hll`` (edge-free engines answer degrees/union/
         intersection; neighborhood/triangles need ``edges``, whose ids
-        are validated against [0, n)). The row layout matches ``open``'s,
-        so a checkpoint taken mid-stream resumes ingestion bit-identically.
+        are validated against [0, n)). Row width must match ``layout``
+        (``ValueError`` otherwise — a packed panel handed to a byte
+        engine would be misread, not caught downstream). The row layout
+        matches ``open``'s, so a checkpoint taken mid-stream resumes
+        ingestion bit-identically.
         """
+        from repro.kernels import packing
         regs = jnp.asarray(regs, dtype=jnp.uint8)
+        want = packing.row_width(cfg.r, layout)
+        if regs.shape[1] != want:
+            raise ValueError(
+                f"register rows have width {regs.shape[1]}, but layout "
+                f"{layout!r} at p={cfg.p} needs width {want}")
         n_pad = dsk.pad_vertices(max(n, regs.shape[0]), 8)
         if regs.shape[0] < n_pad:
             regs = jnp.concatenate(
                 [regs, jnp.zeros((n_pad - regs.shape[0], regs.shape[1]),
                                  jnp.uint8)])
-        return cls(regs, n, cfg, edges, impl=impl)
+        return cls(regs, n, cfg, edges, impl=impl, layout=layout)
 
     # ------------------------------------------------------ backend hooks
     def _accumulate_block(self, chunk: np.ndarray) -> None:
@@ -128,7 +139,13 @@ class LocalEngine(SketchEngine):
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
         """Algorithms 4/5 on one device (see base class for the contract)."""
         edges = self._require_edges("triangle_heavy_hitters")
-        sketch = dsk.DegreeSketch(regs=self._regs, n=self.n, cfg=self.cfg)
+        regs = self._regs
+        if self.layout == "packed":
+            # core.degreesketch is byte-layout code: unpack a transient
+            # full-width view (the engine's packed panel is untouched)
+            from repro.kernels import packing
+            regs = packing.unpack_rows(regs)
+        sketch = dsk.DegreeSketch(regs=regs, n=self.n, cfg=self.cfg)
         if mode == "edge":
             return dsk.triangle_heavy_hitters(sketch, edges, k, iters=iters)
         if mode == "vertex":

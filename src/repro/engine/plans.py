@@ -290,6 +290,9 @@ class PlanKey:
         for plans whose body never consults it.
       impl: kernel implementation name ("ref" | "pallas" | ...).
       backend: engine backend ("local" | "sharded").
+      layout: register-panel layout the plan's panels use ("byte" |
+        "packed", DESIGN.md §11) — a packed plan gathers half-width
+        rows, so layouts must never share a compiled program.
       extra: any further static specialization (method/iters for the MLE,
         shard count for mesh-closed plans, ...).
     """
@@ -299,6 +302,7 @@ class PlanKey:
     cfg: object = None
     impl: str = "ref"
     backend: str = "local"
+    layout: str = "byte"
     extra: tuple = ()
 
 
@@ -460,11 +464,19 @@ def build_mixed_plan(cfg, kernels, kinds: tuple, method: str, iters: int):
     return jax.jit(fn)
 
 
-def build_merge_plan():
-    """Plan: lane-wise register max with the left panel donated."""
+def build_merge_plan(layout: str = "byte"):
+    """Plan: lane-wise register max with the left panel donated.
+
+    Layout-aware: packed panels merge nibble-wise through
+    ``packing.merge_rows`` — a byte-wise max on packed bytes would pick
+    one whole byte and drop the larger of the two 4-bit lanes the other
+    operand holds (DESIGN.md §11).
+    """
+    from repro.kernels import packing
+
     def fn(mine, theirs):
         record_trace("merge")
-        return hll.merge(mine, theirs)
+        return packing.merge_rows(mine, theirs, layout=layout)
     return jax.jit(fn, donate_argnums=(0,))
 
 

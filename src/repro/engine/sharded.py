@@ -29,6 +29,7 @@ from repro.core.hll import HLLConfig
 from repro.distributed import sketch_dist as sd
 from repro.engine.base import SketchEngine, bucket
 from repro.graph import stream as gstream
+from repro.kernels import packing
 
 __all__ = ["ShardedEngine"]
 
@@ -41,8 +42,8 @@ class ShardedEngine(SketchEngine):
     backend = "sharded"
 
     def __init__(self, regs, n, cfg, edges, impl, *, mesh, shards,
-                 plan=None):
-        super().__init__(regs, n, cfg, edges, impl=impl)
+                 plan=None, layout="byte"):
+        super().__init__(regs, n, cfg, edges, impl=impl, layout=layout)
         self.mesh = mesh
         self.axis = _AXIS
         self.shards = int(shards)
@@ -98,38 +99,42 @@ class ShardedEngine(SketchEngine):
 
     @classmethod
     def open(cls, n: int, cfg: HLLConfig, *, shards: int | None = None,
-             impl: str = "ref") -> "ShardedEngine":
+             impl: str = "ref", layout: str = "byte") -> "ShardedEngine":
         """An empty sharded engine over [0, n), ready to ingest.
 
         Builds the mesh, fixes the block vertex partition (n_pad, v_loc)
         from (n, shards) alone, and places a zeroed register table
-        block-sharded over the mesh axis. ``shards`` defaults to the
-        visible device count.
+        block-sharded over the mesh axis (row width follows ``layout`` —
+        r bytes, or r/2 packed). ``shards`` defaults to the visible
+        device count.
         """
         shards = shards or jax.device_count()
         mesh = cls._make_mesh(shards)
         n_pad, _ = sd.vertex_partition(n, shards)
-        regs = jax.device_put(np.zeros((n_pad, cfg.r), np.uint8),
+        width = packing.row_width(cfg.r, layout)
+        regs = jax.device_put(np.zeros((n_pad, width), np.uint8),
                               NamedSharding(mesh, P(_AXIS, None)))
         return cls(regs, n, cfg, np.zeros((0, 2), np.int32), impl,
-                   mesh=mesh, shards=shards)
+                   mesh=mesh, shards=shards, layout=layout)
 
     @classmethod
     def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
-              shards: int | None = None, impl: str = "ref") -> "ShardedEngine":
+              shards: int | None = None, impl: str = "ref",
+              layout: str = "byte") -> "ShardedEngine":
         """Algorithm 1, distributed, in one call: ``open`` + ``ingest``.
 
         Batch construction is the streaming path (route edges to owner
         shards, donated scatter-max per block), so one-shot and streamed
         accumulation produce bit-identical sharded registers (tested).
         """
-        return cls.open(n, cfg, shards=shards, impl=impl).ingest(edges)
+        return cls.open(n, cfg, shards=shards, impl=impl,
+                        layout=layout).ingest(edges)
 
     @classmethod
     def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
                   edges: np.ndarray | None = None, shards: int | None = None,
-                  impl: str = "ref") -> "ShardedEngine":
-        """Re-host an unsharded row table uint8[>=n, r] onto a fresh mesh.
+                  impl: str = "ref", layout: str = "byte") -> "ShardedEngine":
+        """Re-host an unsharded row table uint8[>=n, w] onto a fresh mesh.
 
         The rows are re-padded to the mesh's vertex partition before
         device_put — so a checkpoint taken at one shard count restores at
@@ -142,10 +147,16 @@ class ShardedEngine(SketchEngine):
         mesh = cls._make_mesh(shards)
         n_pad, _ = sd.vertex_partition(n, shards)
         rows = np.asarray(regs, dtype=np.uint8)[:n]
+        width = packing.row_width(cfg.r, layout)
+        if rows.shape[1] != width:
+            raise ValueError(
+                f"register rows have width {rows.shape[1]}, expected "
+                f"{width} for r={cfg.r} under layout={layout!r}")
         full = np.zeros((n_pad, rows.shape[1]), np.uint8)
         full[: rows.shape[0]] = rows
         sharded = jax.device_put(full, NamedSharding(mesh, P(_AXIS, None)))
-        return cls(sharded, n, cfg, edges, impl, mesh=mesh, shards=shards)
+        return cls(sharded, n, cfg, edges, impl, mesh=mesh, shards=shards,
+                   layout=layout)
 
     # ------------------------------------------------------ backend hooks
     def _accumulate_block(self, chunk: np.ndarray) -> None:
@@ -195,10 +206,11 @@ class ShardedEngine(SketchEngine):
     def _propagate(self, regs, schedule):
         if schedule in ("auto", "ring"):
             return sd.dist_propagate_ring(self.mesh, self.axis, self.plan,
-                                          regs)
+                                          regs, layout=self.layout)
         if schedule == "allgather":
             return sd.dist_propagate_allgather(self.mesh, self.axis,
-                                               self.plan, regs)
+                                               self.plan, regs,
+                                               layout=self.layout)
         raise ValueError(
             f"schedule must be 'auto', 'ring' or 'allgather', got "
             f"{schedule!r}")
@@ -209,7 +221,7 @@ class ShardedEngine(SketchEngine):
             raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")
         return sd.dist_triangle_heavy_hitters(
             self.mesh, self.axis, self.plan, self.cfg, self._regs, k,
-            iters=iters, mode=mode)
+            iters=iters, mode=mode, layout=self.layout)
 
     # -------------------------------------------------------- persistence
     def _save_extra(self):

@@ -20,15 +20,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import packing
+
 __all__ = ["ertl_stats"]
 
 DEFAULT_PAIR_BLOCK = 128
 
 
-def _make_kernel(q: int):
+def _make_kernel(q: int, layout: str):
     def _kernel(a_ref, b_ref, out_ref):
-        ai = a_ref[...].astype(jnp.int32)
-        bi = b_ref[...].astype(jnp.int32)
+        a = a_ref[...]
+        b = b_ref[...]
+        if layout == "packed":
+            a = packing.unpack_rows(a)  # unpack-in-VMEM (DESIGN.md §11)
+            b = packing.unpack_rows(b)
+        ai = a.astype(jnp.int32)
+        bi = b.astype(jnp.int32)
         lt = (ai < bi).astype(jnp.float32)
         gt = (ai > bi).astype(jnp.float32)
         eq = (ai == bi).astype(jnp.float32)
@@ -43,17 +50,19 @@ def _make_kernel(q: int):
     return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("q", "pair_block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("q", "layout", "pair_block",
+                                             "interpret"))
 def ertl_stats(a: jax.Array, b: jax.Array, q: int,
-               *, pair_block: int = DEFAULT_PAIR_BLOCK,
+               *, layout: str = "byte",
+               pair_block: int = DEFAULT_PAIR_BLOCK,
                interpret: bool = True) -> jax.Array:
-    """a, b: uint8[E, r] (E multiple of pair_block) -> float32[E, 5, q+2]."""
+    """a, b: uint8[E, w] (E multiple of pair_block) -> float32[E, 5, q+2]."""
     e, r = a.shape
     assert a.shape == b.shape
     assert e % pair_block == 0, (e, pair_block)
     grid = (e // pair_block,)
     return pl.pallas_call(
-        _make_kernel(q),
+        _make_kernel(q, layout),
         grid=grid,
         in_specs=[
             pl.BlockSpec((pair_block, r), lambda i: (i, 0)),

@@ -1,19 +1,32 @@
-"""Pallas TPU kernel: HLL scatter-max accumulation (Algorithm 1 hot loop).
+"""Pallas TPU kernel: fused hash + HLL scatter-max accumulation.
 
-Semantics = ref.hll_accumulate_ref: regs[rows[e], buckets[e]] max= rhos[e].
+Semantics = Algorithm 1 INSERT: for each edge e with mask[e],
+``regs[rows[e], bucket(keys[e])] max= rho(keys[e])`` — with the
+``core.hashing.bucket_rho`` split computed *inside* the kernel body.
+The old pipeline hashed every key in one XLA program, wrote the
+(bucket, rho) streams to HBM, and re-read them in the scatter kernel;
+fusing the hash keeps the edge stream's derived values in registers and
+halves the per-edge HBM traffic to just (row, key).
 
-TPU design (DESIGN.md §9): the register panel (V, r) lives in VMEM for the
-whole grid (index_map pins it; caller guarantees V*r <= ~4MB — the
-distributed plan's per-shard blocks already satisfy this). Edge indices are
-scalars in SMEM. Each edge becomes ONE full-row vector op: a (1, r) load,
-a lane-wise max against a one-hot(bucket)*rho vector built from a 2-D iota,
-and a (1, r) store — r is a multiple of 128 lanes for p >= 7, so every step
-is VPU-shaped. Padding edges are encoded as (row=0, bucket=0, rho=0):
-max with 0 is a no-op, so the kernel needs no branch.
+TPU design (DESIGN.md §9/§11): the register panel (V, w) lives in VMEM
+for the whole grid (index_map pins it; caller guarantees V*w <= ~4MB —
+the distributed plan's per-shard blocks already satisfy this). Edge rows,
+raw uint32 keys (bitcast through int32 for SMEM transport) and the
+padding mask are scalars in SMEM. Each edge becomes ONE full-row vector
+op: a (1, w) load, a lane-wise max against a one-hot(bucket)*rho vector
+built from a 2-D iota, and a (1, w) store. Masked/padding edges zero the
+rho and park on row 0: max with 0 is a no-op, so the kernel needs no
+branch.
 
-The sequential fori_loop over the edge block is the TPU-idiomatic scatter:
-TPU has no atomic scatter; grid steps run sequentially per core, and the
-register panel is input_output_aliased so updates accumulate in place.
+Packed layout (DESIGN.md §11): the row loads/stores move the half-width
+packed bytes; the body unpacks the (1, w) row to (1, r) nibble lanes in
+VMEM, maxes, and repacks before the store — the full-width row never
+exists outside the vector registers.
+
+The sequential fori_loop over the edge block is the TPU-idiomatic
+scatter: TPU has no atomic scatter; grid steps run sequentially per
+core, and the register panel is input_output_aliased so updates
+accumulate in place.
 """
 from __future__ import annotations
 
@@ -24,46 +37,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.hashing import bucket_rho
+from repro.kernels import packing
+
 __all__ = ["hll_accumulate"]
 
 DEFAULT_EDGE_BLOCK = 512
 
 
-def _kernel(regs_ref, rows_ref, buckets_ref, rhos_ref, out_ref):
-    r = out_ref.shape[1]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+def _make_kernel(p: int, seed: int, layout: str):
+    def _kernel(regs_ref, rows_ref, keys_ref, mask_ref, out_ref):
+        w = out_ref.shape[1]
+        r = w * packing.LANES_PER_BYTE if layout == "packed" else w
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
 
-    def body(e, _):
-        row = rows_ref[e]
-        bucket = buckets_ref[e]
-        rho = rhos_ref[e]
-        update = jnp.where(lane == bucket, rho, 0).astype(jnp.uint8)
-        cur = pl.load(out_ref, (pl.dslice(row, 1), slice(None)))
-        pl.store(out_ref, (pl.dslice(row, 1), slice(None)),
-                 jnp.maximum(cur, update))
-        return 0
+        def body(e, _):
+            # Fused hash: bucket/rho from the raw key, in-register.
+            key = jax.lax.bitcast_convert_type(keys_ref[e], jnp.uint32)
+            bucket, rho = bucket_rho(key, p, seed)
+            keep = mask_ref[e] != 0
+            rho = jnp.where(keep, rho.astype(jnp.int32), 0)
+            row = jnp.where(keep, rows_ref[e], 0)
+            update = jnp.where(lane == bucket, rho, 0).astype(jnp.uint8)
+            cur = pl.load(out_ref, (pl.dslice(row, 1), slice(None)))
+            if layout == "packed":
+                merged = packing.pack_rows(
+                    jnp.maximum(packing.unpack_rows(cur), update))
+            else:
+                merged = jnp.maximum(cur, update)
+            pl.store(out_ref, (pl.dslice(row, 1), slice(None)), merged)
+            return 0
 
-    jax.lax.fori_loop(0, rows_ref.shape[0], body, 0)
+        jax.lax.fori_loop(0, rows_ref.shape[0], body, 0)
+    return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("edge_block", "interpret"))
-def hll_accumulate(regs: jax.Array, rows: jax.Array, buckets: jax.Array,
-                   rhos: jax.Array, *, edge_block: int = DEFAULT_EDGE_BLOCK,
+@functools.partial(jax.jit, static_argnames=("p", "seed", "layout",
+                                             "edge_block", "interpret"))
+def hll_accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
+                   mask: jax.Array, *, p: int, seed: int = 0,
+                   layout: str = "byte",
+                   edge_block: int = DEFAULT_EDGE_BLOCK,
                    interpret: bool = True) -> jax.Array:
-    """regs: uint8[V, r]; rows/buckets: int32[E]; rhos: uint8->int32[E].
+    """regs: uint8[V, w]; rows: int32[E]; keys: uint32[E]; mask: bool[E].
 
-    E must be a multiple of edge_block (ops.py pads). Returns updated regs.
+    E must be a multiple of edge_block (ops.py pads; padding edges carry
+    mask=False). Returns the updated panel in the same layout.
     """
-    v, r = regs.shape
+    v, w = regs.shape
     e = rows.shape[0]
     assert e % edge_block == 0, (e, edge_block)
     grid = (e // edge_block,)
-    rhos32 = rhos.astype(jnp.int32)
+    keys_i = jax.lax.bitcast_convert_type(keys.astype(jnp.uint32), jnp.int32)
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(p, seed, layout),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((v, r), lambda i: (0, 0)),  # panel pinned in VMEM
+            pl.BlockSpec((v, w), lambda i: (0, 0)),  # panel pinned in VMEM
             pl.BlockSpec((edge_block,), lambda i: (i,),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((edge_block,), lambda i: (i,),
@@ -71,9 +101,9 @@ def hll_accumulate(regs: jax.Array, rows: jax.Array, buckets: jax.Array,
             pl.BlockSpec((edge_block,), lambda i: (i,),
                          memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((v, r), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((v, r), jnp.uint8),
+        out_specs=pl.BlockSpec((v, w), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, w), jnp.uint8),
         input_output_aliases={0: 0},
         interpret=interpret,
         name="hll_accumulate",
-    )(regs, rows.astype(jnp.int32), buckets.astype(jnp.int32), rhos32)
+    )(regs, rows.astype(jnp.int32), keys_i, mask.astype(jnp.int32))

@@ -18,28 +18,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import packing
+
 __all__ = ["hll_estimate_stats"]
 
 DEFAULT_ROW_BLOCK = 256
 
 
-def _kernel(regs_ref, out_ref):
-    x = regs_ref[...].astype(jnp.float32)
-    s = jnp.sum(jnp.exp2(-x), axis=1)
-    z = jnp.sum((x == 0.0).astype(jnp.float32), axis=1)
-    out_ref[:, 0] = s
-    out_ref[:, 1] = z
+def _make_kernel(layout: str):
+    def _kernel(regs_ref, out_ref):
+        regs = regs_ref[...]
+        if layout == "packed":
+            # unpack-in-VMEM (DESIGN.md §11): HBM moved the half-width
+            # panel; the full-width lanes exist only inside this block.
+            regs = packing.unpack_rows(regs)
+        x = regs.astype(jnp.float32)
+        s = jnp.sum(jnp.exp2(-x), axis=1)
+        z = jnp.sum((x == 0.0).astype(jnp.float32), axis=1)
+        out_ref[:, 0] = s
+        out_ref[:, 1] = z
+    return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
-def hll_estimate_stats(regs: jax.Array, *, row_block: int = DEFAULT_ROW_BLOCK,
+@functools.partial(jax.jit, static_argnames=("layout", "row_block",
+                                             "interpret"))
+def hll_estimate_stats(regs: jax.Array, *, layout: str = "byte",
+                       row_block: int = DEFAULT_ROW_BLOCK,
                        interpret: bool = True) -> jax.Array:
-    """regs: uint8[N, r] (N multiple of row_block) -> float32[N, 2] = (s, z)."""
+    """regs: uint8[N, w] (N multiple of row_block) -> float32[N, 2] = (s, z)."""
     n, r = regs.shape
     assert n % row_block == 0, (n, row_block)
     grid = (n // row_block,)
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(layout),
         grid=grid,
         in_specs=[pl.BlockSpec((row_block, r), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((row_block, 2), lambda i: (i, 0)),

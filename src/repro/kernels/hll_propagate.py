@@ -21,33 +21,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import packing
+
 __all__ = ["hll_propagate"]
 
 DEFAULT_EDGE_BLOCK = 512
 
 
-def _kernel(src_regs_ref, src_ref, dst_ref, init_ref, out_ref):
-    # init_ref is the aliased initializer of out_ref (same buffer); unused.
-    del init_ref
-    def body(e, _):
-        s = src_ref[e]
-        d = dst_ref[e]
-        v_src = pl.load(src_regs_ref, (pl.dslice(s, 1), slice(None)))
-        v_dst = pl.load(out_ref, (pl.dslice(d, 1), slice(None)))
-        pl.store(out_ref, (pl.dslice(d, 1), slice(None)),
-                 jnp.maximum(v_dst, v_src))
-        return 0
+def _make_kernel(layout: str):
+    merge = packing.max_rows if layout == "packed" else jnp.maximum
 
-    jax.lax.fori_loop(0, src_ref.shape[0], body, 0)
+    def _kernel(src_regs_ref, src_ref, dst_ref, init_ref, out_ref):
+        # init_ref is the aliased initializer of out_ref (same buffer);
+        # unused. Packed panels merge nibble-wise (packing.max_rows): a
+        # byte-wise max would pick one whole byte and lose the larger of
+        # the two 4-bit lanes held by the other operand.
+        del init_ref
+        def body(e, _):
+            s = src_ref[e]
+            d = dst_ref[e]
+            v_src = pl.load(src_regs_ref, (pl.dslice(s, 1), slice(None)))
+            v_dst = pl.load(out_ref, (pl.dslice(d, 1), slice(None)))
+            pl.store(out_ref, (pl.dslice(d, 1), slice(None)),
+                     merge(v_dst, v_src))
+            return 0
+
+        jax.lax.fori_loop(0, src_ref.shape[0], body, 0)
+    return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("edge_block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("layout", "edge_block",
+                                             "interpret"))
 def hll_propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
-                  *, edge_block: int = DEFAULT_EDGE_BLOCK,
+                  *, layout: str = "byte",
+                  edge_block: int = DEFAULT_EDGE_BLOCK,
                   interpret: bool = True) -> jax.Array:
-    """regs: uint8[V, r]; src/dst: int32[E] (E multiple of edge_block).
+    """regs: uint8[V, w]; src/dst: int32[E] (E multiple of edge_block).
 
-    Returns D^t = D^{t-1} merged with gathered neighbor rows.
+    Returns D^t = D^{t-1} merged with gathered neighbor rows (same
+    layout as the input panel).
     """
     v, r = regs.shape
     e = src.shape[0]
@@ -56,7 +68,7 @@ def hll_propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
     # Second copy of regs feeds the aliased output (the line-23 copy);
     # XLA materializes the copy once, then the kernel RMWs it in place.
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(layout),
         grid=grid,
         in_specs=[
             pl.BlockSpec((v, r), lambda i: (0, 0)),          # frozen D^{t-1}

@@ -25,12 +25,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import packing
+
 __all__ = ["intersection_stats"]
 
 DEFAULT_PAIR_BLOCK = 64
 
 
-def _make_kernel(q: int):
+def _make_kernel(q: int, layout: str):
     def _kernel(regs_ref, pa_ref, pb_ref, stats_ref, sz_ref, a_ref, b_ref):
         def gather(e, _):
             ra = pl.load(regs_ref, (pl.dslice(pa_ref[e], 1), slice(None)))
@@ -40,8 +42,15 @@ def _make_kernel(q: int):
             return 0
 
         jax.lax.fori_loop(0, pa_ref.shape[0], gather, 0)
-        ai = a_ref[...].astype(jnp.int32)
-        bi = b_ref[...].astype(jnp.int32)
+        a = a_ref[...]
+        b = b_ref[...]
+        if layout == "packed":
+            # The gather moved half-width packed rows; the histogram and
+            # (s, z) math needs register values, so unpack in VMEM (§11).
+            a = packing.unpack_rows(a)
+            b = packing.unpack_rows(b)
+        ai = a.astype(jnp.int32)
+        bi = b.astype(jnp.int32)
         lt = (ai < bi).astype(jnp.float32)
         gt = (ai > bi).astype(jnp.float32)
         eq = (ai == bi).astype(jnp.float32)
@@ -62,11 +71,12 @@ def _make_kernel(q: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("q", "pair_block", "interpret"))
+                   static_argnames=("q", "layout", "pair_block", "interpret"))
 def intersection_stats(regs: jax.Array, pa: jax.Array, pb: jax.Array, q: int,
-                       *, pair_block: int = DEFAULT_PAIR_BLOCK,
+                       *, layout: str = "byte",
+                       pair_block: int = DEFAULT_PAIR_BLOCK,
                        interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """regs: uint8[V, r]; pa/pb: int32[B] (B a multiple of pair_block) ->
+    """regs: uint8[V, w]; pa/pb: int32[B] (B a multiple of pair_block) ->
     (float32[B, 5, q+2] Eq. 19 stats, float32[B, 3, 2] (s, z) panels)."""
     v, r = regs.shape
     b = pa.shape[0]
@@ -74,7 +84,7 @@ def intersection_stats(regs: jax.Array, pa: jax.Array, pb: jax.Array, q: int,
     assert b % pair_block == 0, (b, pair_block)
     grid = (b // pair_block,)
     return pl.pallas_call(
-        _make_kernel(q),
+        _make_kernel(q, layout),
         grid=grid,
         in_specs=[
             pl.BlockSpec((v, r), lambda i: (0, 0)),  # panel pinned in VMEM

@@ -28,8 +28,10 @@ from dataclasses import dataclass
 
 import jax
 
-__all__ = ["OPS", "register", "lookup", "impls", "resolve", "KernelSet",
-           "interpret_mode"]
+from repro.kernels.packing import LAYOUTS, validate_layout
+
+__all__ = ["OPS", "LAYOUTS", "register", "lookup", "impls", "resolve",
+           "KernelSet", "interpret_mode"]
 
 #: op names a complete kernel implementation provides (the §4 hot paths,
 #: including the §10 fused query-estimation ops).
@@ -39,7 +41,7 @@ OPS = ("accumulate", "propagate", "estimate", "ertl_stats",
 #: ops whose plans hand every impl a padding mask (bucketed inputs); an
 #: impl that cannot accept one would silently merge padding, so resolve()
 #: rejects it up front.
-MASKED_OPS = ("propagate", "union_estimate")
+MASKED_OPS = ("accumulate", "propagate", "union_estimate")
 
 _REGISTRY: dict[tuple[str, str], object] = {}
 _BOOTSTRAPPED = False
@@ -111,20 +113,30 @@ class KernelSet:
       estimate_fallback: ``None`` when the fused estimate kernel serves
         ``estimator``; otherwise the human-readable reason row estimation
         routes through the jnp reference instead (explicit, not silent).
+      layout: register-panel layout this set operates on ("byte" |
+        "packed", DESIGN.md §11) — threaded into every op call so a
+        packed engine never hands a half-width panel to byte-layout code.
+
+    Block-size arguments default to ``None``, which resolves through the
+    autotune cache (``kernels.autotune``): the per-``(device_kind, p,
+    op)`` winner off-TPU falls back to a deterministic table, so tests
+    and CI never sweep.
     """
 
     impl: str
     estimator: str = "flajolet"
     estimate_fallback: str | None = None
+    layout: str = "byte"
 
-    def accumulate(self, regs, rows, keys, cfg, mask=None, edge_block=512):
+    def accumulate(self, regs, rows, keys, cfg, mask=None, edge_block=None):
         """Algorithm 1 INSERT over an edge block (see ``ops.accumulate``)."""
         from repro.kernels import ops
         return ops.accumulate(regs, rows, keys, cfg, mask=mask,
-                              impl=self.impl, edge_block=edge_block)
+                              impl=self.impl, edge_block=edge_block,
+                              layout=self.layout)
 
     def accumulate_donated(self, regs, rows, keys, mask, *, cfg,
-                           edge_block=512):
+                           edge_block=None):
         """Donating accumulate — the ingestion hot path entry.
 
         The register panel is donated through the jit boundary (see
@@ -133,21 +145,22 @@ class KernelSet:
         """
         from repro.kernels import ops
         return ops.accumulate_donated(regs, rows, keys, mask, cfg=cfg,
-                                      impl=self.impl, edge_block=edge_block)
+                                      impl=self.impl, edge_block=edge_block,
+                                      layout=self.layout)
 
-    def propagate(self, regs, src, dst, mask=None, edge_block=512):
+    def propagate(self, regs, src, dst, mask=None, edge_block=None):
         """One Algorithm 2 merge pass (see ``ops.propagate``)."""
         from repro.kernels import ops
         return ops.propagate(regs, src, dst, mask=mask, impl=self.impl,
-                             edge_block=edge_block)
+                             edge_block=edge_block, layout=self.layout)
 
-    def ertl_stats(self, a, b, cfg, pair_block=128):
+    def ertl_stats(self, a, b, cfg, pair_block=None):
         """Eq. (19) pair statistics (see ``ops.ertl_stats``)."""
         from repro.kernels import ops
         return ops.ertl_stats(a, b, cfg, impl=self.impl,
-                              pair_block=pair_block)
+                              pair_block=pair_block, layout=self.layout)
 
-    def union_estimate(self, regs, ids, mask, cfg, set_block=8):
+    def union_estimate(self, regs, ids, mask, cfg, set_block=None):
         """Fused batched union estimates (see ``ops.union_estimate``).
 
         Estimator-agnostic: the kernel reduces merged rows to (s, z) and
@@ -156,9 +169,9 @@ class KernelSet:
         """
         from repro.kernels import ops
         return ops.union_estimate(regs, ids, mask, cfg, impl=self.impl,
-                                  set_block=set_block)
+                                  set_block=set_block, layout=self.layout)
 
-    def intersection_stats(self, regs, pairs, cfg, pair_block=64):
+    def intersection_stats(self, regs, pairs, cfg, pair_block=None):
         """Fused per-pair T̃(xy) statistics (see ``ops.intersection_stats``).
 
         Returns ``(stats float32[B, 5, q+2], sz float32[B, 3, 2])`` for
@@ -166,7 +179,8 @@ class KernelSet:
         """
         from repro.kernels import ops
         return ops.intersection_stats(regs, pairs, cfg, impl=self.impl,
-                                      pair_block=pair_block)
+                                      pair_block=pair_block,
+                                      layout=self.layout)
 
     def estimate_rows(self, regs, cfg):
         """Per-row cardinality estimates honoring ``cfg.estimator``.
@@ -175,16 +189,20 @@ class KernelSet:
         estimator; otherwise takes the fallback recorded at resolve time
         (``estimate_fallback`` says why) through the jnp reference. The
         decision was made once, at :func:`resolve` — this method never
-        silently picks a path the engine did not sign up for.
+        silently picks a path the engine did not sign up for. The jnp
+        reference is byte-layout code, so a packed panel unpacks first —
+        handing it half-width rows would estimate garbage registers.
         """
         from repro.core import hll
-        from repro.kernels import ops
+        from repro.kernels import ops, packing
         if self.estimate_fallback is not None:
+            if self.layout == "packed":
+                regs = packing.unpack_rows(regs)
             return hll.estimate(regs, cfg)
-        return ops.estimate(regs, cfg, impl=self.impl)
+        return ops.estimate(regs, cfg, impl=self.impl, layout=self.layout)
 
 
-def resolve(impl: str, cfg=None) -> KernelSet:
+def resolve(impl: str, cfg=None, layout: str = "byte") -> KernelSet:
     """Capability-check ``impl`` against every op and bundle a KernelSet.
 
     Raises ``ValueError`` (naming the registered impls) if ``impl`` does
@@ -192,9 +210,13 @@ def resolve(impl: str, cfg=None) -> KernelSet:
     so an unknown or partial impl fails before any accumulation work.
     ``cfg`` (an ``HLLConfig``) determines estimator capability: the fused
     estimate kernel implements only the Flajolet combination, so other
-    estimators record an explicit fallback reason.
+    estimators record an explicit fallback reason. ``layout`` selects the
+    register-panel representation ("byte" | "packed"); every registered
+    op must accept a ``layout`` keyword so a packed engine cannot reach
+    an impl that would misread half-width panels.
     """
     _ensure_builtins()
+    validate_layout(layout)
     missing = [op for op in OPS if (op, impl) not in _REGISTRY]
     if missing:
         known = sorted({i for (_, i) in _REGISTRY})
@@ -204,16 +226,26 @@ def resolve(impl: str, cfg=None) -> KernelSet:
     # capability: the shape-bucketed plans (DESIGN.md §3c, §10) hand every
     # impl of a MASKED_OPS op a padding mask — an impl that cannot accept
     # one would silently merge padding edges/lanes, so it fails here.
-    for op in MASKED_OPS:
+    # Likewise every op receives the panel layout; an impl without the
+    # keyword would treat packed bytes as byte-layout registers.
+    for op in OPS:
         sig = inspect.signature(_REGISTRY[(op, impl)])
-        accepts_mask = ("mask" in sig.parameters
-                        or any(p.kind is inspect.Parameter.VAR_POSITIONAL
-                               for p in sig.parameters.values()))
-        if not accepts_mask:
+        has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                         for p in sig.parameters.values())
+        if op in MASKED_OPS:
+            accepts_mask = ("mask" in sig.parameters
+                            or any(p.kind is inspect.Parameter.VAR_POSITIONAL
+                                   for p in sig.parameters.values()))
+            if not accepts_mask:
+                raise ValueError(
+                    f"{op} impl {impl!r} does not accept a 'mask' argument; "
+                    f"bucketed {op} plans pad their inputs and require "
+                    f"masked-out slots (signature: {sig})")
+        if "layout" not in sig.parameters and not has_var_kw:
             raise ValueError(
-                f"{op} impl {impl!r} does not accept a 'mask' argument; "
-                f"bucketed {op} plans pad their inputs and require "
-                f"masked-out slots (signature: {sig})")
+                f"{op} impl {impl!r} does not accept a 'layout' argument; "
+                f"engines thread the register-panel layout through every "
+                f"op (DESIGN.md §11; signature: {sig})")
     estimator = getattr(cfg, "estimator", "flajolet") if cfg else "flajolet"
     fallback = None
     if estimator != "flajolet":
@@ -222,4 +254,4 @@ def resolve(impl: str, cfg=None) -> KernelSet:
             f"combination; estimator {estimator!r} uses the jnp reference "
             f"(repro.core.hll.estimate)")
     return KernelSet(impl=impl, estimator=estimator,
-                     estimate_fallback=fallback)
+                     estimate_fallback=fallback, layout=layout)

@@ -27,37 +27,50 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import packing
+
 __all__ = ["union_estimate_stats"]
 
 DEFAULT_SET_BLOCK = 8
 
 
-def _kernel(regs_ref, ids_ref, mask_ref, out_ref, acc_ref):
-    bb, lanes = ids_ref.shape
-    acc_ref[...] = jnp.zeros_like(acc_ref)
+def _make_kernel(layout: str):
+    # Packed scratch merges nibble-wise; masking by `row * keep` stays
+    # valid because the all-zero byte is the packed empty row too.
+    merge = packing.max_rows if layout == "packed" else jnp.maximum
 
-    def member(e, _):
-        b = e // lanes
-        li = e % lanes
-        keep = mask_ref[b, li].astype(jnp.uint8)
-        row = pl.load(regs_ref, (pl.dslice(ids_ref[b, li], 1), slice(None)))
-        cur = pl.load(acc_ref, (pl.dslice(b, 1), slice(None)))
-        pl.store(acc_ref, (pl.dslice(b, 1), slice(None)),
-                 jnp.maximum(cur, row * keep))
-        return 0
+    def _kernel(regs_ref, ids_ref, mask_ref, out_ref, acc_ref):
+        bb, lanes = ids_ref.shape
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    jax.lax.fori_loop(0, bb * lanes, member, 0)
-    x = acc_ref[...].astype(jnp.float32)
-    out_ref[:, 0] = jnp.sum(jnp.exp2(-x), axis=1)
-    out_ref[:, 1] = jnp.sum((x == 0.0).astype(jnp.float32), axis=1)
+        def member(e, _):
+            b = e // lanes
+            li = e % lanes
+            keep = mask_ref[b, li].astype(jnp.uint8)
+            row = pl.load(regs_ref,
+                          (pl.dslice(ids_ref[b, li], 1), slice(None)))
+            cur = pl.load(acc_ref, (pl.dslice(b, 1), slice(None)))
+            pl.store(acc_ref, (pl.dslice(b, 1), slice(None)),
+                     merge(cur, row * keep))
+            return 0
+
+        jax.lax.fori_loop(0, bb * lanes, member, 0)
+        acc = acc_ref[...]
+        if layout == "packed":
+            acc = packing.unpack_rows(acc)  # unpack-in-VMEM (§11)
+        x = acc.astype(jnp.float32)
+        out_ref[:, 0] = jnp.sum(jnp.exp2(-x), axis=1)
+        out_ref[:, 1] = jnp.sum((x == 0.0).astype(jnp.float32), axis=1)
+    return _kernel
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("set_block", "interpret"))
+                   static_argnames=("layout", "set_block", "interpret"))
 def union_estimate_stats(regs: jax.Array, ids: jax.Array, mask: jax.Array,
-                         *, set_block: int = DEFAULT_SET_BLOCK,
+                         *, layout: str = "byte",
+                         set_block: int = DEFAULT_SET_BLOCK,
                          interpret: bool = True) -> jax.Array:
-    """regs: uint8[V, r]; ids: int32[B, L]; mask: bool[B, L] (B a multiple
+    """regs: uint8[V, w]; ids: int32[B, L]; mask: bool[B, L] (B a multiple
     of set_block) -> float32[B, 2] = (s, z) of each masked union row."""
     v, r = regs.shape
     b, lanes = ids.shape
@@ -65,7 +78,7 @@ def union_estimate_stats(regs: jax.Array, ids: jax.Array, mask: jax.Array,
     assert b % set_block == 0, (b, set_block)
     grid = (b // set_block,)
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(layout),
         grid=grid,
         in_specs=[
             pl.BlockSpec((v, r), lambda i: (0, 0)),  # panel pinned in VMEM

@@ -1,26 +1,31 @@
-"""Session configuration: kernel-impl selection for the CI matrix.
+"""Session configuration: kernel-impl / register-layout CI matrix.
 
-The CI matrix runs tier-1 twice — once with the default jnp ``ref``
-oracles and once with ``REPRO_IMPL=pallas``, which flips
+The CI matrix runs tier-1 per kernel implementation — the default jnp
+``ref`` oracles and ``REPRO_IMPL=pallas``, which flips
 ``repro.engine.default_impl()`` so every engine built without an explicit
-``impl=`` exercises the Pallas kernel bodies (interpret mode off-TPU) on
-every push. This conftest threads the flag through pytest: the selected
-impl is validated against the kernel registry up front (a typo fails the
-session immediately, naming the registered impls) and reported in the
-test header so a log always says which leg it is.
+``impl=`` exercises the Pallas kernel bodies (interpret mode off-TPU) —
+and additionally with ``REPRO_LAYOUT=packed``, which flips
+``repro.engine.default_layout()`` so the same engines run on 4-bit packed
+register panels (DESIGN.md §11). This conftest threads both flags through
+pytest: the selected (impl, layout) cell is validated against the kernel
+registry up front (a typo fails the session immediately, naming the
+registered impls/layouts) and reported in the test header so a log always
+says which leg it is.
 """
 import os
 
 from repro.kernels import registry
 
 REPRO_IMPL = os.environ.get("REPRO_IMPL", "ref")
+REPRO_LAYOUT = os.environ.get("REPRO_LAYOUT", "byte")
 
 
 def pytest_configure(config):
-    """Fail fast (naming registered impls) if REPRO_IMPL is unknown."""
-    registry.resolve(REPRO_IMPL)
+    """Fail fast (naming the registered cells) on unknown impl/layout."""
+    registry.resolve(REPRO_IMPL, layout=REPRO_LAYOUT)
 
 
 def pytest_report_header(config):
-    """Show which kernel impl this session's default engines use."""
-    return f"repro kernel impl: {REPRO_IMPL} (set REPRO_IMPL=ref|pallas)"
+    """Show which kernel impl/layout this session's default engines use."""
+    return (f"repro kernel impl: {REPRO_IMPL} (set REPRO_IMPL=ref|pallas); "
+            f"register layout: {REPRO_LAYOUT} (set REPRO_LAYOUT=byte|packed)")

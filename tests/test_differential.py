@@ -1,0 +1,217 @@
+"""Differential fuzz suite over every ``(op, impl, layout)`` kernel cell.
+
+The layout axis doubled the kernel matrix (DESIGN.md §11); this suite
+pins the whole grid to one oracle — the byte-layout jnp reference — with
+randomized inputs at fixed seeds:
+
+* panel-producing ops (accumulate, propagate): every cell must equal the
+  *packed image* of the byte oracle **bit-for-bit**, saturation included
+  (clamping commutes with merge, so no tolerance is owed);
+* estimate-producing ops (estimate, union, intersection, ertl): ref-byte
+  vs ref-packed must be bit-identical on saturation-free panels (the
+  suite asserts the precondition explicitly), pallas cells allclose
+  (float reduction order differs in the blocked kernels);
+* the plan layer: switching an engine between layouts never retraces a
+  compiled program within a shape bucket — each layout compiles once
+  (layout is a PlanKey coordinate) and flip-flopping hits the cache.
+
+Plus the capability-gap regression: a packed panel routed through the
+beta-estimator fallback (``KernelSet.estimate_rows``) must unpack before
+the byte-layout jnp reference sees it.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import hll
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+from repro.kernels import ops, packing, registry
+
+CELLS = [(impl, layout) for impl in ("ref", "pallas")
+         for layout in ("byte", "packed")]
+
+
+def _ids(cells):
+    return [f"{i}-{l}" for i, l in cells]
+
+
+def _edge_inputs(p, v, e, seed):
+    rng = np.random.default_rng(seed)
+    cfg = HLLConfig(p=p)
+    regs = jnp.asarray(rng.integers(0, packing.SATURATION + 1,
+                                    size=(v, cfg.r)), jnp.uint8)
+    rows = jnp.asarray(rng.integers(0, v, size=e), jnp.int32)
+    keys = jnp.asarray(rng.integers(0, 2 ** 31, size=e), jnp.uint32)
+    mask = jnp.asarray(rng.random(e) > 0.25)
+    return cfg, regs, rows, keys, mask
+
+
+def _as_layout(regs, layout):
+    return packing.pack_rows(regs) if layout == "packed" else regs
+
+
+def _expect_layout(panel, layout):
+    return np.asarray(packing.pack_rows(panel) if layout == "packed"
+                      else panel)
+
+
+# ------------------------------------------------------- panel-producing ops
+@pytest.mark.parametrize("impl,layout", CELLS, ids=_ids(CELLS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_accumulate_grid_bit_identical(impl, layout, seed):
+    """Every cell == packed image of the byte oracle, rho saturation incl.
+
+    Random 31-bit keys hash rhos far above 15, so this exercises the
+    saturating clamp — bit-identity still holds because clamping commutes
+    with the scatter-max merge.
+    """
+    cfg, regs, rows, keys, mask = _edge_inputs(6, 32, 500, seed)
+    oracle = ops.accumulate(regs, rows, keys, cfg, mask, impl="ref")
+    out = ops.accumulate(_as_layout(regs, layout), rows, keys, cfg, mask,
+                         impl=impl, edge_block=256, layout=layout)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _expect_layout(oracle, layout))
+
+
+@pytest.mark.parametrize("impl,layout", CELLS, ids=_ids(CELLS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_propagate_grid_bit_identical(impl, layout, seed):
+    cfg, regs, src, _, mask = _edge_inputs(6, 32, 400, seed + 10)
+    rng = np.random.default_rng(seed + 99)
+    dst = jnp.asarray(rng.integers(0, 32, size=400), jnp.int32)
+    oracle = ops.propagate(regs, src, dst, mask, impl="ref")
+    out = ops.propagate(_as_layout(regs, layout), src, dst, mask,
+                        impl=impl, edge_block=256, layout=layout)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _expect_layout(oracle, layout))
+
+
+# ---------------------------------------------------- estimate-producing ops
+def _sat_free_panel(p, n, seed):
+    """A panel with every register <= 15: packed estimates owe exactness."""
+    rng = np.random.default_rng(seed)
+    cfg = HLLConfig(p=p)
+    regs = rng.integers(0, packing.SATURATION + 1, size=(n, cfg.r),
+                        dtype=np.uint8)
+    assert regs.max() <= packing.SATURATION  # the exactness precondition
+    return cfg, jnp.asarray(regs)
+
+
+@pytest.mark.parametrize("impl,layout", CELLS, ids=_ids(CELLS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_estimate_grid(impl, layout, seed):
+    cfg, regs = _sat_free_panel(8, 300, seed)
+    oracle = np.asarray(ops.estimate(regs, cfg, impl="ref"))
+    out = np.asarray(ops.estimate(_as_layout(regs, layout), cfg, impl=impl,
+                                  row_block=128, layout=layout))
+    if impl == "ref":
+        np.testing.assert_array_equal(out, oracle)  # bit-identical
+    else:
+        np.testing.assert_allclose(out, oracle, rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl,layout", CELLS, ids=_ids(CELLS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_union_estimate_grid(impl, layout, seed):
+    cfg, regs = _sat_free_panel(8, 64, seed + 20)
+    rng = np.random.default_rng(seed + 5)
+    ids = jnp.asarray(rng.integers(0, 64, size=(10, 6)), jnp.int32)
+    mask = jnp.asarray(rng.random((10, 6)) > 0.3)
+    oracle = np.asarray(ops.union_estimate(regs, ids, mask, cfg, impl="ref"))
+    out = np.asarray(ops.union_estimate(
+        _as_layout(regs, layout), ids, mask, cfg, impl=impl, set_block=4,
+        layout=layout))
+    if impl == "ref":
+        np.testing.assert_array_equal(out, oracle)
+    else:
+        np.testing.assert_allclose(out, oracle, rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl,layout", CELLS, ids=_ids(CELLS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_intersection_stats_grid(impl, layout, seed):
+    cfg, regs = _sat_free_panel(6, 48, seed + 40)
+    rng = np.random.default_rng(seed + 6)
+    pairs = jnp.asarray(rng.integers(0, 48, size=(20, 2)), jnp.int32)
+    o_stats, o_sz = ops.intersection_stats(regs, pairs, cfg, impl="ref")
+    stats, sz = ops.intersection_stats(
+        _as_layout(regs, layout), pairs, cfg, impl=impl, pair_block=16,
+        layout=layout)
+    if impl == "ref":
+        np.testing.assert_array_equal(np.asarray(stats), np.asarray(o_stats))
+        np.testing.assert_array_equal(np.asarray(sz), np.asarray(o_sz))
+    else:
+        np.testing.assert_allclose(np.asarray(stats), np.asarray(o_stats),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(sz), np.asarray(o_sz),
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl,layout", CELLS, ids=_ids(CELLS))
+def test_ertl_stats_grid(impl, layout):
+    cfg, regs = _sat_free_panel(6, 40, 77)
+    a, b = regs[:20], regs[20:]
+    oracle = np.asarray(ops.ertl_stats(a, b, cfg, impl="ref"))
+    out = np.asarray(ops.ertl_stats(
+        _as_layout(a, layout), _as_layout(b, layout), cfg, impl=impl,
+        pair_block=8, layout=layout))
+    if impl == "ref":
+        np.testing.assert_array_equal(out, oracle)
+    else:
+        np.testing.assert_allclose(out, oracle, rtol=1e-5)
+
+
+# ------------------------------------------------------------- plan layer
+def test_layout_switch_never_retraces_within_bucket():
+    """Each layout compiles once per bucket; flip-flopping hits the cache."""
+    rng = np.random.default_rng(3)
+    n = 128
+    edges = rng.integers(0, n, size=(400, 2), dtype=np.int32)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    cfg = HLLConfig(p=6)
+    cache = plans.PlanCache(maxsize=32)
+    eb = engine.build(edges, n, cfg, backend="local", layout="byte")
+    ep = engine.build(edges, n, cfg, backend="local", layout="packed")
+    eb._plan_cache = ep._plan_cache = cache
+    plans.reset_trace_counts()
+    eb.intersection_size(edges[:9])
+    ep.intersection_size(edges[:9])     # distinct PlanKey.layout: 2nd trace
+    assert plans.trace_counts()["intersection"] == 2
+    for eng in (eb, ep, eb, ep):        # same bucket of 16, both layouts
+        eng.intersection_size(edges[:12])
+        eng.intersection_size(edges[:16])
+    assert plans.trace_counts()["intersection"] == 2  # no retrace
+    misses = cache.stats()["misses"]
+    eb.intersection_size(edges[:10])
+    ep.intersection_size(edges[:10])
+    assert cache.stats()["misses"] == misses  # pure cache hits
+
+
+# --------------------------------------------- estimate_fallback capability
+def test_estimate_fallback_unpacks_packed_panel():
+    """Beta-estimator fallback on a packed engine must unpack first.
+
+    The fallback path runs the byte-layout jnp reference
+    (``hll.estimate``); handing it a half-width packed panel would
+    estimate garbage registers. Regression for the capability gap closed
+    in ``KernelSet.estimate_rows``.
+    """
+    cfg = HLLConfig(p=6, estimator="beta")
+    ks_packed = registry.resolve("ref", cfg, layout="packed")
+    assert ks_packed.estimate_fallback is not None  # beta -> jnp reference
+    cfg_f, regs = _sat_free_panel(6, 50, 13)
+    del cfg_f
+    est_byte = np.asarray(hll.estimate(regs, cfg))
+    est_packed = np.asarray(
+        ks_packed.estimate_rows(packing.pack_rows(regs), cfg))
+    np.testing.assert_array_equal(est_packed, est_byte)
+    # engine-level: a packed beta engine estimates like a byte one
+    rng = np.random.default_rng(21)
+    n = 64
+    edges = rng.integers(0, n, size=(150, 2), dtype=np.int32)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    db = engine.build(edges, n, cfg, layout="byte").degrees()
+    dp = engine.build(edges, n, cfg, layout="packed").degrees()
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(dp))

@@ -22,8 +22,31 @@ from repro import engine
 from repro.core import degreesketch as dsk
 from repro.core.hll import HLLConfig
 from repro.graph import exact, generators as gen
+from repro.kernels import packing
 
 CFG = HLLConfig(p=8)
+
+
+def _byte_regs(eng):
+    """The engine's panel as byte rows — input for the byte-only core.
+
+    Under ``REPRO_LAYOUT=packed`` engines hold half-width packed panels;
+    the ``repro.core`` oracles speak byte layout only. Unpacking yields
+    the saturated byte image the engine actually serves estimates from,
+    so oracle comparisons stay bit-exact in either leg.
+    """
+    regs = eng.regs
+    if eng.layout == "packed":
+        regs = packing.unpack_rows(regs)
+    return regs
+
+
+def _in_layout(byte_panel, layout):
+    """A byte-layout oracle panel, converted to the engine's layout."""
+    import jax.numpy as jnp
+    if layout == "packed":
+        return np.asarray(packing.pack_rows(jnp.asarray(byte_panel)))
+    return np.asarray(byte_panel)
 
 
 @pytest.fixture(scope="module")
@@ -47,10 +70,10 @@ def sharded_eng(graph):
 def test_accumulate_matches_reference(graph, local_eng, sharded_eng):
     edges, n = graph
     ref = dsk.accumulate(edges, n, CFG)
-    np.testing.assert_array_equal(np.asarray(local_eng.regs),
-                                  np.asarray(ref.regs))
+    want = _in_layout(np.asarray(ref.regs), local_eng.layout)
+    np.testing.assert_array_equal(np.asarray(local_eng.regs), want)
     np.testing.assert_array_equal(np.asarray(sharded_eng.regs)[:n],
-                                  np.asarray(ref.regs)[:n])
+                                  want[:n])
 
 
 def test_backends_agree_degrees(graph, local_eng, sharded_eng):
@@ -104,7 +127,7 @@ def test_union_matches_reference_and_truth(graph, local_eng):
     adj = exact.adjacency_lists(n, edges)
     xs = np.argsort([-len(a) for a in adj])[:3]
     est = local_eng.union_size(xs)
-    sketch = dsk.DegreeSketch(regs=local_eng.regs, n=n, cfg=CFG)
+    sketch = dsk.DegreeSketch(regs=_byte_regs(local_eng), n=n, cfg=CFG)
     assert est == pytest.approx(float(sketch.union_size(jnp.asarray(xs))),
                                 rel=1e-6)
     truth = len(set(np.concatenate([adj[x] for x in xs]).tolist()))
@@ -134,7 +157,8 @@ def test_intersection_matches_reference(graph, local_eng):
     """Engine batched MLE == DegreeSketch.intersection_size per pair."""
     edges, _ = graph
     pairs = edges[:5]
-    sketch = dsk.DegreeSketch(regs=local_eng.regs, n=local_eng.n, cfg=CFG)
+    sketch = dsk.DegreeSketch(regs=_byte_regs(local_eng), n=local_eng.n,
+                              cfg=CFG)
     batched = local_eng.intersection_size(pairs)
     for (x, y), est in zip(pairs, batched):
         assert est == pytest.approx(float(sketch.intersection_size(x, y)),

@@ -190,7 +190,8 @@ def test_merge_validation(graph):
 def test_merge_with_edge_free_engine_stops_tracking(graph, built):
     """Merging in a bare-register engine drops edge tracking (documented)."""
     edges, n = graph
-    bare = engine.LocalEngine.from_regs(_rows(built["local"]), n, CFG)
+    bare = engine.LocalEngine.from_regs(_rows(built["local"]), n, CFG,
+                                        layout=built["local"].layout)
     eng = engine.open(n, CFG).ingest(edges[:10]).merge(bare)
     assert eng.edges is None
     with pytest.raises(ValueError, match="edge stream"):

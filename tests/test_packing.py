@@ -1,0 +1,160 @@
+"""Property-based round-trip suite for the 4-bit packed register layout.
+
+The packed layout (DESIGN.md §11) must be a *lawful* compression of the
+byte layout: pack→unpack is the identity on the saturated domain,
+clamping commutes with the HLL merge operator (pack-then-max ==
+max-then-pack for ALL register values, not just small ones), and packed
+panels round-trip checkpoints bit-identically on both engine backends.
+Hypothesis drives the panels — all supported p, ragged row counts, and
+full 6-bit register values (rho <= q+1 needs at most 6 bits) so the
+saturating clamp path is exercised, not just the exact one.
+"""
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.kernels import packing
+
+# all supported p values (register count r = 2^p; packed needs even r,
+# i.e. p >= 1 — engine configs use p >= 4)
+PS = (4, 6, 8, 10)
+
+
+def _panel(p, rows, seed, high=64):
+    """uint8[rows, 2^p] panel over the full 6-bit register domain."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, high, size=(rows, 1 << p), dtype=np.uint8)
+
+
+# ------------------------------------------------------------- pure helpers
+def test_row_width():
+    assert packing.row_width(256, "byte") == 256
+    assert packing.row_width(256, "packed") == 128
+    with pytest.raises(ValueError):
+        packing.row_width(255, "packed")  # odd register count
+    with pytest.raises(ValueError):
+        packing.row_width(256, "nibble")  # unknown layout
+
+
+def test_validate_layout():
+    assert packing.validate_layout("byte") == "byte"
+    assert packing.validate_layout("packed") == "packed"
+    with pytest.raises(ValueError):
+        packing.validate_layout("u4")
+
+
+def test_split_half_lane_placement():
+    """Byte j holds register j (low nibble) and j + r/2 (high nibble)."""
+    row = np.arange(8, dtype=np.uint8)[None, :]  # [[0..7]]
+    packed = np.asarray(packing.pack_rows(jnp.asarray(row)))
+    expect = np.array([[0 | (4 << 4), 1 | (5 << 4),
+                        2 | (6 << 4), 3 | (7 << 4)]], np.uint8)
+    np.testing.assert_array_equal(packed, expect)
+
+
+# --------------------------------------------------- hypothesis round-trips
+@settings(max_examples=40, deadline=None)
+@given(p=st.sampled_from(PS), rows=st.integers(1, 33),
+       seed=st.integers(0, 2 ** 16))
+def test_pack_unpack_is_saturated_identity(p, rows, seed):
+    """unpack(pack(x)) == min(x, 15) element-wise, every p, ragged rows."""
+    x = _panel(p, rows, seed)
+    back = np.asarray(packing.unpack_rows(packing.pack_rows(jnp.asarray(x))))
+    np.testing.assert_array_equal(back, np.minimum(x, packing.SATURATION))
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.sampled_from(PS), rows=st.integers(1, 33),
+       seed=st.integers(0, 2 ** 16))
+def test_pack_unpack_exact_below_saturation(p, rows, seed):
+    """On the <= 15 domain the round-trip is the exact identity."""
+    x = _panel(p, rows, seed, high=packing.SATURATION + 1)
+    back = np.asarray(packing.unpack_rows(packing.pack_rows(jnp.asarray(x))))
+    np.testing.assert_array_equal(back, x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.sampled_from(PS), rows=st.integers(1, 17),
+       seed=st.integers(0, 2 ** 16))
+def test_unpack_pack_identity_on_packed_domain(p, rows, seed):
+    """pack(unpack(y)) == y bit-for-bit for arbitrary packed bytes."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 256, size=(rows, (1 << p) // 2), dtype=np.uint8)
+    back = np.asarray(packing.pack_rows(packing.unpack_rows(jnp.asarray(y))))
+    np.testing.assert_array_equal(back, y)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.sampled_from(PS), rows=st.integers(1, 17),
+       seed=st.integers(0, 2 ** 16))
+def test_pack_then_max_equals_max_then_pack(p, rows, seed):
+    """Saturation commutes with merge — for ALL values, incl. > 15."""
+    a = _panel(p, rows, seed)
+    b = _panel(p, rows, seed + 1)
+    packed_merge = np.asarray(packing.max_rows(
+        packing.pack_rows(jnp.asarray(a)), packing.pack_rows(jnp.asarray(b))))
+    merge_packed = np.asarray(packing.pack_rows(
+        jnp.maximum(jnp.asarray(a), jnp.asarray(b))))
+    np.testing.assert_array_equal(packed_merge, merge_packed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.sampled_from(PS), rows=st.integers(2, 17),
+       seed=st.integers(0, 2 ** 16))
+def test_scatter_max_matches_unpacked_oracle(p, rows, seed):
+    """Nibble-plane scatter-max == unpack / scatter / repack oracle."""
+    rng = np.random.default_rng(seed)
+    regs = _panel(p, rows, seed, high=packing.SATURATION + 1)
+    e = 3 * rows
+    dst = rng.integers(0, rows, size=e).astype(np.int32)
+    gathered = _panel(p, e, seed + 7, high=packing.SATURATION + 1)
+    got = np.asarray(packing.scatter_max_rows(
+        packing.pack_rows(jnp.asarray(regs)), jnp.asarray(dst),
+        packing.pack_rows(jnp.asarray(gathered)), layout="packed"))
+    oracle = jnp.asarray(regs).at[jnp.asarray(dst)].max(jnp.asarray(gathered))
+    np.testing.assert_array_equal(
+        got, np.asarray(packing.pack_rows(oracle)))
+
+
+def test_to_layout_conversions():
+    x = _panel(8, 5, 3, high=packing.SATURATION + 1)
+    xp = packing.pack_rows(jnp.asarray(x))
+    assert packing.to_layout(jnp.asarray(x), "byte", "byte") is not None
+    np.testing.assert_array_equal(
+        np.asarray(packing.to_layout(jnp.asarray(x), "byte", "packed")),
+        np.asarray(xp))
+    np.testing.assert_array_equal(
+        np.asarray(packing.to_layout(xp, "packed", "byte")), x)
+
+
+# -------------------------------------------------- checkpoint round-trips
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+def test_packed_panel_ckpt_roundtrip(backend):
+    """save/load of a packed engine restores the panel bit-identically."""
+    rng = np.random.default_rng(11)
+    n = 64
+    edges = rng.integers(0, n, size=(200, 2), dtype=np.int32)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    cfg = HLLConfig(p=6)
+    kw = {"shards": 1} if backend == "sharded" else {}
+    eng = engine.build(edges, n, cfg, backend=backend, layout="packed", **kw)
+    before = np.asarray(eng._regs)
+    assert before.shape[1] == cfg.r // 2  # really packed on device
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        eng.save(path)
+        back = engine.load(path, backend=backend, **kw)
+        assert back.layout == "packed"
+        np.testing.assert_array_equal(np.asarray(back._regs), before)
+        # cross-layout restore unpacks exactly (packed -> byte is lossless)
+        as_byte = engine.load(path, backend=backend, layout="byte", **kw)
+        assert as_byte.layout == "byte"
+        np.testing.assert_array_equal(
+            np.asarray(packing.pack_rows(np.asarray(as_byte._regs))), before)

@@ -271,7 +271,11 @@ def test_resolve_records_beta_estimator_fallback(graph):
     # the fallback path serves degrees and matches the jnp reference
     eng = engine.build(edges[:200], n, cfg, backend="local")
     assert eng.kernels.estimate_fallback is not None
-    expect = np.asarray(hll.estimate(eng.regs, cfg))[:n]
+    rows = eng.regs
+    if eng.layout == "packed":     # the jnp reference speaks byte layout
+        from repro.kernels import packing
+        rows = packing.unpack_rows(rows)
+    expect = np.asarray(hll.estimate(rows, cfg))[:n]
     np.testing.assert_allclose(eng.degrees(), expect, rtol=1e-4)
 
 

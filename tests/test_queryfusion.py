@@ -21,8 +21,22 @@ from repro.core import hll, intersection
 from repro.core.hll import HLLConfig
 from repro.engine import plans
 from repro.graph import generators as gen
+from repro.kernels import packing
 
 CFG = HLLConfig(p=8)
+
+
+def _byte_regs(eng):
+    """The engine's panel as byte rows — oracle input for the two-pass
+    reference computations below, which speak byte layout only. Under
+    ``REPRO_LAYOUT=packed`` this is the saturated byte image the engine
+    serves estimates from, so ref comparisons stay bit-exact."""
+    regs = eng.regs
+    if eng.layout == "packed":
+        regs = packing.unpack_rows(regs)
+    return regs
+
+
 BACKENDS = ["local", "sharded"]
 IMPLS = ["ref", "pallas"]
 
@@ -67,7 +81,8 @@ def test_union_fused_matches_two_pass(graph, impl, sizes):
     rng = np.random.default_rng(sum(sizes))
     sets = [rng.integers(0, n, size=s) for s in sizes]
     got = eng.union_size(sets)
-    want = _two_pass_union(eng.regs, [s.astype(np.int64) for s in sets], CFG)
+    want = _two_pass_union(_byte_regs(eng),
+                           [s.astype(np.int64) for s in sets], CFG)
     if impl == "ref":
         np.testing.assert_array_equal(got, want)
     else:
@@ -82,7 +97,7 @@ def test_intersection_fused_matches_two_pass(graph, impl, method, nb):
     eng = _build(edges, n, "local", impl)
     arr = edges[:nb].astype(np.int64)
     got = eng.intersection_size(arr, method=method)
-    want = _two_pass_intersection(eng.regs, arr, CFG, method, 50)
+    want = _two_pass_intersection(_byte_regs(eng), arr, CFG, method, 50)
     if impl == "ref":
         np.testing.assert_array_equal(got, want)
     else:
@@ -96,11 +111,11 @@ def test_fused_plans_agree_across_backends(graph, backend):
     eng = _build(edges, n, backend)
     sets = [np.arange(4), np.arange(11)]
     np.testing.assert_array_equal(
-        eng.union_size(sets), _two_pass_union(eng.regs, sets, CFG))
+        eng.union_size(sets), _two_pass_union(_byte_regs(eng), sets, CFG))
     arr = edges[:7].astype(np.int64)
     np.testing.assert_array_equal(
         eng.intersection_size(arr),
-        _two_pass_intersection(eng.regs, arr, CFG, "mle", 50))
+        _two_pass_intersection(_byte_regs(eng), arr, CFG, "mle", 50))
 
 
 def test_beta_estimator_rides_fused_union(graph):
@@ -110,7 +125,7 @@ def test_beta_estimator_rides_fused_union(graph):
     eng = engine.build(edges, n, cfg, backend="local")
     sets = [np.arange(6), np.arange(2)]
     ids, mask = plans.pad_sets(sets)
-    rows = jnp.where(mask[:, :, None], eng.regs[ids], jnp.uint8(0))
+    rows = jnp.where(mask[:, :, None], _byte_regs(eng)[ids], jnp.uint8(0))
     want = np.asarray(hll.estimate(jnp.max(rows, axis=1), cfg))[: len(sets)]
     # the beta einsum fuses differently inside the fused program: allclose
     np.testing.assert_allclose(eng.union_size(sets), want, rtol=1e-5)

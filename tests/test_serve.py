@@ -350,7 +350,8 @@ def test_worker_side_error_does_not_poison_batch(graph):
     edges, n = graph
     built = _build(edges, n, "local")
     bare = engine.LocalEngine.from_regs(
-        np.asarray(built.regs)[:n], n, CFG)  # no edges -> no replay queries
+        np.asarray(built.regs)[:n], n, CFG,  # no edges -> no replay queries
+        layout=built.layout)
     with QueryServer(bare) as srv:
         srv.pause()
         tri = srv._submit("triangle", (5, "edge", 30))

@@ -61,6 +61,15 @@ SUITES = [
         "guard": ("bytes_ratio", 0.0),  # analytic metric: no jitter floor
     },
     {
+        "file": "BENCH_shard.json",
+        "key": ("graph", "shards", "zipf_s"),
+        "metric": "traffic_ratio",  # modeled max-owner gather rows
+        # off/on replication: fully deterministic (seeded stream, no
+        # timing), so any drop is a real placement-policy regression
+        "higher_is_better": True,
+        "guard": ("traffic_ratio", 0.0),  # analytic metric: no jitter floor
+    },
+    {
         "file": "BENCH_load.json",
         "key": ("graph", "loop"),
         "metric": "p99_speedup",  # barrier/continuous p99: machine-neutral

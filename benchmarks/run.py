@@ -34,7 +34,8 @@ def main() -> None:
     from benchmarks import (
         bench_density, bench_heavyhitters, bench_intersection,
         bench_kernels, bench_load, bench_neighborhood, bench_queryfusion,
-        bench_scaling, bench_serve, bench_theorem1, roofline_report,
+        bench_scaling, bench_serve, bench_shard, bench_theorem1,
+        roofline_report,
     )
 
     def _out(default_path: str) -> str | None:
@@ -55,6 +56,8 @@ def main() -> None:
             small=small, quick=args.quick, out=_out(bench_load.OUT)),
         "roofline": lambda: roofline_report.run(
             small=small, quick=args.quick, out=_out(roofline_report.OUT)),
+        "shard": lambda: bench_shard.run(
+            small=small, quick=args.quick, out=_out(bench_shard.OUT)),
     }
     suites = {
         **json_suites,

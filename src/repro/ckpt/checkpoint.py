@@ -12,6 +12,11 @@ device_puts them under the CURRENT mesh's shardings, so a checkpoint from a
 device_put. (At 1000+-node scale the same manifest schema holds per-shard
 files with global offsets; the loader composes slices. Documented in
 DESIGN.md §8; the full-array variant keeps this container honest.)
+The sketch engine builds its elastic reshard on exactly this property:
+``engine.load(path, shards=S2)`` re-pads the full register panel to the
+new vertex partition and rebuilds routing lazily — no edge replay, and
+a saved hot-vertex replica set re-gathers from the restored rows
+(DESIGN.md §12).
 
 AsyncCheckpointer overlaps serialization with the next training steps —
 the train loop hands off host copies and continues.

@@ -98,6 +98,23 @@ class DistPlan:
     tri_u: np.ndarray            # int32[S, E_tri]
     tri_v: np.ndarray            # int32[S, E_tri]
     tri_mask: np.ndarray         # bool[S, E_tri]
+    # hot-vertex replica routing (DESIGN.md §12, None when no replicas):
+    # propagate edges whose SOURCE is replicated leave the ring/all_gather
+    # groups above and resolve from the replicated panel instead — a
+    # shard-local scatter pre-pass, no exchange. ``rep_slot`` indexes into
+    # the sorted replica id set; ``rep_gids`` is the padded global id
+    # vector the schedules gather the replica panel with (from the
+    # *current* D^{t-1} panel, so every pass sees fresh rows).
+    rep_ids: np.ndarray | None = None         # int64[K] sorted
+    rep_gids: np.ndarray | None = None        # int32[K_pad]
+    rep_dst_local: np.ndarray | None = None   # int32[S, E_rep]
+    rep_slot: np.ndarray | None = None        # int32[S, E_rep]
+    rep_mask: np.ndarray | None = None        # bool[S, E_rep]
+
+    @property
+    def has_replicas(self) -> bool:
+        """Whether this plan routes any edges through the replica panel."""
+        return self.rep_ids is not None and len(self.rep_ids) > 0
 
 
 def vertex_partition(n: int, num_shards: int,
@@ -137,13 +154,23 @@ def _group_by_owner(owner: np.ndarray, num_groups: int,
 
 
 def build_plan(edges: np.ndarray, n: int, num_shards: int,
-               pad_multiple: int = 8) -> DistPlan:
+               pad_multiple: int = 8,
+               replica_ids: np.ndarray | None = None) -> DistPlan:
     """Route edges to owner shards (Algorithm 1 Send context, host-side).
 
     Every grouping (accumulation, ring, all_gather, triangle) is built by
     the same sort-based scheme (:func:`_group_by_owner`) — O(edges log
     edges) total, shard-count independent; the old per-shard boolean-scan
     loops were O(shards * edges).
+
+    ``replica_ids`` (sorted hot-vertex ids, DESIGN.md §12) reroutes the
+    propagate edges whose *source* is replicated: they leave the
+    ring/all_gather exchange groups and land in shard-local replica
+    groups served from the replicated panel — the plan prefers a local
+    replica over the owning shard. Under Zipfian traffic this shrinks
+    the per-(shard, block) ring capacity, which is dominated by
+    hot-vertex degree. Accumulation and triangle groupings are
+    replica-independent (they scatter hash keys / gather full panels).
     """
     n_pad, v_loc = vertex_partition(n, num_shards, pad_multiple)
     directed = np.concatenate([edges, edges[:, ::-1]], axis=0)
@@ -159,9 +186,35 @@ def build_plan(edges: np.ndarray, n: int, num_shards: int,
     acc_key[s_own, within] = d_sorted[:, 1].astype(np.uint32)
     acc_mask[s_own, within] = True
 
+    # --- replica split: propagate edges whose source is replicated are
+    # served from the replicated panel (shard-local pre-pass); only the
+    # remainder enters the ring / all_gather exchange groups below ---
+    rep_ids = rep_gids = rep_dst = rep_slot = rep_mask = None
+    prop, prop_own = directed, own
+    if replica_ids is not None and len(replica_ids):
+        rep_ids = np.unique(np.asarray(replica_ids, np.int64).ravel())
+        pos = np.minimum(np.searchsorted(rep_ids, prop[:, 1]),
+                         len(rep_ids) - 1)
+        hit = rep_ids[pos] == prop[:, 1]
+        rep_edges = prop[hit]
+        prop, prop_own = prop[~hit], own[~hit]
+        g_order, g_own, g_within, e_rep = _group_by_owner(
+            rep_edges[:, 0] // v_loc, num_shards)
+        g_sorted = rep_edges[g_order]
+        rep_dst = np.zeros((num_shards, e_rep), np.int32)
+        rep_slot = np.zeros((num_shards, e_rep), np.int32)
+        rep_mask = np.zeros((num_shards, e_rep), bool)
+        rep_dst[g_own, g_within] = \
+            g_sorted[:, 0] - g_own.astype(np.int32) * v_loc
+        rep_slot[g_own, g_within] = \
+            np.searchsorted(rep_ids, g_sorted[:, 1]).astype(np.int32)
+        rep_mask[g_own, g_within] = True
+        rep_gids = np.zeros(_round_up(len(rep_ids), 8), np.int32)
+        rep_gids[: len(rep_ids)] = rep_ids
+
     # --- ring blocks: group by (dst shard, src block) ---
-    src_block = directed[:, 1] // v_loc
-    key = own.astype(np.int64) * num_shards + src_block
+    src_block = prop[:, 1] // v_loc
+    key = prop_own.astype(np.int64) * num_shards + src_block
     r_order, key_sorted, r_within, e_ring = _group_by_owner(
         key, num_shards * num_shards)
     ring_dst = np.zeros((num_shards, num_shards, e_ring), np.int32)
@@ -169,20 +222,23 @@ def build_plan(edges: np.ndarray, n: int, num_shards: int,
     ring_mask = np.zeros((num_shards, num_shards, e_ring), bool)
     s_idx = key_sorted // num_shards
     b_idx = key_sorted % num_shards
-    r_sorted = directed[r_order]
+    r_sorted = prop[r_order]
     ring_dst[s_idx, b_idx, r_within] = \
         r_sorted[:, 0] - s_idx.astype(np.int32) * v_loc
     ring_src[s_idx, b_idx, r_within] = \
         r_sorted[:, 1] - b_idx.astype(np.int32) * v_loc
     ring_mask[s_idx, b_idx, r_within] = True
 
-    # --- flat (all_gather) blocks: same grouping as accumulation ---
-    flat_src = np.zeros((num_shards, e_acc), np.int32)
-    flat_dst = np.zeros((num_shards, e_acc), np.int32)
-    flat_mask = np.zeros((num_shards, e_acc), bool)
-    flat_dst[s_own, within] = d_sorted[:, 0] - s_own.astype(np.int32) * v_loc
-    flat_src[s_own, within] = d_sorted[:, 1]
-    flat_mask[s_own, within] = True
+    # --- flat (all_gather) blocks: grouped by owner shard of dst, over
+    # the same replica-stripped propagate edges as the ring ---
+    f_order, f_own, f_within, e_flat = _group_by_owner(prop_own, num_shards)
+    f_sorted = prop[f_order]
+    flat_src = np.zeros((num_shards, e_flat), np.int32)
+    flat_dst = np.zeros((num_shards, e_flat), np.int32)
+    flat_mask = np.zeros((num_shards, e_flat), bool)
+    flat_dst[f_own, f_within] = f_sorted[:, 0] - f_own.astype(np.int32) * v_loc
+    flat_src[f_own, f_within] = f_sorted[:, 1]
+    flat_mask[f_own, f_within] = True
 
     # --- triangle edge partition (undirected, owner of u) ---
     own_u = edges[:, 0] // v_loc
@@ -200,7 +256,9 @@ def build_plan(edges: np.ndarray, n: int, num_shards: int,
         acc_dst_local=acc_dst, acc_key=acc_key, acc_mask=acc_mask,
         ring_dst_local=ring_dst, ring_src_local=ring_src, ring_mask=ring_mask,
         flat_src=flat_src, flat_dst_local=flat_dst, flat_mask=flat_mask,
-        tri_u=tri_u, tri_v=tri_v, tri_mask=tri_mask)
+        tri_u=tri_u, tri_v=tri_v, tri_mask=tri_mask,
+        rep_ids=rep_ids, rep_gids=rep_gids, rep_dst_local=rep_dst,
+        rep_slot=rep_slot, rep_mask=rep_mask)
 
 
 def _shard_spec(mesh: Mesh, axis: str, *rest) -> NamedSharding:
@@ -266,7 +324,16 @@ def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
     The masked-out fill value 0x00 is empty in *both* layouts (two zero
     nibbles), but the scatter-merge itself must be nibble-wise when
     packed — a byte-wise ``.at[].max`` would compare whole packed bytes.
+
+    Replica-aware plans (DESIGN.md §12) prepend a shard-local pre-pass:
+    the K replicated source rows are gathered from the *current* D^{t-1}
+    panel (inside the compiled program, so every pass sees fresh rows)
+    and scatter-maxed locally; the exchange below then carries only the
+    replica-stripped edge groups. Register max is commutative and
+    idempotent, so the split is bit-identical to the unsplit dataflow.
     """
+    if plan.has_replicas:
+        return _propagate_allgather_rep(mesh, axis, plan, regs, layout)
 
     def build():
         def body(regs_local, src, dst_local, mask):
@@ -293,6 +360,59 @@ def dist_propagate_allgather(mesh: Mesh, axis: str, plan: DistPlan,
         jax.device_put(plan.flat_mask, _shard_spec(mesh, axis, None)))
 
 
+def _rep_prepass(regs_local, rep_dst, rep_slot, rep_mask, rep_rows,
+                 layout: str) -> jax.Array:
+    """Shard-local replica pre-pass: merge replicated source rows into the
+    local block (each shard reads the replicated panel, no exchange)."""
+    hot = jnp.where(rep_mask[:, None], rep_rows[rep_slot], jnp.uint8(0))
+    return packing.scatter_max_rows(regs_local, rep_dst, hot, layout=layout)
+
+
+def _propagate_allgather_rep(mesh: Mesh, axis: str, plan: DistPlan,
+                             regs: jax.Array, layout: str) -> jax.Array:
+    """Replica-aware all_gather pass (see :func:`dist_propagate_allgather`)."""
+
+    def build():
+        def outer(regs, src, dst_local, mask, rep_dst, rep_slot, rep_mask,
+                  rep_gids):
+            rep_rows = regs[rep_gids]  # K_pad fresh rows from D^{t-1}
+
+            def body(regs_local, src, dst_local, mask, rep_dst, rep_slot,
+                     rep_mask, rep_rows):
+                out = _rep_prepass(regs_local, rep_dst[0], rep_slot[0],
+                                   rep_mask[0], rep_rows, layout)
+                full = jax.lax.all_gather(regs_local, axis, tiled=True)
+                gathered = jnp.where(mask[0][:, None], full[src[0]],
+                                     jnp.uint8(0))
+                return packing.scatter_max_rows(out, dst_local[0],
+                                                gathered, layout=layout)
+
+            return _shard_map(
+                body, mesh=mesh,
+                in_specs=(P(axis, None),) * 7 + (P(None, None),),
+                out_specs=P(axis, None))(
+                regs, src, dst_local, mask, rep_dst, rep_slot, rep_mask,
+                rep_rows)
+
+        return jax.jit(outer)
+
+    f = _jit_cached(
+        "dist_propagate_allgather_rep",
+        (plan.n_pad, plan.num_shards, plan.flat_src.shape[1],
+         plan.rep_dst_local.shape[1], plan.rep_gids.shape[0]),
+        None, "ref", (axis, layout), build)
+    sh = _shard_spec(mesh, axis, None)
+    return f(
+        regs,
+        jax.device_put(plan.flat_src, sh),
+        jax.device_put(plan.flat_dst_local, sh),
+        jax.device_put(plan.flat_mask, sh),
+        jax.device_put(plan.rep_dst_local, sh),
+        jax.device_put(plan.rep_slot, sh),
+        jax.device_put(plan.rep_mask, sh),
+        jnp.asarray(plan.rep_gids))
+
+
 def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
                         regs: jax.Array, layout: str = "byte") -> jax.Array:
     """One Algorithm 2 pass; ring schedule (beyond-paper optimization).
@@ -300,7 +420,16 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
     Step s: shard i holds register block (i - s) mod P in ``buf`` and
     scatter-maxes the edges whose source lies in that block; the next
     permute overlaps the current scatter. Peak memory O(2 n r / P)/device.
+
+    Replica-aware plans (DESIGN.md §12) seed the output with a shard-local
+    pre-pass over the replicated source rows (gathered fresh from D^{t-1}
+    inside the program) before the ring turns; the ring capacity E_ring
+    then covers only the replica-stripped edges — under Zipfian hot-vertex
+    skew, the bulk of the per-(shard, block) maximum. Bit-identical to the
+    replica-free schedule (register max commutes).
     """
+    if plan.has_replicas:
+        return _propagate_ring_rep(mesh, axis, plan, regs, layout)
     num = plan.num_shards
 
     def build():
@@ -342,6 +471,73 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
         jax.device_put(plan.ring_dst_local, _shard_spec(mesh, axis, None, None)),
         jax.device_put(plan.ring_src_local, _shard_spec(mesh, axis, None, None)),
         jax.device_put(plan.ring_mask, _shard_spec(mesh, axis, None, None)))
+
+
+def _propagate_ring_rep(mesh: Mesh, axis: str, plan: DistPlan,
+                        regs: jax.Array, layout: str) -> jax.Array:
+    """Replica-aware ring pass (see :func:`dist_propagate_ring`)."""
+    num = plan.num_shards
+
+    def build():
+        def outer(regs, ring_dst, ring_src, ring_mask, rep_dst, rep_slot,
+                  rep_mask, rep_gids):
+            rep_rows = regs[rep_gids]  # K_pad fresh rows from D^{t-1}
+
+            def body(regs_local, ring_dst, ring_src, ring_mask, rep_dst,
+                     rep_slot, rep_mask, rep_rows):
+                i = jax.lax.axis_index(axis)
+                perm = [(j, (j + 1) % num) for j in range(num)]
+                out0 = _rep_prepass(regs_local, rep_dst[0], rep_slot[0],
+                                    rep_mask[0], rep_rows, layout)
+
+                def step(s, carry):
+                    buf, out = carry
+                    b = (i - s) % num
+                    dst = jax.lax.dynamic_index_in_dim(ring_dst[0], b,
+                                                       keepdims=False)
+                    src = jax.lax.dynamic_index_in_dim(ring_src[0], b,
+                                                       keepdims=False)
+                    msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b,
+                                                       keepdims=False)
+                    gathered = jnp.where(msk[:, None], buf[src],
+                                         jnp.uint8(0))
+                    out = packing.scatter_max_rows(out, dst, gathered,
+                                                   layout=layout)
+                    buf = jax.lax.ppermute(buf, axis, perm)
+                    return buf, out
+
+                _, out = jax.lax.fori_loop(0, num, step,
+                                           (regs_local, out0))
+                return out
+
+            return _shard_map(
+                body, mesh=mesh,
+                in_specs=(P(axis, None), P(axis, None, None),
+                          P(axis, None, None), P(axis, None, None),
+                          P(axis, None), P(axis, None), P(axis, None),
+                          P(None, None)),
+                out_specs=P(axis, None))(
+                regs, ring_dst, ring_src, ring_mask, rep_dst, rep_slot,
+                rep_mask, rep_rows)
+
+        return jax.jit(outer)
+
+    f = _jit_cached(
+        "dist_propagate_ring_rep",
+        (plan.n_pad, plan.num_shards, plan.ring_dst_local.shape[2],
+         plan.rep_dst_local.shape[1], plan.rep_gids.shape[0]),
+        None, "ref", (axis, layout), build)
+    sh1 = _shard_spec(mesh, axis, None)
+    sh2 = _shard_spec(mesh, axis, None, None)
+    return f(
+        regs,
+        jax.device_put(plan.ring_dst_local, sh2),
+        jax.device_put(plan.ring_src_local, sh2),
+        jax.device_put(plan.ring_mask, sh2),
+        jax.device_put(plan.rep_dst_local, sh1),
+        jax.device_put(plan.rep_slot, sh1),
+        jax.device_put(plan.rep_mask, sh1),
+        jnp.asarray(plan.rep_gids))
 
 
 def dist_triangle_heavy_hitters(mesh: Mesh, axis: str, plan: DistPlan,

@@ -161,6 +161,14 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
     A checkpoint taken mid-stream restores to an engine that resumes
     ingestion exactly where the saved one stopped (same row layout, same
     tracked edge list).
+
+    Elastic resharding (DESIGN.md §12): ``shards=S2`` rebuilds the vertex
+    partition and, lazily, the routing ``DistPlan`` directly from the
+    saved register panel — rows are repartitioned, no edge replay — so a
+    serving fleet goes S -> S' from a checkpoint with bit-identical
+    answers. A saved hot-vertex replica set (``replicate``) is
+    reinstalled the same way: the id set is the durable decision, the
+    replica panel re-gathers from the restored rows.
     """
     from repro.ckpt.checkpoint import (latest_step, read_manifest,
                                        restore_checkpoint)
@@ -193,8 +201,12 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
         regs = np.asarray(packing.to_layout(regs, layout_saved, layout),
                           np.uint8)
     if backend == "local":
-        return LocalEngine.from_regs(regs, n, cfg, edges=edges, impl=impl,
-                                     layout=layout)
-    return ShardedEngine.from_regs(
-        regs, n, cfg, edges=edges,
-        shards=shards or extra.get("shards"), impl=impl, layout=layout)
+        eng = LocalEngine.from_regs(regs, n, cfg, edges=edges, impl=impl,
+                                    layout=layout)
+    else:
+        eng = ShardedEngine.from_regs(
+            regs, n, cfg, edges=edges,
+            shards=shards or extra.get("shards"), impl=impl, layout=layout)
+    if "replica_ids" in tree:
+        eng.replicate(np.asarray(tree["replica_ids"], dtype=np.int64))
+    return eng

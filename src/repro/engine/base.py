@@ -60,7 +60,7 @@ import numpy as np
 
 from repro.core.hll import HLLConfig
 from repro.core.intersection import _NEWTON_ITERS
-from repro.engine import plans
+from repro.engine import placement, plans
 from repro.kernels import registry
 
 __all__ = ["SketchEngine", "SnapshotFrozen", "bucket", "validate_t_max"]
@@ -106,6 +106,24 @@ def validate_t_max(t_max) -> int:
     if t < 1:
         raise ValueError(f"t_max must be >= 1, got {t}")
     return t
+
+
+@dataclass
+class _ReplicaSet:
+    """Hot-vertex replica panel for one engine version (DESIGN.md §12).
+
+    ``ids`` is the sorted replica vertex set; ``rows`` the gathered
+    uint8[K_pad, w] replica panel, placed by the backend (replicated
+    across shards on the sharded backend) and byte-identical to the owner
+    rows at ``version``. A set whose ``version`` no longer matches the
+    engine's is *stale* — queries refresh it lazily (re-gather the K rows)
+    before trusting it, so replica-served answers are always bit-identical
+    to owner-only execution at the current version.
+    """
+
+    ids: np.ndarray
+    rows: jax.Array
+    version: int
 
 
 @dataclass
@@ -184,6 +202,7 @@ class SketchEngine(abc.ABC):
         self._prop_routing: tuple[jax.Array, jax.Array, jax.Array] | None = \
             None
         self._panel_set: _PanelSet | None = None
+        self._replicas: _ReplicaSet | None = None
         self._frozen = False        # True only on snapshot() views
         self._regs_leased = False   # current panel shared with a snapshot
         self._snap_lock = threading.RLock()  # guards lazy caches on readers
@@ -391,6 +410,97 @@ class SketchEngine(abc.ABC):
         self._invalidate_edge_caches()
         return self
 
+    # ---------------------------------------------------------- replication
+    @property
+    def replicated_ids(self) -> np.ndarray | None:
+        """The installed hot-vertex replica set (sorted int64), or ``None``.
+
+        Set by :meth:`replicate` (directly, by a serving placement
+        decision, or by ``load`` restoring a checkpoint that carried a
+        replica set). The *rows* behind these ids refresh lazily on
+        version bumps; the id set only changes through :meth:`replicate`.
+        """
+        rs = self._replicas
+        return None if rs is None else rs.ids.copy()
+
+    def replicate(self, vertex_ids) -> "SketchEngine":
+        """Install (or clear) the hot-vertex replica set (DESIGN.md §12).
+
+        The given vertices' register rows are gathered into a small
+        read-only replica panel that every query plan can reach without a
+        cross-shard fetch: union/intersection/mixed plans concatenate it
+        below the register table and remap hot ids onto the replica slots
+        host-side (:func:`repro.engine.placement.remap_ids`), and the
+        sharded propagate schedules resolve hot-source edges from it
+        instead of the ring/all_gather exchange. Replica rows are byte
+        copies of the owner rows at the current :attr:`version`; stale
+        panels refresh lazily after ingest/merge, so replica-on answers
+        stay bit-identical to owner-only execution.
+
+        Args:
+          vertex_ids: integer vertex ids in [0, n); duplicates collapse.
+            An empty array clears replication. Typically the output of
+            :meth:`repro.engine.placement.PlacementPolicy.hot_vertices`
+            over serving access stats.
+
+        Returns self (chains like ``ingest``). Raises
+        :class:`SnapshotFrozen` on a read-only snapshot view — replicas
+        install on the writer and hand off via :meth:`snapshot`.
+        """
+        self._check_mutable("replicate")
+        raw = np.asarray(vertex_ids)
+        plans.require_integer_ids(raw, "replicate vertex ids")
+        ids = np.unique(raw.astype(np.int64).ravel())
+        if len(ids) and (ids[0] < 0 or ids[-1] >= self.n):
+            raise ValueError(
+                f"replicate got vertex ids [{ids[0]}, {ids[-1]}] outside "
+                f"the engine's universe [0, {self.n})")
+        with self._snap_lock:
+            self._replicas = self._build_replicas(ids) if len(ids) else None
+            self._on_replicas_changed()
+        return self
+
+    def _build_replicas(self, ids: np.ndarray) -> _ReplicaSet:
+        """Gather the replica panel for ``ids`` at the current version."""
+        k_pad = plans.bucket(len(ids))
+        padded = np.zeros(k_pad, np.int32)
+        padded[: len(ids)] = ids
+        fn = self._plan("replica_gather", bucket=(k_pad,),
+                        builder=plans.build_replica_gather_plan)
+        rows = self._place_replica_rows(fn(self._regs, padded))
+        return _ReplicaSet(ids=ids, rows=rows, version=self._version)
+
+    def _replicas_current(self) -> _ReplicaSet | None:
+        """The replica set, refreshed if the panel version moved on.
+
+        The refresh protocol (DESIGN.md §12): ingest/merge bump
+        :attr:`version` without touching the replica set, so the first
+        query after a bump re-gathers the K hot rows here (one small
+        gather, under the snapshot lock like every lazy reader-side
+        mutation). Snapshots inherit a fresh set from :meth:`snapshot`
+        and their version never moves, so they skip this path entirely.
+        """
+        rs = self._replicas
+        if rs is None or rs.version == self._version:
+            return rs
+        with self._snap_lock:
+            rs = self._replicas
+            if rs is not None and rs.version != self._version:
+                rs = self._replicas = self._build_replicas(rs.ids)
+            return rs
+
+    def _place_replica_rows(self, rows: jax.Array) -> jax.Array:
+        """Backend hook: place the gathered uint8[K_pad, w] replica panel
+        (pass-through locally; replicated across the mesh when sharded)."""
+        return rows
+
+    def _on_replicas_changed(self) -> None:
+        """Backend hook: the replica *id set* changed (install/clear).
+
+        Row refreshes never call this — only routing derived from the id
+        set (the sharded backend's ``DistPlan``) needs invalidation.
+        """
+
     # ----------------------------------------------------------- snapshots
     def snapshot(self) -> "SketchEngine":
         """A read-only view of this engine at its current version — O(1).
@@ -415,6 +525,8 @@ class SketchEngine(abc.ABC):
         panel; :class:`SnapshotFrozen` guards the view against mutation.
         """
         edges = self.edges  # consolidate chunks into one stable array
+        self._replicas_current()  # refresh replica rows at this version so
+        # the view never pays (or races on) a lazy refresh after freezing
         snap = copy.copy(self)
         snap._edges0 = edges
         snap._edge_chunks = []      # never share the writer's chunk list
@@ -521,6 +633,14 @@ class SketchEngine(abc.ABC):
         single worker thread never re-scans the ids.
         """
         ids, mask = plans.pad_sets(sets)
+        rs = self._replicas_current()
+        if rs is not None:
+            ids = placement.remap_ids(ids, rs.ids, self.n_pad)
+            fn = self._plan(
+                "union_rep", bucket=ids.shape + (int(rs.rows.shape[0]),),
+                builder=lambda: plans.build_union_plan(
+                    self.cfg, self.kernels, replicas=True))
+            return np.asarray(fn(self._regs, rs.rows, ids, mask))[: len(sets)]
         fn = self._plan("union", bucket=ids.shape,
                         builder=lambda: plans.build_union_plan(self.cfg,
                                                                self.kernels))
@@ -549,6 +669,17 @@ class SketchEngine(abc.ABC):
         Serving hot path counterpart of :meth:`_union_presplit`.
         """
         ids, mask = plans.pad_pairs(arr)
+        rs = self._replicas_current()
+        if rs is not None:
+            ids = placement.remap_ids(ids, rs.ids, self.n_pad)
+            fn = self._plan(
+                "intersection_rep",
+                bucket=(ids.shape[0], int(rs.rows.shape[0])),
+                extra=(method, iters),
+                builder=lambda: plans.build_intersection_plan(
+                    self.cfg, self.kernels, method, iters, replicas=True))
+            return np.asarray(fn(self._regs, rs.rows, ids,
+                                 mask))[: arr.shape[0]]
         fn = self._plan(
             "intersection", bucket=(ids.shape[0],), extra=(method, iters),
             builder=lambda: plans.build_intersection_plan(
@@ -625,12 +756,25 @@ class SketchEngine(abc.ABC):
         else:
             p_ids = np.zeros((1, 2), np.int32)
             p_mask = np.zeros((1,), bool)
-        fn = self._plan(
-            "mixed", bucket=(u_ids.shape, p_ids.shape[0]),
-            extra=(kinds, method, iters),
-            builder=lambda: plans.build_mixed_plan(self.cfg, self.kernels,
-                                                   kinds, method, iters))
-        raw = fn(self._regs, u_ids, u_mask, p_ids, p_mask)
+        rs = self._replicas_current()
+        if rs is not None:
+            u_ids = placement.remap_ids(u_ids, rs.ids, self.n_pad)
+            p_ids = placement.remap_ids(p_ids, rs.ids, self.n_pad)
+            fn = self._plan(
+                "mixed_rep",
+                bucket=(u_ids.shape, p_ids.shape[0], int(rs.rows.shape[0])),
+                extra=(kinds, method, iters),
+                builder=lambda: plans.build_mixed_plan(
+                    self.cfg, self.kernels, kinds, method, iters,
+                    replicas=True))
+            raw = fn(self._regs, rs.rows, u_ids, u_mask, p_ids, p_mask)
+        else:
+            fn = self._plan(
+                "mixed", bucket=(u_ids.shape, p_ids.shape[0]),
+                extra=(kinds, method, iters),
+                builder=lambda: plans.build_mixed_plan(self.cfg, self.kernels,
+                                                       kinds, method, iters))
+            raw = fn(self._regs, u_ids, u_mask, p_ids, p_mask)
         out = {}
         if "degrees" in raw:
             out["degrees"] = np.asarray(raw["degrees"])[: self.n]
@@ -775,6 +919,10 @@ class SketchEngine(abc.ABC):
         tree = {"regs": np.asarray(self._regs)[: self.n]}
         if edges is not None:
             tree["edges"] = edges
+        if self._replicas is not None:
+            # the *id set* is the durable placement decision; rows are
+            # re-gathered on load (fresh panel, any shard count/layout)
+            tree["replica_ids"] = np.asarray(self._replicas.ids, np.int64)
         extra = {
             "format": ENGINE_FORMAT,
             "backend": self.backend,

@@ -53,7 +53,7 @@ __all__ = [
     "record_trace", "record_event", "event_counts", "reset_event_counts",
     "build_degrees_plan", "build_union_plan",
     "build_intersection_plan", "build_mixed_plan", "build_merge_plan",
-    "build_propagate_plan",
+    "build_propagate_plan", "build_replica_gather_plan",
 ]
 
 
@@ -407,7 +407,7 @@ def _intersection_body(regs, pairs, mask, cfg, kernels, method, iters):
     return jnp.where(mask, est, 0.0)
 
 
-def build_union_plan(cfg, kernels):
+def build_union_plan(cfg, kernels, replicas: bool = False):
     """Plan: batched |∪ N(x)| over bucketed (ids, mask) set panels.
 
     Fused (DESIGN.md §10): the kernel set's ``union_estimate`` gathers,
@@ -415,14 +415,30 @@ def build_union_plan(cfg, kernels):
     panels the old two-pass plan materialized between its gather and
     estimate stages never exist. The ref impl is the bit-checked oracle
     for that old path (same ops, same order).
+
+    With ``replicas=True`` the callable takes ``(regs, rep, ids, mask)``:
+    the replica panel ``rep`` (hot-vertex rows, DESIGN.md §12) is
+    concatenated below the register table and ``ids`` arrive pre-remapped
+    by :func:`repro.engine.placement.remap_ids` — the kernel gathers
+    byte-identical rows from replica slots, so answers are bitwise equal
+    to the replica-free plan. Traced as ``union_rep`` (its own
+    compiled-program counter; the O(log batch) per-kind trace bound
+    stays assertable per variant).
     """
-    def fn(regs, ids, mask):
-        record_trace("union")
-        return _union_body(regs, ids, mask, cfg, kernels)
+    if replicas:
+        def fn(regs, rep, ids, mask):
+            record_trace("union_rep")
+            table = jnp.concatenate([regs, rep], axis=0)
+            return _union_body(table, ids, mask, cfg, kernels)
+    else:
+        def fn(regs, ids, mask):
+            record_trace("union")
+            return _union_body(regs, ids, mask, cfg, kernels)
     return jax.jit(fn)
 
 
-def build_intersection_plan(cfg, kernels, method: str, iters: int):
+def build_intersection_plan(cfg, kernels, method: str, iters: int,
+                            replicas: bool = False):
     """Plan: batched T̃(xy) over bucketed (pairs, mask) panels.
 
     Fused (DESIGN.md §10): ``intersection_stats`` gathers both endpoint
@@ -431,15 +447,27 @@ def build_intersection_plan(cfg, kernels, method: str, iters: int):
     statistics alone. ``method="mle"`` is Ertl's maximum-likelihood
     estimator; ``"ie"`` the inclusion-exclusion baseline (Eq. 18). Both
     are static plan coordinates (they change the traced program).
+
+    ``replicas=True`` mirrors :func:`build_union_plan`: the callable takes
+    ``(regs, rep, pairs, mask)`` with pair endpoints pre-remapped onto
+    replica slots; traced as ``intersection_rep``.
     """
-    def fn(regs, pairs, mask):
-        record_trace("intersection")
-        return _intersection_body(regs, pairs, mask, cfg, kernels, method,
-                                  iters)
+    if replicas:
+        def fn(regs, rep, pairs, mask):
+            record_trace("intersection_rep")
+            table = jnp.concatenate([regs, rep], axis=0)
+            return _intersection_body(table, pairs, mask, cfg, kernels,
+                                      method, iters)
+    else:
+        def fn(regs, pairs, mask):
+            record_trace("intersection")
+            return _intersection_body(regs, pairs, mask, cfg, kernels,
+                                      method, iters)
     return jax.jit(fn)
 
 
-def build_mixed_plan(cfg, kernels, kinds: tuple, method: str, iters: int):
+def build_mixed_plan(cfg, kernels, kinds: tuple, method: str, iters: int,
+                     replicas: bool = False):
     """Plan: one program answering a degrees+union+intersection micro-batch.
 
     ``kinds`` (a static subset of ``("degrees", "union", "intersection")``)
@@ -449,18 +477,47 @@ def build_mixed_plan(cfg, kernels, kinds: tuple, method: str, iters: int):
     computed by the same fused body as its per-kind plan, so a coalesced
     mixed batch is bit-identical to per-kind calls while costing ONE
     compiled-program launch instead of ``len(kinds)`` (DESIGN.md §10).
+
+    ``replicas=True`` adds the replica panel argument (``(regs, rep,
+    u_ids, u_mask, p_ids, p_mask)``) for the gather kinds; the degrees
+    sub-answer still scans only the true register table — replica rows
+    are copies and must not be double-counted. Traced as ``mixed_rep``.
     """
-    def fn(regs, u_ids, u_mask, p_ids, p_mask):
-        record_trace("mixed")
+    def compute(table, regs, u_ids, u_mask, p_ids, p_mask):
         out = {}
         if "degrees" in kinds:
             out["degrees"] = kernels.estimate_rows(regs, cfg)
         if "union" in kinds:
-            out["union"] = _union_body(regs, u_ids, u_mask, cfg, kernels)
+            out["union"] = _union_body(table, u_ids, u_mask, cfg, kernels)
         if "intersection" in kinds:
             out["intersection"] = _intersection_body(
-                regs, p_ids, p_mask, cfg, kernels, method, iters)
+                table, p_ids, p_mask, cfg, kernels, method, iters)
         return out
+
+    if replicas:
+        def fn(regs, rep, u_ids, u_mask, p_ids, p_mask):
+            record_trace("mixed_rep")
+            table = jnp.concatenate([regs, rep], axis=0)
+            return compute(table, regs, u_ids, u_mask, p_ids, p_mask)
+    else:
+        def fn(regs, u_ids, u_mask, p_ids, p_mask):
+            record_trace("mixed")
+            return compute(regs, regs, u_ids, u_mask, p_ids, p_mask)
+    return jax.jit(fn)
+
+
+def build_replica_gather_plan():
+    """Plan: gather the replica panel rows ``regs[ids]`` (hot-vertex rows).
+
+    Used by ``SketchEngine.replicate``/refresh (DESIGN.md §12): ``ids`` is
+    the padded hot-vertex id vector, the output the uint8[K_pad, w]
+    replica panel placed by the backend (replicated across shards). Pure
+    gather — layout-agnostic byte copies, so refreshed replicas are
+    byte-identical to their owner rows at the gathered version.
+    """
+    def fn(regs, ids):
+        record_trace("replica_gather")
+        return regs[ids]
     return jax.jit(fn)
 
 

@@ -72,14 +72,34 @@ class ShardedEngine(SketchEngine):
                 if self._dist_plan is None:
                     edges = self._require_edges(
                         "the distributed routing plan")
-                    self._dist_plan = sd.build_plan(edges, self.n,
-                                                    self.shards)
+                    rs = self._replicas
+                    self._dist_plan = sd.build_plan(
+                        edges, self.n, self.shards,
+                        replica_ids=None if rs is None else rs.ids)
         return self._dist_plan
 
     def _invalidate_edge_caches(self) -> None:
         """Ingest/merge moved the edge list: drop plan + propagate caches."""
         super()._invalidate_edge_caches()
         self._dist_plan = None
+
+    def _on_replicas_changed(self) -> None:
+        """A new replica id set reroutes hot-source edges: rebuild the plan.
+
+        Row *refreshes* (same ids, new version) never land here — the
+        routing is a pure function of (edges, n, shards, replica ids) and
+        the propagate schedules re-gather replica rows per pass anyway.
+        """
+        self._dist_plan = None
+
+    def _place_replica_rows(self, rows):
+        """Replicate the uint8[K_pad, w] replica panel across every shard.
+
+        This is the whole point of the placement policy (DESIGN.md §12):
+        hot rows live on *all* shards, so query gathers and propagate
+        pre-passes touching them are shard-local.
+        """
+        return jax.device_put(rows, NamedSharding(self.mesh, P(None, None)))
 
     def _plan_scope(self) -> tuple:
         """Shard count distinguishes mesh-closed plans in the shared cache."""

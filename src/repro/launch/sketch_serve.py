@@ -13,13 +13,22 @@ a flush and a *deterministic sample assertion*: served answers must be
 bit-identical to a direct engine call on the full edge set — rotation is
 not allowed to change an answer. ``--stats`` dumps the complete stats
 structure (queue depths, latency histograms, shed/deadline counters,
-snapshot staleness) as JSON.
+snapshot staleness, per-vertex access counters) as JSON.
+
+Workload-aware placement (DESIGN.md §12): ``--zipf S`` draws client
+vertex ids from a Zipf(S) hot-vertex distribution, and ``--replicate K``
+ends the run by replicating the top-K vertices from the served access
+counters — asserting the hot set is non-empty and that sample
+union/intersection answers are bit-identical before and after
+replication, then printing the modeled max-owner gather-traffic ratio.
 
     PYTHONPATH=src python -m repro.launch.sketch_serve \
         --scale 10 --clients 6 --requests 40 --ingest-blocks 8
     PYTHONPATH=src python -m repro.launch.sketch_serve --smoke
     PYTHONPATH=src python -m repro.launch.sketch_serve \
         --smoke --continuous --stats
+    PYTHONPATH=src python -m repro.launch.sketch_serve \
+        --smoke --zipf 1.3 --replicate 16
 """
 from __future__ import annotations
 
@@ -32,27 +41,43 @@ import numpy as np
 
 from repro import engine
 from repro.core.hll import HLLConfig
-from repro.engine import base, plans
+from repro.engine import base, placement, plans
 from repro.graph import generators as gen
 from repro.serve import ContinuousServer, QueryServer, RotationPolicy
+from repro.serve.loadgen import ZipfSampler
 
 
 def _client(server, edges: np.ndarray, n: int, requests: int,
-            max_batch: int, t_max: int, seed: int, errors: list) -> None:
-    """One client: mixed queries with jittering (power-law) batch sizes."""
+            max_batch: int, t_max: int, seed: int, errors: list,
+            sampler=None) -> None:
+    """One client: mixed queries with jittering (power-law) batch sizes.
+
+    ``sampler`` (a :class:`repro.serve.loadgen.ZipfSampler`) switches the
+    union/intersection vertex ids from uniform/edge-derived draws to a
+    Zipfian hot-vertex stream — the workload shape the placement policy
+    targets (DESIGN.md §12).
+    """
     rng = np.random.default_rng(seed)
+
+    def draw(size):
+        return (sampler.sample(rng, size) if sampler is not None
+                else rng.integers(0, n, size=size))
+
     try:
         for i in range(requests):
             batch = int(rng.integers(1, max_batch + 1))
             kind = ("union", "intersection", "degrees",
                     "neighborhood")[int(rng.integers(4))]
             if kind == "union":
-                sets = [rng.integers(0, n, size=rng.integers(1, 8))
+                sets = [draw(int(rng.integers(1, 8)))
                         for _ in range(batch)]
                 server.union_size(sets)
             elif kind == "intersection":
-                idx = rng.integers(0, len(edges), size=batch)
-                server.intersection_size(edges[idx])
+                if sampler is not None:
+                    server.intersection_size(draw((batch, 2)))
+                else:
+                    idx = rng.integers(0, len(edges), size=batch)
+                    server.intersection_size(edges[idx])
             elif kind == "neighborhood":
                 # jittering horizons coalesce onto one panel set per epoch
                 server.neighborhood(int(rng.integers(1, t_max + 1)))
@@ -86,6 +111,13 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="serve from rotating snapshots (ContinuousServer: "
                          "writer ingests while readers never stall)")
+    ap.add_argument("--zipf", type=float, default=None, metavar="S",
+                    help="draw client vertex ids Zipf(S) instead of "
+                         "uniform (hot-vertex workload, DESIGN.md §12)")
+    ap.add_argument("--replicate", type=int, default=0, metavar="K",
+                    help="after the client wave, replicate the top-K hot "
+                         "vertices from the access counters and assert "
+                         "served answers stay bit-identical")
     ap.add_argument("--stats", action="store_true",
                     help="dump the full stats structure as JSON at the end")
     ap.add_argument("--smoke", action="store_true",
@@ -116,11 +148,12 @@ def main(argv: list[str] | None = None) -> None:
         server = ContinuousServer(eng, rotation=RotationPolicy(every_blocks=1))
     else:
         server = QueryServer(eng)
+    sampler = None if args.zipf is None else ZipfSampler(n, args.zipf)
     with server:
         threads = [threading.Thread(
             target=_client,
             args=(server, edges, n, args.requests, args.max_batch,
-                  args.t_max, 17 + c, errors))
+                  args.t_max, 17 + c, errors, sampler))
             for c in range(args.clients)]
         for t in threads:
             t.start()
@@ -133,6 +166,41 @@ def main(argv: list[str] | None = None) -> None:
             t.join()
         if args.continuous:
             server.flush()  # apply + publish everything queued above
+        rep_line = None
+        if args.replicate:
+            # workload-aware placement (DESIGN.md §12): the hot set the
+            # client wave produced must be non-empty, and replicating it
+            # must leave served answers bit-identical
+            acc = server.stats()["access"]
+            assert acc["top"], \
+                "--replicate: expected a non-empty hot set after the wave"
+            hot = np.asarray([v for v, _ in acc["top"]], np.int64)
+            probe_sets = [hot, hot[: max(1, len(hot) // 2)]]
+            probe_pairs = np.stack([hot, np.roll(hot, 1)], axis=1)
+            pre_u = np.asarray(server.union_size(probe_sets))
+            pre_i = np.asarray(server.intersection_size(probe_pairs))
+            installed = server.replicate(
+                policy=placement.PlacementPolicy(top_k=args.replicate))
+            post_u = np.asarray(server.union_size(probe_sets))
+            post_i = np.asarray(server.intersection_size(probe_pairs))
+            assert np.array_equal(pre_u, post_u), \
+                "union answers changed under replication"
+            assert np.array_equal(pre_i, post_i), \
+                "intersection answers changed under replication"
+            counts = server.access_stats.counts()
+            stream = np.repeat(np.arange(len(counts), dtype=np.int64),
+                               counts)
+            shards = getattr(eng, "shards", None) or 1
+            off = placement.gather_traffic(stream, eng.n_pad, shards)
+            on = placement.gather_traffic(stream, eng.n_pad, shards,
+                                          hot_ids=installed)
+            ratio = float(off.max()) / float(max(int(on.max()), 1))
+            rep_line = (
+                f"replicated {len(installed)} hot vertices "
+                f"(top: {hot[:8].tolist()}); served answers bit-identical "
+                f"pre/post; modeled max-owner gather traffic "
+                f"{int(off.max())} -> {int(on.max())} rows "
+                f"({ratio:.2f}x, shards={shards})")
         # deterministic served sample (the CI smoke contract): the final
         # answers ride the cached panels of the final epoch / snapshot
         _, glob = server.neighborhood(args.t_max)
@@ -193,6 +261,8 @@ def main(argv: list[str] | None = None) -> None:
             bound = int(np.log2(max(max_b, 2))) + 2
             assert traces[kind] <= bound, (kind, traces[kind], bound)
     print("OK: compiled-program count within the O(log batch) bound")
+    if rep_line:
+        print(f"OK: {rep_line}")
     if args.stats:
         print(json.dumps(stats, indent=2, default=str))
 

@@ -12,6 +12,15 @@ Design for 1000+ nodes (DESIGN.md §8), realized at container scale:
   ``straggler_factor`` x EWMA increment a counter and invoke a callback
   (at scale: trigger backup-task dispatch / drop the slow host).
 * async checkpointing overlaps serialization with compute.
+
+The multi-host *coordinator* itself (detect a lost host, restore from
+the async checkpoint at a smaller shard count, resume ingest mid-stream)
+is NOT implemented here — :func:`coordinator` is an explicit stub so
+nothing silently pretends otherwise. The single-process pieces it would
+compose already exist: elastic S -> S' restore is
+``engine.load(..., shards=S2)`` (DESIGN.md §12) and mid-stream resume is
+the ``m_ingested`` plumbing in ckpt/checkpoint.py. See ROADMAP item 4
+("Multi-host scale-out with overlap and failover").
 """
 from __future__ import annotations
 
@@ -22,7 +31,24 @@ from repro.ckpt.checkpoint import (
     AsyncCheckpointer, latest_step, restore_checkpoint,
 )
 
-__all__ = ["FTConfig", "StragglerWatchdog", "train_loop"]
+__all__ = ["FTConfig", "StragglerWatchdog", "coordinator", "train_loop"]
+
+
+def coordinator(*args, **kwargs):
+    """Multi-host failover coordinator — intentionally not implemented.
+
+    ROADMAP item 4 scopes the real thing: a ``jax.distributed`` control
+    loop that detects a lost host, evicts it, restores the newest async
+    checkpoint onto the surviving mesh via the elastic reshard path
+    (``engine.load(..., shards=S2)``, DESIGN.md §12), and resumes ingest
+    from the checkpoint's ``m_ingested`` cursor. Until that lands, this
+    stub raises so callers fail loudly instead of training without the
+    failover they asked for.
+    """
+    raise NotImplementedError(
+        "multi-host failover coordination is not implemented yet "
+        "(ROADMAP item 4); the elastic reshard restore it needs is "
+        "available today as engine.load(..., shards=S2)")
 
 
 @dataclass

@@ -36,11 +36,11 @@ from collections import deque
 import numpy as np
 
 from repro.core.intersection import _NEWTON_ITERS
-from repro.engine import plans
+from repro.engine import placement, plans
 from repro.engine.base import validate_t_max
 from repro.serve.server import (_LATENCY_WINDOW, _KindStats, _Request,
-                                _note_served, _segments, ServerClosed,
-                                serve_segment)
+                                _note_served, _segments, note_access,
+                                ServerClosed, serve_segment)
 from repro.serve.snapshot import RotationPolicy, SnapshotSlot
 
 __all__ = ["ContinuousServer", "Overloaded", "DeadlineExceeded"]
@@ -91,9 +91,12 @@ class ContinuousServer:
         self._latency_window = int(latency_window)
         # readers start on a snapshot of the engine as handed over
         self._slot = SnapshotSlot(engine.snapshot())
-        # writer state (guarded by _wcv)
+        self._access = placement.AccessStats(engine.n)
+        # writer state (guarded by _wcv); entries are tagged
+        # ("ingest", block) / ("replicate", ids) so replica-set changes
+        # ride the same ordered apply-then-publish path as edge blocks
         self._wcv = threading.Condition()
-        self._wq: deque[np.ndarray] = deque()
+        self._wq: deque[tuple[str, np.ndarray]] = deque()
         self._inflight = 0  # blocks drained but not yet applied
         self._blocks_pending = 0  # applied but not yet published
         self._oldest_pending_t: float | None = None
@@ -186,15 +189,47 @@ class ContinuousServer:
         instead of growing the queue without bound. Use :meth:`flush` to
         wait until queued data is applied and published.
         """
-        block = np.asarray(edge_block)
+        self._enqueue("ingest", np.asarray(edge_block))
+
+    def _enqueue(self, tag: str, payload) -> None:
+        """Append one tagged entry to the writer queue (backpressured)."""
         with self._wcv:
             while (len(self._wq) >= self._max_ingest_queue
                    and not self._closed and not self._writer_dead):
                 self._wcv.wait()
             if self._closed or self._writer_dead:
                 raise ServerClosed("ContinuousServer is closed")
-            self._wq.append(block)
+            self._wq.append((tag, payload))
             self._wcv.notify_all()
+
+    def replicate(self, vertex_ids=None, *, policy=None) -> np.ndarray:
+        """Install a hot-vertex replica set on the writer engine.
+
+        Exactly one of ``vertex_ids`` (explicit ids; ``[]`` clears) or
+        ``policy`` (a :class:`~repro.engine.placement.PlacementPolicy`,
+        resolved *now* against the reader's access counters) must be
+        given. The change rides the writer queue like an ingest block and
+        this call flushes, so on return the served snapshot carries the
+        new replica set — answers are bit-identical either way
+        (DESIGN.md §12); replication only relocates hot rows.
+        Returns the installed id array (empty when cleared).
+        """
+        if (vertex_ids is None) == (policy is None):
+            raise ValueError(
+                "pass exactly one of vertex_ids= or policy=")
+        if vertex_ids is None:
+            ids = policy.hot_vertices(self._access)
+        else:
+            ids = np.asarray(vertex_ids)
+        self._enqueue("replicate", ids)
+        self.flush()
+        installed = self._eng.replicated_ids
+        return installed if installed is not None else np.zeros(0, np.int64)
+
+    @property
+    def access_stats(self) -> placement.AccessStats:
+        """Per-vertex access counters folded by the reader (DESIGN.md §12)."""
+        return self._access
 
     def flush(self, timeout: float | None = None) -> int:
         """Wait until every queued block is applied AND published.
@@ -249,14 +284,21 @@ class ContinuousServer:
                     self._wq.clear()
                     self._inflight = len(batch)
                     self._wcv.notify_all()  # free backpressured producers
-                for block in batch:
-                    self._eng.ingest(block)
+                applied = 0
+                for tag, payload in batch:
+                    if tag == "ingest":
+                        self._eng.ingest(payload)
+                        applied += 1
+                    else:
+                        self._eng.replicate(payload)
                 now = time.monotonic()
                 with self._wcv:
                     self._inflight = 0
                     if batch:
+                        # replicate entries count as pending too: the next
+                        # rotation must publish the replica-carrying snapshot
                         self._blocks_pending += len(batch)
-                        self._blocks_applied += len(batch)
+                        self._blocks_applied += applied
                         if self._oldest_pending_t is None:
                             self._oldest_pending_t = now
                     age = (0.0 if self._oldest_pending_t is None else
@@ -387,6 +429,7 @@ class ContinuousServer:
         """Serve one drained query batch against ``snap`` (reader thread)."""
         for seg in _segments(batch):
             fused = serve_segment(snap, seg, snap.version)
+            note_access(self._access, seg)
             now = time.monotonic()
             with self._rcv:
                 self._t_last = now
@@ -409,6 +452,9 @@ class ContinuousServer:
         ``age_seconds`` staleness and the writer ``version_lag``.
         ``epoch`` mirrors the served snapshot version so workloads
         written against ``QueryServer`` can read either server's stats.
+        ``access`` (per-vertex hot-set counters from the reader) and
+        ``replicated`` (installed replica count) match ``QueryServer``'s
+        keys too (DESIGN.md §12).
         """
         with self._rcv:
             out: dict = {"queue_depth": len(self._rq)}
@@ -427,6 +473,9 @@ class ContinuousServer:
             out["ingest_blocks_applied"] = self._blocks_applied
         out["snapshot"] = self._slot.stats(writer_version=self._eng.version)
         out["epoch"] = out["snapshot"]["version"]
+        out["access"] = self._access.snapshot()
+        rep = self._slot.get().replicated_ids
+        out["replicated"] = 0 if rep is None else int(len(rep))
         now_traces = plans.trace_counts()
         out["plan_traces"] = {
             k: v - self._trace_base.get(k, 0) for k, v in now_traces.items()
@@ -448,4 +497,5 @@ class ContinuousServer:
             self._deadline_misses = 0
             self._t0 = None
             self._t_last = None
+        self._access.reset()
         self._trace_base = plans.trace_counts()

@@ -33,7 +33,88 @@ import numpy as np
 
 from repro.serve.frontend import DeadlineExceeded, Overloaded
 
-__all__ = ["LoadReport", "closed_loop", "open_loop"]
+__all__ = ["LoadReport", "ZipfSampler", "closed_loop", "open_loop",
+           "request_mix", "sample_vertices"]
+
+
+class ZipfSampler:
+    """Rank-skewed vertex sampler: id ``r`` drawn with weight (r+1)^-s.
+
+    The workload shape behind the placement policy (DESIGN.md §12): real
+    query streams concentrate on a small hot set, and a Zipf(s) draw over
+    vertex ids reproduces that — at s=1.2 the top ~1% of ids absorb most
+    of the mass. Sampling is inverse-CDF over the normalized rank
+    weights, so draws are deterministic given the caller's RNG and cost
+    one ``searchsorted`` per batch.
+    """
+
+    def __init__(self, n: int, s: float = 1.2):
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        if s <= 0:
+            raise ValueError(f"zipf exponent s must be > 0, got {s}")
+        self.n, self.s = int(n), float(s)
+        w = np.arange(1, n + 1, dtype=np.float64) ** -self.s
+        cum = np.cumsum(w)
+        self._cdf = cum / cum[-1]  # cdf[-1] == 1.0 exactly
+
+    def sample(self, rng: np.random.Generator, size) -> np.ndarray:
+        """Draw ``size`` ids in [0, n) — low ids are the hot ranks."""
+        u = rng.random(size)
+        return np.searchsorted(self._cdf, u, side="right").astype(np.int64)
+
+
+def sample_vertices(rng: np.random.Generator, n: int, size, *,
+                    dist: str = "uniform", s: float = 1.2) -> np.ndarray:
+    """Draw vertex ids under ``dist`` — "uniform" or "zipf" (exponent s).
+
+    The one-call form of :class:`ZipfSampler` for callers that sample
+    once (e.g. picking benchmark query ids); loops should hold a sampler
+    to amortize the CDF build.
+    """
+    if dist == "uniform":
+        return rng.integers(0, n, size=size, dtype=np.int64)
+    if dist == "zipf":
+        return ZipfSampler(n, s).sample(rng, size)
+    raise ValueError(f"dist must be 'uniform' or 'zipf', got {dist!r}")
+
+
+def request_mix(server, n: int, *, batch: int = 8, set_size: int = 3,
+                dist: str = "uniform", s: float = 1.2, seed: int = 0,
+                kinds=("union", "intersection")):
+    """Build a ``(kind, thunk)`` mix with per-request vertex sampling.
+
+    Unlike a hand-rolled mix closed over fixed ids, every thunk call
+    redraws its ids from ``dist`` ("uniform" or "zipf" with exponent
+    ``s``) at a fixed batch shape — so plan buckets stay warm while the
+    *key* distribution exercises the access counters and the placement
+    policy (DESIGN.md §12). ``kinds`` picks from "union" (batch sets of
+    ``set_size``), "intersection" (batch pairs) and "degrees". Draws are
+    serialized on one seeded RNG, so the mix is safe under both
+    :func:`closed_loop` threads and :func:`open_loop` dispatch.
+    """
+    sampler = ZipfSampler(n, s) if dist == "zipf" else None
+    if dist not in ("uniform", "zipf"):
+        raise ValueError(f"dist must be 'uniform' or 'zipf', got {dist!r}")
+    rng = np.random.default_rng(seed)
+    lock = threading.Lock()
+
+    def draw(shape):
+        with lock:
+            if sampler is None:
+                return rng.integers(0, n, size=shape, dtype=np.int64)
+            return sampler.sample(rng, shape)
+
+    thunks = {
+        "union": lambda: server.union_size(draw((batch, set_size))),
+        "intersection": lambda: server.intersection_size(draw((batch, 2))),
+        "degrees": lambda: server.degrees(),
+    }
+    unknown = [k for k in kinds if k not in thunks]
+    if unknown:
+        raise ValueError(f"unknown mix kinds {unknown}; "
+                         f"choose from {sorted(thunks)}")
+    return [(k, thunks[k]) for k in kinds]
 
 
 @dataclass
@@ -108,6 +189,10 @@ def closed_loop(mix, *, clients: int = 4, requests_per_client: int = 32,
     deterministic RNG stream (``seed`` + client id), issues one request
     at a time, and starts the next the moment the previous returns — the
     classic closed loop. Returns the populated :class:`LoadReport`.
+
+    The mix controls the *key* distribution: pass
+    ``request_mix(..., dist="zipf", s=...)`` to drive a hot-vertex
+    (Zipfian) workload through the same loop.
     """
     if not mix:
         raise ValueError("mix must contain at least one (kind, thunk) pair")
@@ -145,6 +230,10 @@ def open_loop(mix, *, rate: float, duration: float,
     never as silently reduced load. ``duration`` bounds the arrival
     window in seconds; all in-flight requests are joined before the
     report is returned.
+
+    As with :func:`closed_loop`, the key distribution lives in the mix —
+    ``request_mix(..., dist="zipf", s=...)`` makes the arrivals Zipfian
+    over vertex ids without touching the arrival process.
     """
     if rate <= 0:
         raise ValueError(f"rate must be > 0 req/s, got {rate}")

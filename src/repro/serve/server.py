@@ -52,10 +52,10 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.intersection import _NEWTON_ITERS
-from repro.engine import plans
+from repro.engine import placement, plans
 from repro.engine.base import validate_t_max
 
-__all__ = ["QueryServer", "ServerClosed"]
+__all__ = ["QueryServer", "ServerClosed", "note_access"]
 
 _LATENCY_WINDOW = 8192  # per-kind latency samples kept for the stats
 
@@ -153,6 +153,27 @@ def _note_served(stats: dict, seg: list[_Request], now: float,
     for kind in dict.fromkeys(r.kind for r in seg):
         run = [r for r in seg if r.kind == kind]
         stats.setdefault(kind, _KindStats(window)).observe(run, now)
+
+
+def note_access(access: placement.AccessStats, seg: list[_Request]) -> None:
+    """Fold one drained segment's vertex touches into ``access``.
+
+    Union/intersection requests count one access per queried vertex id
+    (the gather kinds the placement policy replicates for); table-scan
+    kinds (degrees / neighborhood / triangle) and barriers count one
+    access per request. Called on the single serving thread right after
+    each segment is served — the cheap, lock-free aggregation point the
+    hot-vertex placement decision reads from (DESIGN.md §12). Shared by
+    the epoch-barrier worker and the continuous frontend's reader.
+    """
+    for r in seg:
+        if r.kind == "union":
+            for s in r.payload[0]:
+                access.note_ids("union", s)
+        elif r.kind == "intersection":
+            access.note_ids("intersection", r.payload[0])
+        else:
+            access.note_query(r.kind)
 
 
 # --------------------------------------------------------- serving core
@@ -376,6 +397,7 @@ class QueryServer:
         self._t0 = None  # first submit (throughput window start)
         self._t_last = None
         self._stats: dict[str, _KindStats] = {}
+        self._access = placement.AccessStats(engine.n)
         self._fused_batches = 0
         self._latency_window = int(latency_window)
         self._trace_base = plans.trace_counts()  # delta baseline for stats
@@ -520,7 +542,38 @@ class QueryServer:
         block = np.asarray(edge_block)
         return self._submit("ingest", (block,)).wait()
 
+    def replicate(self, vertex_ids=None, *,
+                  policy: placement.PlacementPolicy | None = None,
+                  ) -> np.ndarray:
+        """Install (or clear) the engine's hot-vertex replica set.
+
+        Pass exactly one of ``vertex_ids`` (explicit ids; empty clears) or
+        ``policy`` (a :class:`~repro.engine.placement.PlacementPolicy`
+        applied to this server's measured access counters). Served as a
+        barrier on the worker like :meth:`ingest` — with ``policy``, the
+        hot set is computed *at serve time*, after every earlier queued
+        query has been counted. Replication never changes answers (replica
+        rows are byte copies, DESIGN.md §12), so the epoch does not bump.
+
+        Returns the installed sorted id array (empty when cleared).
+        """
+        if (vertex_ids is None) == (policy is None):
+            raise ValueError(
+                "replicate takes exactly one of vertex_ids or policy")
+        ids = None if vertex_ids is None else np.asarray(vertex_ids)
+        return self._submit("replicate", (ids, policy)).wait()
+
     # -------------------------------------------------------------- stats
+    @property
+    def access_stats(self) -> placement.AccessStats:
+        """The per-vertex access counters this server aggregates.
+
+        Written only by the worker thread (one ``note_access`` per served
+        segment); reads from other threads (placement decisions, the
+        ``stats()`` snapshot) are approximate by at most the segment in
+        flight.
+        """
+        return self._access
     def stats(self) -> dict:
         """Serving statistics snapshot.
 
@@ -536,9 +589,12 @@ class QueryServer:
         ``shed_total``/``deadline_misses`` (always 0 here — the epoch-
         barrier server has no admission control; the fields exist so the
         continuous frontend's stats are a superset of this schema,
-        DESIGN.md §3d), and the plan layer's compiled-program counters
+        DESIGN.md §3d), the plan layer's compiled-program counters
         (``plan_traces`` — programs traced since this server was created,
-        the O(log N) quantity — plus the shared-cache hit/miss stats).
+        the O(log N) quantity — plus the shared-cache hit/miss stats),
+        the per-vertex ``access`` counters (totals per kind + the hottest
+        vertices, DESIGN.md §12) and ``replicated`` (the installed
+        hot-vertex replica count).
         """
         with self._cv:
             out: dict = {"epoch": self._epoch,
@@ -558,6 +614,9 @@ class QueryServer:
             k: v - self._trace_base.get(k, 0) for k, v in now_traces.items()
             if v - self._trace_base.get(k, 0) > 0}
         out["plan_cache"] = self._eng.plan_cache.stats()
+        out["access"] = self._access.snapshot()
+        rep = self._eng.replicated_ids
+        out["replicated"] = 0 if rep is None else int(len(rep))
         return out
 
     def reset_stats(self) -> None:
@@ -575,6 +634,7 @@ class QueryServer:
             self._fused_batches = 0
             self._t0 = None
             self._t_last = None
+        self._access.reset()
         self._trace_base = plans.trace_counts()
 
     # -------------------------------------------------------------- worker
@@ -627,11 +687,15 @@ class QueryServer:
         for seg in _segments(batch):
             if seg[0].kind == "ingest" and len({r.kind for r in seg}) == 1:
                 self._serve_ingest(seg)
+            elif (seg[0].kind == "replicate"
+                  and len({r.kind for r in seg}) == 1):
+                self._serve_replicate(seg)
             else:
                 fused = serve_segment(self._eng, seg, self._epoch)
                 if fused:
                     with self._cv:
                         self._fused_batches += fused
+            note_access(self._access, seg)
             now = time.monotonic()
             with self._cv:
                 self._t_last = now
@@ -649,3 +713,25 @@ class QueryServer:
             with self._cv:
                 self._epoch += 1
                 r.result = r.epoch = self._epoch
+
+    def _serve_replicate(self, run: list[_Request]) -> None:
+        """Apply replica-set changes as a worker barrier (like ingest).
+
+        A ``policy`` request resolves its hot set here, on the worker,
+        so every query queued before it has already been folded into the
+        access counters. The epoch never bumps — replication is
+        answer-preserving by construction.
+        """
+        for r in run:
+            ids, policy = r.payload
+            try:
+                if ids is None:
+                    ids = policy.hot_vertices(self._access)
+                self._eng.replicate(ids)
+            except Exception as e:  # noqa: BLE001
+                r.error = e
+                continue
+            installed = self._eng.replicated_ids
+            r.result = (installed if installed is not None
+                        else np.zeros(0, np.int64))
+            r.epoch = self._epoch

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.serve.frontend import DeadlineExceeded, Overloaded
-from repro.serve.loadgen import LoadReport, closed_loop, open_loop
+from repro.serve.loadgen import (LoadReport, ZipfSampler, closed_loop,
+                                 open_loop, request_mix, sample_vertices)
 
 
 def test_closed_loop_counts_and_determinism():
@@ -94,3 +95,84 @@ def test_latency_is_measured():
     rep = closed_loop(mix, clients=1, requests_per_client=3)
     assert all(lat >= 0.01 for _, _, lat in rep.records)
     assert rep.summary()["p50_ms"] >= 10.0
+
+
+# ----------------------------------------------------- Zipfian key sampling
+def test_zipf_sampler_range_skew_determinism():
+    n = 1000
+    zs = ZipfSampler(n, s=1.2)
+    ids = zs.sample(np.random.default_rng(0), 20000)
+    assert ids.dtype == np.int64
+    assert ids.min() >= 0 and ids.max() < n
+    counts = np.bincount(ids, minlength=n)
+    # hot ranks dominate: the top 1% of ids outweigh the bottom half
+    assert counts[: n // 100].sum() > counts[n // 2:].sum()
+    # rank order: id 0 is the hottest
+    assert counts[0] == counts.max()
+    # deterministic given the caller's RNG
+    again = zs.sample(np.random.default_rng(0), 20000)
+    np.testing.assert_array_equal(ids, again)
+    with pytest.raises(ValueError):
+        ZipfSampler(0)
+    with pytest.raises(ValueError):
+        ZipfSampler(10, s=0.0)
+
+
+def test_sample_vertices_dispatch():
+    rng = np.random.default_rng(3)
+    u = sample_vertices(rng, 50, (4, 2))
+    assert u.shape == (4, 2) and u.min() >= 0 and u.max() < 50
+    z1 = sample_vertices(np.random.default_rng(3), 50, 100, dist="zipf", s=2.0)
+    z2 = sample_vertices(np.random.default_rng(3), 50, 100, dist="zipf", s=2.0)
+    np.testing.assert_array_equal(z1, z2)
+    with pytest.raises(ValueError):
+        sample_vertices(rng, 50, 3, dist="pareto")
+
+
+class _RecordingServer:
+    """Captures the ids each thunk submits (no engine behind it)."""
+
+    def __init__(self):
+        self.union_calls = []
+        self.pair_calls = []
+        self.degree_calls = 0
+
+    def union_size(self, sets):
+        self.union_calls.append(np.asarray(sets))
+
+    def intersection_size(self, pairs):
+        self.pair_calls.append(np.asarray(pairs))
+
+    def degrees(self):
+        self.degree_calls += 1
+
+
+def test_request_mix_shapes_and_distribution():
+    srv = _RecordingServer()
+    mix = request_mix(srv, 200, batch=4, set_size=3, dist="zipf", s=1.5,
+                      seed=1, kinds=("union", "intersection", "degrees"))
+    assert [k for k, _ in mix] == ["union", "intersection", "degrees"]
+    for _, thunk in mix:
+        for _ in range(20):
+            thunk()
+    assert all(c.shape == (4, 3) for c in srv.union_calls)
+    assert all(c.shape == (4, 2) for c in srv.pair_calls)
+    assert srv.degree_calls == 20
+    ids = np.concatenate([c.ravel() for c in srv.union_calls])
+    assert ids.min() >= 0 and ids.max() < 200
+    counts = np.bincount(ids, minlength=200)
+    assert counts[:10].sum() > counts[100:].sum()  # skew reached the wire
+    with pytest.raises(ValueError, match="unknown mix kinds"):
+        request_mix(srv, 200, kinds=("union", "triangle"))
+    with pytest.raises(ValueError, match="dist"):
+        request_mix(srv, 200, dist="normal")
+
+
+def test_request_mix_through_both_generators():
+    srv = _RecordingServer()
+    mix = request_mix(srv, 100, batch=2, dist="zipf", s=1.2, seed=4)
+    rep = closed_loop(mix, clients=2, requests_per_client=10, seed=5)
+    assert rep.summary()["errors"] == 0
+    rep = open_loop(mix, rate=150.0, duration=0.2, seed=6)
+    assert rep.summary()["errors"] == 0
+    assert srv.union_calls or srv.pair_calls

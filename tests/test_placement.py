@@ -1,0 +1,307 @@
+"""Workload-aware placement: access stats, hot-vertex replication.
+
+Acceptance contract (ISSUE 8):
+(a) ``AccessStats`` folds per-vertex x per-kind counters cheaply and
+    reports a JSON-serializable hot-set snapshot;
+(b) ``PlacementPolicy`` picks the top-K hot vertices, and installing
+    them via ``engine.replicate`` leaves EVERY query answer bit-identical
+    on both backends and layouts — replica rows are byte copies of the
+    owner rows, and the union-max estimator is idempotent over copies;
+(c) replica rows refresh on version bumps (ingest after replicate) and
+    survive ``save``/``load`` (the id set is the durable decision);
+(d) both servers count accesses in their serve loops and apply
+    ``replicate`` (explicit ids or a policy resolved against the served
+    counters) without changing any in-flight answer.
+"""
+import json
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.core.hll import HLLConfig
+from repro.core.intersection import _NEWTON_ITERS
+from repro.engine import placement
+from repro.engine.base import SnapshotFrozen
+from repro.engine.placement import AccessStats, PlacementPolicy
+from repro.graph import generators as gen
+
+CFG = HLLConfig(p=8)
+BACKENDS = ["local", "sharded"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+def _build(edges, n, backend):
+    return engine.build(edges, n, CFG, backend=backend,
+                        shards=1 if backend == "sharded" else None)
+
+
+# --------------------------------------------------------------- AccessStats
+def test_access_stats_counts_and_topk():
+    acc = AccessStats(10)
+    acc.note_ids("union", [1, 1, 3])
+    acc.note_ids("union", [1])
+    acc.note_ids("intersection", [3, 5])
+    acc.note_query("degrees")
+    counts = acc.counts()
+    assert counts[1] == 3 and counts[3] == 2 and counts[5] == 1
+    assert counts.sum() == 6
+    ids, cnt = acc.top_k(2)
+    np.testing.assert_array_equal(ids, [1, 3])
+    np.testing.assert_array_equal(cnt, [3, 2])
+    assert acc.totals() == {"union": 4, "intersection": 2, "degrees": 1}
+    # per-kind filtering
+    assert acc.counts(kinds=("intersection",))[1] == 0
+
+
+def test_access_stats_zero_counts_excluded_and_reset():
+    acc = AccessStats(8)
+    acc.note_ids("union", [2])
+    ids, cnt = acc.top_k(5)  # only one vertex was ever touched
+    np.testing.assert_array_equal(ids, [2])
+    np.testing.assert_array_equal(cnt, [1])
+    acc.reset()
+    ids, cnt = acc.top_k(5)
+    assert len(ids) == 0 and len(cnt) == 0
+    assert acc.totals() == {}
+
+
+def test_access_stats_out_of_range_ignored():
+    acc = AccessStats(4)
+    acc.note_ids("union", [-1, 0, 3, 4, 99])  # only 0 and 3 are in range
+    assert acc.counts().sum() == 2
+
+
+def test_access_stats_snapshot_json_serializable():
+    acc = AccessStats(6)
+    acc.note_ids("union", np.arange(6))
+    snap = acc.snapshot(top=3)
+    decoded = json.loads(json.dumps(snap))  # must round-trip as plain JSON
+    assert decoded["totals"]["union"] == 6
+    assert len(decoded["top"]) == 3
+    assert all(len(pair) == 2 for pair in decoded["top"])
+
+
+# ----------------------------------------------------------- PlacementPolicy
+def test_policy_hot_vertices_topk_and_min_count():
+    acc = AccessStats(10)
+    acc.note_ids("union", [7] * 5 + [2] * 3 + [9])
+    hot = PlacementPolicy(top_k=2).hot_vertices(acc)
+    np.testing.assert_array_equal(hot, [2, 7])  # sorted, not hotness order
+    hot = PlacementPolicy(top_k=8, min_count=2).hot_vertices(acc)
+    np.testing.assert_array_equal(hot, [2, 7])  # vertex 9 below min_count
+    assert len(PlacementPolicy().hot_vertices(AccessStats(10))) == 0
+
+
+def test_remap_ids_hand_example():
+    hot = np.array([3, 8], dtype=np.int64)
+    ids = np.array([0, 3, 7, 8], dtype=np.int64)
+    out = placement.remap_ids(ids, hot, base=100)
+    np.testing.assert_array_equal(out, [0, 100, 7, 101])
+    assert out.dtype == ids.dtype
+
+
+def test_gather_traffic_hand_example():
+    # 8 padded vertices on 2 shards: owner = id // 4
+    ids = np.array([0, 1, 5, 5, 5])
+    off = placement.gather_traffic(ids, n_pad=8, shards=2)
+    np.testing.assert_array_equal(off, [2, 3])
+    on = placement.gather_traffic(ids, n_pad=8, shards=2, hot_ids=[5])
+    np.testing.assert_array_equal(on, [2, 0])
+    with pytest.raises(ValueError, match="divisible"):
+        placement.gather_traffic(ids, n_pad=7, shards=2)
+
+
+# ------------------------------------------------------- engine replication
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_replicate_bit_identical_answers(graph, backend):
+    edges, n = graph
+    base = _build(edges, n, backend)
+    eng = _build(edges, n, backend)
+    hot = np.unique(edges[:64, 0].astype(np.int64))
+    eng.replicate(hot)
+    np.testing.assert_array_equal(eng.replicated_ids, np.unique(hot))
+    sets = [np.array([0, 1, 2]), hot[:5], np.arange(20)]
+    pairs = edges[:13]
+    np.testing.assert_array_equal(eng.union_size(sets),
+                                  base.union_size(sets))
+    np.testing.assert_array_equal(eng.intersection_size(pairs),
+                                  base.intersection_size(pairs))
+    np.testing.assert_array_equal(eng.degrees(), base.degrees())
+    got = eng.query_batch(vertex_sets=sets, pairs=pairs, degrees=True)
+    want = base.query_batch(vertex_sets=sets, pairs=pairs, degrees=True)
+    for key in ("degrees", "union", "intersection"):
+        np.testing.assert_array_equal(got[key], want[key])
+    for schedule in ("ring", "allgather"):
+        l1, g1 = eng.neighborhood(2, schedule=schedule)
+        l2, g2 = base.neighborhood(2, schedule=schedule)
+        np.testing.assert_array_equal(l1, l2)
+        np.testing.assert_array_equal(g1, g2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_replica_rows_refresh_after_ingest(graph, backend):
+    """The refresh protocol: a version bump re-gathers the hot rows."""
+    edges, n = graph
+    half = len(edges) // 2
+    eng = _build(edges[:half], n, backend)
+    hot = np.unique(edges[:32, 1].astype(np.int64))
+    eng.replicate(hot)
+    eng.ingest(edges[half:])
+    base = _build(edges, n, backend)
+    sets = [hot[:4], np.arange(8)]
+    np.testing.assert_array_equal(eng.union_size(sets),
+                                  base.union_size(sets))
+    np.testing.assert_array_equal(eng.intersection_size(edges[:9]),
+                                  base.intersection_size(edges[:9]))
+
+
+def test_replicate_clear_and_validation(graph):
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng.replicate([1, 2, 3])
+    assert len(eng.replicated_ids) == 3
+    eng.replicate([])  # empty set clears
+    assert eng.replicated_ids is None
+    with pytest.raises(ValueError, match="integer"):
+        eng.replicate(np.array([0.5, 1.5]))
+    with pytest.raises(ValueError, match="universe"):
+        eng.replicate([n + 7])
+    with pytest.raises(ValueError, match="universe"):
+        eng.replicate([-1])
+
+
+def test_snapshot_carries_replicas_and_is_frozen(graph):
+    edges, n = graph
+    eng = _build(edges, n, "local")
+    eng.replicate([0, 1, 2])
+    snap = eng.snapshot()
+    np.testing.assert_array_equal(snap.replicated_ids, [0, 1, 2])
+    with pytest.raises(SnapshotFrozen):
+        snap.replicate([5])
+    # the snapshot answers identically even as the writer moves on
+    sets = [np.array([0, 1]), np.array([2])]
+    want = eng.union_size(sets)
+    eng.ingest(edges[:50])
+    np.testing.assert_array_equal(snap.union_size(sets), want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_replica_ids_survive_save_load(graph, backend):
+    edges, n = graph
+    eng = _build(edges, n, backend)
+    eng.replicate([3, 1, 4, 1, 5])
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d)
+        for back2 in BACKENDS:  # incl. cross-backend restore
+            eng2 = engine.load(d, backend=back2,
+                               shards=1 if back2 == "sharded" else None)
+            np.testing.assert_array_equal(eng2.replicated_ids, [1, 3, 4, 5])
+            np.testing.assert_array_equal(eng2.union_size([[1, 3], [4]]),
+                                          eng.union_size([[1, 3], [4]]))
+
+
+# ----------------------------------------------------------- DistPlan routing
+def test_dist_plan_replica_grouping(graph):
+    """Hot-source edges leave the exchange groups for the replica pre-pass."""
+    from repro.distributed import sketch_dist as sd
+    edges, n = graph
+    rep_ids = np.unique(edges[:16, 0].astype(np.int64))
+    plain = sd.build_plan(edges, n, num_shards=2)
+    plan = sd.build_plan(edges, n, num_shards=2, replica_ids=rep_ids)
+    assert not plain.has_replicas and plan.has_replicas
+    np.testing.assert_array_equal(plan.rep_ids, rep_ids)
+    # every directed propagate edge lands in exactly one of: the exchange
+    # groups (src not replicated) or the replica pre-pass arrays — in
+    # both the ring and all_gather routings
+    rep_edges = int(plan.rep_mask.sum())
+    assert rep_edges > 0
+    assert (int(plan.ring_mask.sum()) + rep_edges
+            == int(plain.ring_mask.sum()))
+    assert (int(plan.flat_mask.sum()) + rep_edges
+            == int(plain.flat_mask.sum()))
+    # replica slots index into the padded gather id list
+    slots = plan.rep_slot[plan.rep_mask]
+    assert slots.min() >= 0 and slots.max() < len(plan.rep_gids)
+    np.testing.assert_array_equal(plan.rep_gids[: len(rep_ids)], rep_ids)
+    # accumulate/triangle routing is replica-independent
+    np.testing.assert_array_equal(plan.acc_dst_local, plain.acc_dst_local)
+    np.testing.assert_array_equal(plan.tri_u, plain.tri_u)
+
+
+# ------------------------------------------------------------------ serving
+def test_query_server_access_stats_and_replicate(graph):
+    edges, n = graph
+    direct = _build(edges, n, "local")
+    with serve.QueryServer(_build(edges, n, "local")) as srv:
+        sets = [np.array([5, 6]), np.array([7])]
+        pairs = edges[:4]
+        u = srv.union_size(sets)
+        i = srv.intersection_size(pairs)
+        st = srv.stats()
+        assert st["replicated"] == 0
+        assert st["access"]["totals"]["union"] == 3  # 3 ids touched
+        assert st["access"]["totals"]["intersection"] == 8
+        hot = [v for v, _ in st["access"]["top"]]
+        assert set(hot) <= set([5, 6, 7] + edges[:4].ravel().tolist())
+        installed = srv.replicate(policy=PlacementPolicy(top_k=4))
+        assert 0 < len(installed) <= 4
+        assert srv.stats()["replicated"] == len(installed)
+        np.testing.assert_array_equal(srv.union_size(sets), u)
+        np.testing.assert_array_equal(srv.intersection_size(pairs), i)
+        np.testing.assert_array_equal(u, direct.union_size(sets))
+        # explicit ids, then clear; exactly-one-of validation
+        srv.replicate([1, 2])
+        assert len(srv.replicate([])) == 0
+        with pytest.raises(ValueError, match="exactly one"):
+            srv.replicate([1], policy=PlacementPolicy())
+        with pytest.raises(ValueError, match="exactly one"):
+            srv.replicate()
+        srv.reset_stats()
+        assert srv.stats()["access"]["top"] == []
+
+
+def test_continuous_server_replicate_publishes(graph):
+    edges, n = graph
+    direct = _build(edges, n, "local")
+    eng = engine.open(n, CFG, backend="local")
+    with serve.ContinuousServer(eng) as srv:
+        srv.ingest(edges)
+        srv.flush()
+        sets = [np.array([0, 1]), np.arange(6)]
+        u = srv.union_size(sets)
+        installed = srv.replicate(policy=PlacementPolicy(top_k=4))
+        assert len(installed) > 0  # the union above touched vertices
+        st = srv.stats()
+        assert st["replicated"] == len(installed)
+        assert st["access"]["totals"]["union"] == 8
+        np.testing.assert_array_equal(srv.union_size(sets), u)
+        np.testing.assert_array_equal(u, direct.union_size(sets))
+        # ingest after replicate: served answers still track the writer
+        srv.ingest(edges[:64])
+        srv.flush()
+        ref = _build(np.concatenate([edges, edges[:64]]), n, "local")
+        np.testing.assert_array_equal(srv.union_size(sets),
+                                      ref.union_size(sets))
+        np.testing.assert_array_equal(srv.degrees(), ref.degrees())
+
+
+def test_mixed_replica_batch_method_knobs(graph):
+    """The replica mixed plan honors method/iters like the plain one."""
+    edges, n = graph
+    base = _build(edges, n, "local")
+    eng = _build(edges, n, "local").replicate(np.arange(10))
+    for method in ("mle", "ie"):
+        got = eng.query_batch(pairs=edges[:6], vertex_sets=[np.arange(4)],
+                              method=method, iters=_NEWTON_ITERS)
+        want = base.query_batch(pairs=edges[:6], vertex_sets=[np.arange(4)],
+                                method=method, iters=_NEWTON_ITERS)
+        np.testing.assert_array_equal(got["intersection"],
+                                      want["intersection"])
+        np.testing.assert_array_equal(got["union"], want["union"])

@@ -1,0 +1,140 @@
+"""Elastic resharding: save at S shards, load at S' — answers identical.
+
+Acceptance contract (ISSUE 8): the register rows are the canonical
+state, so ``engine.load(path, shards=S2)`` rebuilds the vertex partition
+and (lazily) the routing ``DistPlan`` straight from the saved panel —
+rows are repartitioned, no edge replay — and every query answers
+bit-identically at any shard count, on both register layouts, with a
+saved hot-vertex replica set reinstalled along the way (DESIGN.md §12).
+
+The in-process tests cover the single-device shard counts the main
+pytest session can host; the 8-device subprocess (slow marker, same
+pattern as tests/test_engine.py) saves at S=4 and restores at
+S' in {1, 2, 8}.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.graph import generators as gen
+
+CFG = HLLConfig(p=8)
+LAYOUTS = ["byte", "packed"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=5)
+    return edges, int(edges.max()) + 1
+
+
+def _assert_same_answers(a, b, edges, n):
+    np.testing.assert_array_equal(a.degrees(), b.degrees())
+    sets = [np.array([0, 1, 2]), np.arange(17), np.array([n - 1])]
+    np.testing.assert_array_equal(a.union_size(sets), b.union_size(sets))
+    np.testing.assert_array_equal(a.intersection_size(edges[:11]),
+                                  b.intersection_size(edges[:11]))
+    for schedule in ("ring", "allgather"):
+        l1, g1 = a.neighborhood(2, schedule=schedule)
+        l2, g2 = b.neighborhood(2, schedule=schedule)
+        np.testing.assert_array_equal(l1, l2)
+        np.testing.assert_array_equal(g1, g2)
+    # triangle totals reduce in backend-specific order (float sums), so
+    # cross-backend comparison is tolerance-based like tests/test_engine.py
+    t1 = a.triangle_heavy_hitters(5)
+    t2 = b.triangle_heavy_hitters(5)
+    assert abs(t1[0] - t2[0]) <= 1e-3 * abs(t1[0]), (t1[0], t2[0])
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_reshard_local_to_sharded_and_back(graph, layout):
+    edges, n = graph
+    local = engine.build(edges, n, CFG, backend="local", layout=layout)
+    with tempfile.TemporaryDirectory() as d:
+        local.save(d)
+        sharded = engine.load(d, backend="sharded", shards=1)
+        assert sharded.backend == "sharded" and sharded.shards == 1
+        assert sharded.layout == layout
+        _assert_same_answers(local, sharded, edges, n)
+        with tempfile.TemporaryDirectory() as d2:
+            sharded.save(d2)
+            back = engine.load(d2, backend="local")
+            assert back.backend == "local"
+            _assert_same_answers(local, back, edges, n)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_reshard_preserves_replicas(graph, layout):
+    edges, n = graph
+    hot = np.unique(edges[:24, 0].astype(np.int64))
+    local = engine.build(edges, n, CFG, backend="local", layout=layout)
+    local.replicate(hot)
+    with tempfile.TemporaryDirectory() as d:
+        local.save(d)
+        sharded = engine.load(d, backend="sharded", shards=1)
+        np.testing.assert_array_equal(sharded.replicated_ids, hot)
+        _assert_same_answers(local, sharded, edges, n)
+
+
+def test_reshard_resumes_ingest(graph):
+    """A mid-stream checkpoint restored at another shard count resumes."""
+    edges, n = graph
+    half = len(edges) // 2
+    local = engine.build(edges[:half], n, CFG, backend="local")
+    with tempfile.TemporaryDirectory() as d:
+        local.save(d)
+        sharded = engine.load(d, backend="sharded", shards=1)
+        sharded.ingest(edges[half:])
+        full = engine.build(edges, n, CFG, backend="local")
+        _assert_same_answers(full, sharded, edges, n)
+
+
+_SCRIPT_RESHARD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, tempfile
+from repro import engine
+from repro.core.hll import HLLConfig
+from repro.graph import generators as gen
+
+edges = gen.rmat(8, 8, seed=5); n = int(edges.max()) + 1
+cfg = HLLConfig(p=8)
+hot = np.unique(edges[:24, 0].astype(np.int64))
+src = engine.build(edges, n, cfg, backend="sharded", shards=4)
+src.replicate(hot)
+sets = [np.array([0, 1, 2]), np.arange(17)]
+want_deg = np.asarray(src.degrees())
+want_u = np.asarray(src.union_size(sets))
+want_i = np.asarray(src.intersection_size(edges[:11]))
+_, want_g = src.neighborhood(2, schedule="ring")
+with tempfile.TemporaryDirectory() as d:
+    src.save(d)
+    for s2 in (1, 2, 8):
+        eng = engine.load(d, shards=s2)
+        assert eng.shards == s2, (eng.shards, s2)
+        assert np.array_equal(eng.replicated_ids, hot), s2
+        assert np.array_equal(np.asarray(eng.degrees()), want_deg), s2
+        assert np.array_equal(np.asarray(eng.union_size(sets)), want_u), s2
+        assert np.array_equal(
+            np.asarray(eng.intersection_size(edges[:11])), want_i), s2
+        _, g = eng.neighborhood(2, schedule="ring")
+        assert np.array_equal(np.asarray(g), np.asarray(want_g)), s2
+print("RESHARD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_reshard_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _SCRIPT_RESHARD], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "RESHARD_OK" in res.stdout, res.stdout + "\n" + res.stderr

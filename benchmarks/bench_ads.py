@@ -1,0 +1,133 @@
+"""ADS family acceptance: HIP accuracy vs exact BFS + served throughput.
+
+The sketch-family abstraction (DESIGN.md §13) lands All-Distances
+Sketches as the second engine family; this harness is its acceptance
+gate. For each cell it builds an ADS engine, serves the three HIP
+distance queries end-to-end through ``repro.serve.QueryServer`` — the
+same micro-batch frontend the HLL kinds ride — and scores the answers
+against the exact BFS oracle (``repro.graph.exact.neighborhood_truth``):
+
+* ``global_mre`` — mean relative error of the served global neighborhood
+  curve sum(hist[:t]) against the exact curve, over hops 1..t_max;
+* ``pervertex_mre`` — the same, per vertex, over cells with non-zero
+  truth (isolated vertices carry no information about the estimator);
+* ``eff_diam_abs_err`` — |served effective diameter − the same quantile
+  interpolation applied to the exact curve|, so the cell isolates
+  estimator error from interpolation convention;
+* ``curve_accuracy`` — the gated headline, ``1 / (1 + global_mre)``:
+  monotone in accuracy, bounded in (0, 1], and fully deterministic
+  (seeded graph, seeded hashes, no timing), so the regression gate runs
+  ``"device": "modeled"`` with a zero jitter floor — any drop is a real
+  estimator/serving regression (the ``BENCH_roofline`` precedent).
+
+``qps`` (served distance queries per second, post-warmup) rides along as
+informational context and is never gated — wall-clock on shared runners
+is jitter, accuracy is not.
+
+    PYTHONPATH=src:. python benchmarks/bench_ads.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, graph_suite
+from repro import engine
+from repro.core.ads import ADSConfig, effective_diameter_from_curve
+from repro.graph import exact
+from repro.serve import QueryServer
+
+P = 8                    # 256 registers: rel_std ~ 6.5% per vertex
+T_MAX = 4                # BFS horizon scored against the oracle
+Q = 0.9                  # effective-diameter quantile
+QPS_REQUESTS = 32        # timed distance queries for the qps field
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_ads.json")
+
+
+def _score(hist: np.ndarray, glob: np.ndarray, eff: float,
+           truth: np.ndarray) -> dict:
+    """Accuracy fields for one served cell vs the int64[t,n] BFS truth."""
+    curve = np.cumsum(np.asarray(hist, np.float64), axis=0)
+    truth_glob = truth.sum(axis=1).astype(np.float64)
+    est_glob = np.cumsum(np.asarray(glob, np.float64))
+    global_mre = float(np.mean(
+        np.abs(est_glob - truth_glob) / np.maximum(truth_glob, 1.0)))
+    mask = truth > 0
+    pervertex_mre = float(np.mean(
+        np.abs(curve[mask] - truth[mask]) / truth[mask]))
+    eff_exact = effective_diameter_from_curve(truth_glob, q=Q)
+    return {
+        "global_mre": global_mre,
+        "pervertex_mre": pervertex_mre,
+        "curve_accuracy": 1.0 / (1.0 + global_mre),
+        "eff_diam_est": float(eff),
+        "eff_diam_exact": float(eff_exact),
+        "eff_diam_abs_err": float(abs(eff - eff_exact)),
+    }
+
+
+def run(small: bool = True, quick: bool = False, out: str | None = None,
+        ) -> None:
+    """Sweep graphs x backends; print CSV + write BENCH_ads.json.
+
+    ``quick`` restricts to the rmat9/local CI gate cell; the accuracy
+    metrics are seed-deterministic, so the quick cell reproduces the
+    committed baseline exactly on any machine. ``out`` redirects the
+    JSON so gate runs never dirty the checkout.
+    """
+    cfg = ADSConfig(p=P)
+    suite = graph_suite(small)
+    names = ["rmat9", "er_dense"] if not quick else ["rmat9"]
+    backends = ["local"] if quick else ["local", "sharded"]
+    records = []
+    for name in names:
+        edges = suite[name]
+        n = int(edges.max()) + 1
+        truth = exact.neighborhood_truth(n, edges, T_MAX)
+        for backend in backends:
+            eng = engine.build(edges, n, cfg, backend=backend, family="ads")
+            with QueryServer(eng) as srv:
+                hist, glob = srv.distance_histogram(T_MAX)
+                eff = srv.effective_diameter(T_MAX, q=Q)
+                srv.closeness(T_MAX)  # exercised end-to-end, not scored
+                # qps: warm panels + plans above, then time a mixed wave
+                t0 = time.time()
+                for i in range(QPS_REQUESTS):
+                    kind = i % 3
+                    if kind == 0:
+                        srv.distance_histogram(1 + i % T_MAX)
+                    elif kind == 1:
+                        srv.closeness(T_MAX)
+                    else:
+                        srv.effective_diameter(T_MAX, q=Q)
+                seconds = time.time() - t0
+            rec = {"graph": name, "n": n, "m": int(len(edges)),
+                   "backend": backend, "impl": "ref", "p": P,
+                   "t_max": T_MAX, "q": Q,
+                   **_score(np.asarray(hist), np.asarray(glob),
+                            float(eff), truth),
+                   "requests": QPS_REQUESTS, "seconds": seconds,
+                   "qps": QPS_REQUESTS / max(seconds, 1e-9)}
+            records.append(rec)
+            emit(f"ads/{name}/{backend}", 1e6 * seconds / QPS_REQUESTS,
+                 f"curve_accuracy={rec['curve_accuracy']:.4f};"
+                 f"global_mre={rec['global_mre']:.4f};"
+                 f"eff_diam={rec['eff_diam_est']:.2f}"
+                 f"(exact {rec['eff_diam_exact']:.2f})")
+    payload = {"benchmark": "ads", "p": P,
+               # the gated metric (curve_accuracy) is seed-deterministic
+               # and timing-free, like BENCH_roofline/BENCH_shard — so
+               # the gate never skips on device mismatch; qps is the only
+               # timed field and it is informational, never compared
+               "device": "modeled", "results": records}
+    path = out or OUT
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    run()

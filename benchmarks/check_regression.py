@@ -70,6 +70,16 @@ SUITES = [
         "guard": ("traffic_ratio", 0.0),  # analytic metric: no jitter floor
     },
     {
+        "file": "BENCH_ads.json",
+        "key": ("graph", "backend"),
+        "metric": "curve_accuracy",  # HIP curve vs exact BFS oracle:
+        # seed-deterministic and timing-free, so any drop is a real
+        # estimator or serving regression (qps in the same file is
+        # informational and never compared)
+        "higher_is_better": True,
+        "guard": ("curve_accuracy", 0.0),  # analytic: no jitter floor
+    },
+    {
         "file": "BENCH_load.json",
         "key": ("graph", "loop"),
         "metric": "p99_speedup",  # barrier/continuous p99: machine-neutral

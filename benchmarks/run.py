@@ -32,7 +32,7 @@ def main() -> None:
     small = not args.full
 
     from benchmarks import (
-        bench_density, bench_heavyhitters, bench_intersection,
+        bench_ads, bench_density, bench_heavyhitters, bench_intersection,
         bench_kernels, bench_load, bench_neighborhood, bench_queryfusion,
         bench_scaling, bench_serve, bench_shard, bench_theorem1,
         roofline_report,
@@ -58,6 +58,8 @@ def main() -> None:
             small=small, quick=args.quick, out=_out(roofline_report.OUT)),
         "shard": lambda: bench_shard.run(
             small=small, quick=args.quick, out=_out(bench_shard.OUT)),
+        "ads": lambda: bench_ads.run(
+            small=small, quick=args.quick, out=_out(bench_ads.OUT)),
     }
     suites = {
         **json_suites,

@@ -40,7 +40,47 @@ import ml_dtypes
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "read_manifest",
-           "latest_step", "AsyncCheckpointer"]
+           "latest_step", "AsyncCheckpointer", "FamilyMismatch",
+           "manifest_family", "require_family"]
+
+
+class FamilyMismatch(ValueError):
+    """A checkpoint's sketch family does not match the requested one.
+
+    Register bytes are family-portable (same uint8 panels), but their
+    *interpretation* is not: an ADS panel loaded as HLL would silently
+    serve Flajolet cardinalities where HIP curves were accumulated, and
+    vice versa. The engine layer therefore records the family name in
+    every manifest's ``extra`` and refuses cross-family restore/merge
+    with this typed error (DESIGN.md §13) instead of producing wrong
+    numbers.
+    """
+
+
+def manifest_family(extra: dict | None) -> str:
+    """The sketch family a manifest's ``extra`` dict records.
+
+    Checkpoints written before the family coordinate existed carry no
+    ``"family"`` key; they are all HLL by construction, so that is the
+    default — old checkpoints keep loading unchanged.
+    """
+    return (extra or {}).get("family", "hll")
+
+
+def require_family(extra: dict | None, expected: str, what: str) -> str:
+    """Assert a manifest's family matches ``expected``; return the name.
+
+    Raises :class:`FamilyMismatch` naming both families and the operation
+    (``what``, e.g. ``"load"``) otherwise.
+    """
+    saved = manifest_family(extra)
+    if saved != expected:
+        raise FamilyMismatch(
+            f"{what}: checkpoint holds a {saved!r}-family sketch but a "
+            f"{expected!r}-family engine was requested; register bytes do "
+            f"not change meaning across families — re-accumulate or load "
+            f"with family={saved!r}")
+    return saved
 
 # numpy can't serialize ml_dtypes (bfloat16 etc.); store them as a raw
 # uint16/uint8 view and record the logical dtype in the manifest
@@ -64,7 +104,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
 
     ``extra`` is an optional JSON-serializable dict stored verbatim in the
     manifest — consumers (e.g. ``repro.engine``) use it to persist config
-    that is not an array leaf (HLLConfig fields, backend, plan metadata).
+    that is not an array leaf (sketch config fields, family, backend,
+    plan metadata).
     """
     final = os.path.join(ckpt_dir, f"step_{step}")
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step}")

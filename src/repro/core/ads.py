@@ -1,0 +1,183 @@
+"""All-Distances Sketches (ADS) with batch HIP estimators.
+
+An All-Distances Sketch (Cohen, arXiv:1306.3284) summarizes, for every
+vertex ``v``, the *distance-ordered* stream of vertices reachable from
+``v``. The k-partition (HLL-style) instantiation keeps one max-rho
+register per bucket, so the register rows are byte-identical in shape
+and merge semantics to the HLL tables ``core.hll`` builds: ``uint8[n,
+r]`` with ``r = 2**p``, scatter-max accumulate, register-max merge.
+What changes is the *estimator*: ADS queries consume the whole hop
+sequence ``D^1[v] ⊆ D^2[v] ⊆ ...`` (the t-hop panels the engine already
+materializes, DESIGN.md §3c) through Historic Inverse Probability (HIP)
+estimates, unlocking distance-distribution, closeness-centrality and
+effective-diameter queries.
+
+Batch HIP (the estimator implemented here). Exact HIP processes
+elements one at a time in distance order: when an element changes the
+sketch it contributes the inverse probability of that change. Under the
+engine's batch-synchronous hops we only observe the register panel
+before and after each hop, so we use the per-register martingale form:
+a register going ``x -> y`` (``y > x``) witnesses at least one new
+element whose contribution, evaluated against the pre-hop state, is
+``2**x`` (an element lands in a given bucket with probability ``1/r``
+and exceeds ``x`` with probability ``2**-x``; each element touches one
+bucket, so its expected total contribution is exactly 1). Coalesced
+updates inside one hop (``x -> x' -> y`` observed as ``x -> y``) are
+undercounted, so the per-hop cumulative curve is *stabilized* by
+flooring it with the plain (Flajolet) estimate of the post-hop panel:
+
+    C^1 = plain(D^1)
+    C^t = max(C^{t-1} + hip_delta(D^{t-1}, D^t), plain(D^t))    t >= 2
+
+The curve is monotone non-decreasing by construction, so the distance
+histogram ``h^t = C^t - C^{t-1}`` is non-negative. Accuracy against the
+exact BFS oracle is gated in ``benchmarks/bench_ads.py``; the
+documented tolerance on the small test graphs is ~3x the HLL standard
+error ``1.04 / sqrt(r)`` on the global neighborhood-mass curve.
+
+Layout note: ADS rows are **byte layout only**. The packed 4-bit lanes
+saturate registers at 15 (DESIGN.md §11); HIP deltas weight a register
+at value ``x`` by ``2**x``, so saturation does not just bias the tail —
+it silently caps every inverse probability at ``2**15``. The family
+declares ``layouts=("byte",)`` and ``registry.resolve`` rejects packed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll
+
+__all__ = [
+    "ADSConfig", "hip_delta", "hip_curve", "distance_histogram",
+    "closeness_from_curve", "effective_diameter_from_curve", "rel_std",
+]
+
+
+@dataclass(frozen=True)
+class ADSConfig:
+    """Static configuration of a k-partition All-Distances Sketch family.
+
+    Attributes:
+      p: prefix size (number of bucket bits). r = 2**p registers per row —
+        identical register geometry to ``HLLConfig`` so ADS tables ride
+        the same accumulate/propagate/merge kernels.
+      seed: hash seed; sketches merged together must share it.
+      estimator: "hip" — the batch HIP curve estimator (module
+        docstring). The plain per-row floor always uses the Flajolet
+        combination; there is no beta variant for ADS.
+    """
+    p: int = 8
+    seed: int = 0
+    estimator: str = "hip"
+
+    @property
+    def r(self) -> int:
+        """Registers per row (2**p) — one byte each; byte layout only."""
+        return 1 << self.p
+
+    @property
+    def q(self) -> int:
+        """Hash suffix bits available for the rank (64 - p)."""
+        return 64 - self.p
+
+    @property
+    def max_register(self) -> int:
+        """Largest storable register value (q + 1, rank of all-zeros)."""
+        return self.q + 1
+
+
+def rel_std(p: int) -> float:
+    """HIP standard error ~= 1 / sqrt(2r) per estimate (Cohen §3.3)."""
+    return 1.0 / (2.0 * float(1 << p)) ** 0.5
+
+
+def hip_delta(prev: jax.Array, cur: jax.Array) -> jax.Array:
+    """Per-row batch-HIP increment between consecutive hop panels.
+
+    ``prev``/``cur``: uint8[..., r] byte-layout register rows with
+    ``cur >= prev`` element-wise (register max is monotone). Returns
+    float32[...]: ``sum_j [cur_j > prev_j] * 2**prev_j`` — the summed
+    inverse change probabilities of every register the hop grew.
+    """
+    grew = cur > prev
+    inv_p = jnp.exp2(prev.astype(jnp.float32))
+    return jnp.sum(jnp.where(grew, inv_p, 0.0), axis=-1)
+
+
+def hip_curve(panels, cfg: ADSConfig) -> np.ndarray:
+    """Stabilized cumulative HIP curve over hop panels ``D^1..D^T``.
+
+    ``panels``: sequence of byte-layout uint8[n, r] register panels (one
+    per hop, monotone under register max). Returns float64[T, n] with
+    ``C^t[v]`` = estimated neighborhood mass of ``v`` within ``t`` hops;
+    monotone non-decreasing in ``t`` (module docstring). Reference
+    implementation — the engine computes the same curve incrementally
+    through its plan cache and caches it beside the panels.
+    """
+    curve = []
+    for t, panel in enumerate(panels):
+        plain = np.asarray(hll.estimate_flajolet(panel, _plain_cfg(cfg)),
+                           np.float64)
+        if t == 0:
+            c = plain
+        else:
+            delta = np.asarray(hip_delta(panels[t - 1], panel), np.float64)
+            c = np.maximum(curve[-1] + delta, plain)
+        curve.append(c)
+    return np.stack(curve, axis=0)
+
+
+def _plain_cfg(cfg: ADSConfig) -> hll.HLLConfig:
+    """The HLL view of an ADS config (same registers, Flajolet floor)."""
+    return hll.HLLConfig(p=cfg.p, seed=cfg.seed, estimator="flajolet")
+
+
+def distance_histogram(curve: np.ndarray) -> np.ndarray:
+    """Per-distance mass ``h^t = C^t - C^{t-1}`` from a HIP curve.
+
+    ``curve``: float64[T, n] monotone HIP curve. Returns float64[T, n]
+    with ``h[0] = C^1`` (mass at distance 1) and non-negative rows —
+    guaranteed by the curve's monotonicity, not clipping.
+    """
+    return np.diff(curve, axis=0, prepend=np.zeros((1, curve.shape[1])))
+
+
+def closeness_from_curve(curve: np.ndarray) -> np.ndarray:
+    """Horizon-T closeness centrality estimates from a HIP curve.
+
+    ``closeness[v] = C^T[v] / sum_t t * h^t[v]`` — reachable mass within
+    the horizon divided by the estimated total distance to it (vertices
+    with no estimated reachable mass get 0). float64[n].
+    """
+    hist = distance_histogram(curve)
+    t = np.arange(1, curve.shape[0] + 1, dtype=np.float64)
+    total_dist = np.einsum("t,tn->n", t, hist)
+    reach = curve[-1]
+    return np.divide(reach, total_dist,
+                     out=np.zeros_like(reach), where=total_dist > 0)
+
+
+def effective_diameter_from_curve(glob: np.ndarray, q: float = 0.9) -> float:
+    """Effective diameter: smallest (interpolated) ``t`` covering ``q``.
+
+    ``glob``: float64[T] global curve ``g[t] = sum_v C^t[v]`` (monotone).
+    Returns the linearly interpolated hop count at which the curve first
+    reaches ``q * g[T]``, in ``[0, T]`` (``g[0] := 0`` anchors the
+    interpolation below the first hop).
+    """
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"quantile q must be in (0, 1], got {q}")
+    g = np.concatenate([[0.0], np.asarray(glob, np.float64)])
+    target = q * g[-1]
+    if g[-1] <= 0:
+        return 0.0
+    t = int(np.searchsorted(g, target))
+    if t >= len(g):
+        return float(len(g) - 1)
+    if g[t] == g[t - 1]:
+        return float(t)
+    return float(t - 1) + float((target - g[t - 1]) / (g[t] - g[t - 1]))

@@ -1,0 +1,136 @@
+"""Built-in sketch families: HLL and ADS bound to the registry protocol.
+
+This module is the single place where family-specific ``repro.core``
+math (HLL estimators, Ertl intersection MLE, DegreeSketch triangle
+counting, batch-HIP curves) is bound to the engine-facing
+:class:`~repro.kernels.registry.SketchFamily` protocol. Everything above
+``core/`` — ``engine/``, ``serve/``, the plan builders — resolves these
+behaviors through ``kernels.registry`` by family *name*, never by
+importing the symbols below (enforced by ``tools/check_layering.py``).
+
+Imported once by ``registry._ensure_builtins`` so the built-ins
+self-register, exactly like the kernel impls in ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ads as ads_mod
+from repro.core import degreesketch as dsk
+from repro.core import hll as hll_mod
+from repro.core import intersection
+from repro.kernels import registry
+
+__all__ = ["HLLFamily", "ADSFamily", "HLL", "ADS"]
+
+
+def _unpack_if_packed(regs, layout: str):
+    """Transient full-width view of a possibly packed register panel."""
+    if layout == "packed":
+        from repro.kernels import packing
+        return packing.unpack_rows(regs)
+    return regs
+
+
+class HLLFamily(registry.SketchFamily):
+    """HyperLogLog: the paper's cardinality-sketch instantiation.
+
+    Registers are per-vertex max-rho tables (``core.hll``); queries are
+    point-in-time cardinalities — degrees, unions, Ertl-MLE
+    intersections, triangle heavy hitters — plus t-hop neighborhood
+    growth. Both register layouts are supported: the Flajolet/beta
+    combinations only read registers through ``min(reg, 15)``-safe
+    statistics at the p values the packed layout admits (DESIGN.md §11).
+    """
+
+    name = "hll"
+    config_cls = hll_mod.HLLConfig
+    ops = registry.OPS
+    layouts = ("byte", "packed")
+    query_kinds = ("degrees", "union", "intersection", "mixed",
+                   "neighborhood", "triangle")
+    default_estimator = "flajolet"
+    default_iters = intersection._NEWTON_ITERS
+
+    def empty_table(self, n, cfg, layout="byte"):
+        """Zeroed uint8[n, w] register table (w = r or r/2 packed)."""
+        return hll_mod.empty_table(n, cfg, layout=layout)
+
+    def resolve_fallback(self, estimator):
+        """Fused s/z kernels serve Flajolet only; others take the ref."""
+        if estimator == "flajolet":
+            return None
+        return (f"fused estimate kernel implements only the Flajolet s/z "
+                f"combination; estimator {estimator!r} uses the jnp "
+                f"reference (repro.core.hll.estimate)")
+
+    def fallback_estimate(self, regs, cfg, layout):
+        """Row estimates through ``core.hll.estimate`` (byte-layout code)."""
+        return hll_mod.estimate(_unpack_if_packed(regs, layout), cfg)
+
+    def estimate_from_pair_stats(self, stats, sz, cfg, method, iters):
+        """Ertl T̃(xy) estimates from fused pair statistics (§4.1)."""
+        return intersection.estimate_from_pair_stats(stats, sz, cfg, method,
+                                                     iters=iters)
+
+    def triangle_local(self, regs, n, cfg, edges, k, mode, iters, layout):
+        """Algorithms 4/5 over a single-device register panel."""
+        sketch = dsk.DegreeSketch(regs=_unpack_if_packed(regs, layout),
+                                  n=n, cfg=cfg)
+        if mode == "edge":
+            return dsk.triangle_heavy_hitters(sketch, edges, k, iters=iters)
+        if mode == "vertex":
+            return dsk.vertex_heavy_hitters(sketch, edges, k, iters=iters)
+        raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")
+
+
+class ADSFamily(registry.SketchFamily):
+    """All-Distances Sketches with batch-HIP estimators (``core.ads``).
+
+    Same register geometry and merge semantics as HLL — ADS tables ride
+    the identical accumulate/propagate kernels and the engine's t-hop
+    panel cache — but the query surface consumes the *hop sequence*
+    through HIP curves: distance histograms, closeness centrality and
+    effective diameter. Byte layout only: packed 4-bit lanes saturate at
+    15 and silently cap the ``2**x`` inverse change probabilities.
+    """
+
+    name = "ads"
+    config_cls = ads_mod.ADSConfig
+    ops = ("accumulate", "propagate", "estimate", "hip_delta")
+    layouts = ("byte",)
+    query_kinds = ("degrees", "neighborhood", "distance_histogram",
+                   "closeness", "effective_diameter")
+    default_estimator = "hip"
+    default_iters = None
+
+    def empty_table(self, n, cfg, layout="byte"):
+        """Zeroed uint8[n, r] register table (byte layout only)."""
+        if layout != "byte":
+            raise ValueError(
+                f"ADS register rows are byte-layout only, got {layout!r}")
+        return jnp.zeros((n, cfg.r), dtype=jnp.uint8)
+
+    def resolve_fallback(self, estimator):
+        """The fused s/z kernel serves the HIP plain floor; no fallback."""
+        if estimator != "hip":
+            raise ValueError(
+                f"ADS estimator must be 'hip', got {estimator!r}")
+        return None
+
+    def hip_histogram(self, curve):
+        """Per-hop distance histogram h^t = C^t - C^{t-1} (``core.ads``)."""
+        return ads_mod.distance_histogram(curve)
+
+    def hip_closeness(self, curve):
+        """Closeness centralities from the cumulative curve (``core.ads``)."""
+        return ads_mod.closeness_from_curve(curve)
+
+    def hip_effective_diameter(self, glob, q):
+        """Interpolated effective diameter at quantile ``q`` (``core.ads``)."""
+        return ads_mod.effective_diameter_from_curve(glob, q)
+
+
+#: the registered built-in family instances
+HLL = registry.register_family(HLLFamily())
+ADS = registry.register_family(ADSFamily())

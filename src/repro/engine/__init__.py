@@ -3,14 +3,13 @@
     from repro import engine
     from repro.graph.stream import EdgeStream
 
-    eng = engine.open(n, HLLConfig(p=10), backend="sharded", shards=8)
+    eng = engine.open(n, backend="sharded", shards=8)  # default hll config
     eng.ingest(edge_block)                  # incremental (Algorithm 1)
     eng.ingest_stream(EdgeStream(edges, num_substreams=4, block=4096))
     eng.save("/ckpt/web-graph")             # legal mid-stream
     eng.merge(other_engine)                 # lane-wise register max
 
-    eng = engine.build(edges, n, HLLConfig(p=10), backend="sharded",
-                       shards=8, impl="ref")     # = open + one ingest
+    eng = engine.build(edges, n, backend="sharded", shards=8, impl="ref")
     deg = eng.degrees()
     u   = eng.union_size([hubs, [0, 1], [42]])        # batched, ragged
     t   = eng.intersection_size(edge_pairs)           # batched T̃(xy)
@@ -20,9 +19,24 @@
     eng.save("/ckpt/web-graph")        # survives process restart
     eng2 = engine.load("/ckpt/web-graph")   # identical answers; can ingest
 
+    ads = engine.build(edges, n, family="ads")   # All-Distances Sketches
+    hist, glob_h = ads.distance_histogram(t_max=4)
+    close = ads.closeness(t_max=4)
+    d_eff = ads.effective_diameter(t_max=6, q=0.9)
+
+The **sketch family** (DESIGN.md §13) selects the estimator semantics
+layered over the shared register machinery: ``family="hll"`` (the
+default) serves cardinality queries — degrees, unions, intersections,
+triangles; ``family="ads"`` serves HIP distance queries — histograms,
+closeness, effective diameter. Pass either a ``family=`` name (the
+family's default config is used) or a family-specific ``cfg`` object —
+the config's type determines the family. Query kinds a family does not
+serve raise :class:`UnsupportedQuery`; loading or merging across
+families raises ``repro.ckpt.checkpoint.FamilyMismatch``.
+
 See DESIGN.md §3/§3a. The free-function drivers in
 ``repro.distributed.sketch_dist`` are the SPMD primitives the engine
-composes; the ``DegreeSketch`` dataclass methods remain the reference
+composes; the ``repro.core`` reference implementations remain the
 semantics the engine is tested against.
 """
 from __future__ import annotations
@@ -31,14 +45,14 @@ import os
 
 import numpy as np
 
-from repro.core.hll import HLLConfig
-from repro.engine.base import ENGINE_FORMAT, SketchEngine
+from repro.engine.base import ENGINE_FORMAT, SketchEngine, UnsupportedQuery
 from repro.engine.local import LocalEngine
 from repro.engine.sharded import ShardedEngine
 from repro.kernels import registry
 
-__all__ = ["SketchEngine", "LocalEngine", "ShardedEngine", "open", "build",
-           "load", "default_impl", "default_layout"]
+__all__ = ["SketchEngine", "LocalEngine", "ShardedEngine",
+           "UnsupportedQuery", "open", "build", "load", "default_impl",
+           "default_layout", "default_family"]
 
 
 def default_impl() -> str:
@@ -67,24 +81,53 @@ def default_layout() -> str:
     """
     return os.environ.get("REPRO_LAYOUT", "byte")
 
+
+def default_family() -> str:
+    """Sketch family used when callers pass neither ``family=`` nor a cfg.
+
+    Resolved from the ``REPRO_FAMILY`` environment variable (default
+    ``"hll"``), evaluated per call like :func:`default_impl` — the CI
+    smoke leg runs family-agnostic tests under ``REPRO_FAMILY=ads`` the
+    same way the impl/layout legs work (DESIGN.md §13). ``engine.load``
+    is unaffected — a checkpoint's recorded family wins (and an explicit
+    mismatching ``family=`` raises ``FamilyMismatch``).
+    """
+    return os.environ.get("REPRO_FAMILY", "hll")
+
+
 _BACKENDS = {"local": LocalEngine, "sharded": ShardedEngine}
 
 
-def _validate(backend: str, shards, impl: str,
-              layout: str = "byte") -> None:
+def _validate(backend: str, shards, impl: str, layout: str = "byte",
+              family: str = "hll") -> None:
     """Shared argument validation — fail before any accumulation work."""
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
                          f"got {backend!r}")
     # capability check against the kernel registry (incl. layout support)
-    registry.resolve(impl, layout=layout)
+    registry.resolve(impl, layout=layout, family=family)
     if backend != "sharded" and shards is not None:
         raise ValueError("shards= only applies to backend='sharded'")
 
 
-def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
+def _resolve_cfg(cfg, family: str | None):
+    """Resolve the (cfg, family name) pair from what the caller passed.
+
+    The config's type is authoritative: a cfg picks its family through
+    the registry (``family=`` must then agree — ``TypeError`` from
+    ``registry.resolve`` otherwise); without a cfg, ``family`` (or
+    :func:`default_family`) picks the family's default config.
+    """
+    if cfg is None:
+        fam = registry.family(family or default_family())
+        return fam.default_config(), fam.name
+    return cfg, (family or registry.family_of(cfg).name)
+
+
+def open(n: int, cfg=None, *, backend: str = "local",
          shards: int | None = None, impl: str | None = None,
-         layout: str | None = None) -> SketchEngine:
+         layout: str | None = None,
+         family: str | None = None) -> SketchEngine:
     """An empty engine over vertex universe [0, n), ready to ingest.
 
     This is the streaming entry point (Algorithm 1 as a lifecycle): the
@@ -96,8 +139,9 @@ def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
     Args:
       n: vertex count — the universe is fixed here; ingesting ids >= n
         raises ``ValueError``.
-      cfg: HLL configuration (default ``HLLConfig()``). Engines that will
-        be merged must share it (same hash family).
+      cfg: sketch config (its type selects the family); default: the
+        family's default config. Engines that will be merged must share
+        it (same hash family).
       backend: "local" (single device) or "sharded" (SPMD over a mesh the
         engine owns; ``shards`` defaults to the visible device count, and
         the vertex partition is fixed now, independent of future edges).
@@ -107,11 +151,15 @@ def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
       layout: register-panel layout ("byte" exact-width, "packed" 4-bit
         lanes halving panel bytes — DESIGN.md §11); defaults to
         :func:`default_layout` (the ``REPRO_LAYOUT`` env var, or "byte").
+        Must be one the family supports (ADS is byte-only).
+      family: sketch family name ("hll" | "ads", DESIGN.md §13); defaults
+        to :func:`default_family` when no ``cfg`` names one. Passing both
+        a cfg and a disagreeing family raises ``TypeError``.
     """
-    cfg = cfg or HLLConfig()
+    cfg, fam_name = _resolve_cfg(cfg, family)
     impl = impl or default_impl()
     layout = layout or default_layout()
-    _validate(backend, shards, impl, layout)
+    _validate(backend, shards, impl, layout, fam_name)
     if backend == "sharded":
         return ShardedEngine.open(n, cfg, shards=shards, impl=impl,
                                   layout=layout)
@@ -119,11 +167,12 @@ def open(n: int, cfg: HLLConfig | None = None, *, backend: str = "local",
 
 
 def build(edges: np.ndarray, n: int | None = None,
-          cfg: HLLConfig | None = None, *, backend: str = "local",
+          cfg=None, *, backend: str = "local",
           shards: int | None = None,
           impl: str | None = None,
-          layout: str | None = None) -> SketchEngine:
-    """Accumulate a DegreeSketch (Algorithm 1) and return a query engine.
+          layout: str | None = None,
+          family: str | None = None) -> SketchEngine:
+    """Accumulate a sketch table (Algorithm 1) and return a query engine.
 
     A thin wrapper over :func:`open` + one ``ingest(edges)`` call — batch
     and streamed construction are the same code path, so the registers are
@@ -133,23 +182,25 @@ def build(edges: np.ndarray, n: int | None = None,
     Args:
       edges: undirected edge list int[m, 2].
       n: vertex count (default: ``edges.max() + 1``).
-      cfg: HLL configuration (default: ``HLLConfig()``).
+      cfg: sketch config (default: the family's default config).
       backend: "local" (single device) or "sharded" (SPMD over a mesh the
         engine owns; ``shards`` defaults to the visible device count).
       impl: kernel implementation threaded through ``repro.kernels.ops``
         ("ref" jnp oracles, "pallas" the TPU kernels); defaults to
         :func:`default_impl` (the ``REPRO_IMPL`` env var, or "ref").
+      layout / family: as in :func:`open`.
     """
     edges = np.asarray(edges)
     if n is None:
         n = int(edges.max()) + 1 if len(edges) else 1
     return open(n, cfg, backend=backend, shards=shards,
-                impl=impl, layout=layout).ingest(edges)
+                impl=impl, layout=layout, family=family).ingest(edges)
 
 
 def load(path: str, *, backend: str | None = None, shards: int | None = None,
          impl: str | None = None, step: int | None = None,
-         layout: str | None = None) -> SketchEngine:
+         layout: str | None = None,
+         family: str | None = None) -> SketchEngine:
     """Restore a saved engine; queries answer identically to pre-save.
 
     ``backend`` / ``shards`` / ``impl`` / ``layout`` default to the
@@ -162,6 +213,12 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
     ingestion exactly where the saved one stopped (same row layout, same
     tracked edge list).
 
+    The sketch family is NOT overridable: the manifest's recorded family
+    is authoritative (register bytes do not change meaning), and passing
+    ``family=`` is an *assertion* — a mismatch raises
+    ``repro.ckpt.checkpoint.FamilyMismatch`` naming both families
+    instead of silently reinterpreting the registers (DESIGN.md §13).
+
     Elastic resharding (DESIGN.md §12): ``shards=S2`` rebuilds the vertex
     partition and, lazily, the routing ``DistPlan`` directly from the
     saved register panel — rows are repartitioned, no edge replay — so a
@@ -170,7 +227,8 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
     reinstalled the same way: the id set is the durable decision, the
     replica panel re-gathers from the restored rows.
     """
-    from repro.ckpt.checkpoint import (latest_step, read_manifest,
+    from repro.ckpt.checkpoint import (latest_step, manifest_family,
+                                       read_manifest, require_family,
                                        restore_checkpoint)
     if step is None:
         step = latest_step(path)
@@ -182,6 +240,8 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
         raise ValueError(
             f"{path!r} step {step} is not a sketch-engine checkpoint "
             f"(format={extra.get('format')!r})")
+    fam_name = (require_family(extra, family, "load") if family is not None
+                else manifest_family(extra))
     leaves = manifest["leaves"]
     like = {k: np.zeros(v["shape"], dtype=v["dtype"])
             for k, v in leaves.items()}
@@ -189,13 +249,13 @@ def load(path: str, *, backend: str | None = None, shards: int | None = None,
     regs = np.asarray(tree["regs"], dtype=np.uint8)
     edges = (np.asarray(tree["edges"], dtype=np.int32).reshape(-1, 2)
              if "edges" in tree else None)
-    cfg = HLLConfig(**extra["cfg"])
+    cfg = registry.family(fam_name).config_from_dict(extra["cfg"])
     n = int(extra["n"])
     backend = backend or extra["backend"]
     impl = impl or extra.get("impl", "ref")
     layout_saved = extra.get("layout", "byte")
     layout = layout or layout_saved
-    _validate(backend, shards, impl, layout)  # same contract as open()
+    _validate(backend, shards, impl, layout, fam_name)  # as in open()
     if layout != layout_saved:
         from repro.kernels import packing
         regs = np.asarray(packing.to_layout(regs, layout_saved, layout),

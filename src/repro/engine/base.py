@@ -11,8 +11,8 @@ returns an empty engine, ``ingest(edge_block)`` / ``ingest_stream(stream)``
 fold edge blocks into the register panel through a donated jitted
 accumulate step (allocation-free hot path, one compile per block shape
 bucket), and ``merge(other)`` composes independently accumulated engines
-by lane-wise register max — the HLL union operator, which is what makes
-sketches order- and partition-insensitive. Batch construction
+by lane-wise register max — the sketches' closed union operator, which is
+what makes them order- and partition-insensitive. Batch construction
 (``repro.engine.build``) is a thin wrapper over open + ingest, so streamed
 and one-shot accumulation are the same code path and produce bit-identical
 registers.
@@ -30,21 +30,35 @@ Queries answered through one typed, batched API:
 * ``triangle_heavy_hitters(k, mode=)`` — Algorithms 4/5
 * ``query_batch(...)``                 — a mixed degrees/union/intersection
   micro-batch answered by ONE compiled fused program (DESIGN.md §10)
+* ``distance_histogram / closeness / effective_diameter`` — HIP-curve
+  distance queries (ADS family, DESIGN.md §13), built on the same cached
+  D^t panels as ``neighborhood``
+
+The engine is **sketch-family-agnostic** (DESIGN.md §13): the config's
+family is resolved once at construction through
+``repro.kernels.registry.family_of`` and every family-specific behavior
+— estimator tails, pair MLE math, triangle counting, HIP curve math,
+config (de)serialization — is reached through that
+:class:`~repro.kernels.registry.SketchFamily` object. Query kinds a
+family does not serve raise :class:`UnsupportedQuery` up front
+(``_require_kind``) instead of producing meaningless numbers.
 
 Query planning lives one layer down (DESIGN.md §3b,
 ``repro.engine.plans``): inputs are normalized and validated against the
 vertex universe, batch dimensions are padded to power-of-two shape
 buckets, and the jitted plans are cached in a process-wide LRU keyed by
-``(query, bucket, cfg, impl, backend)`` — engines with identical
+``(query, bucket, cfg, impl, backend, family)`` — engines with identical
 coordinates share compiled programs. Kernel selection goes through the
 ``repro.kernels.registry``: each engine resolves a capability-checked
 :class:`~repro.kernels.registry.KernelSet` once at construction.
 
-Persistence: ``save(path)`` writes the register table + ``HLLConfig`` +
-plan metadata through ``repro.ckpt.checkpoint`` — legal mid-stream, since
-the register panel is a valid sketch of every edge ingested so far;
-``repro.engine.load`` rebuilds an equivalent engine in a fresh process
-that can keep ingesting where the saved one stopped (DESIGN.md §3, §8).
+Persistence: ``save(path)`` writes the register table + sketch config +
+family + plan metadata through ``repro.ckpt.checkpoint`` — legal
+mid-stream, since the register panel is a valid sketch of every edge
+ingested so far; ``repro.engine.load`` rebuilds an equivalent engine in a
+fresh process that can keep ingesting where the saved one stopped
+(DESIGN.md §3, §8). Restoring or merging across families raises
+``repro.ckpt.checkpoint.FamilyMismatch``.
 """
 from __future__ import annotations
 
@@ -58,12 +72,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hll import HLLConfig
-from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import placement, plans
 from repro.kernels import registry
 
-__all__ = ["SketchEngine", "SnapshotFrozen", "bucket", "validate_t_max"]
+__all__ = ["SketchEngine", "SnapshotFrozen", "UnsupportedQuery", "bucket",
+           "pad_vertices", "validate_t_max"]
 
 ENGINE_FORMAT = "degreesketch-engine-v1"
 
@@ -80,6 +93,23 @@ class SnapshotFrozen(RuntimeError):
     snapshot was taken from (the continuous-serving subsystem in
     ``repro.serve`` owns exactly that split — DESIGN.md §3d).
     """
+
+
+class UnsupportedQuery(ValueError):
+    """Raised for a query kind the engine's sketch family cannot answer.
+
+    Each family declares the query kinds its estimators serve
+    (``SketchFamily.query_kinds``, DESIGN.md §13) — e.g. HLL engines
+    answer intersections but not distance histograms, ADS engines the
+    reverse. The check runs before any input normalization so the caller
+    (and the serving frontend, which maps this onto a typed client
+    error) fails fast with both the kind and the family named.
+    """
+
+
+def pad_vertices(n: int, multiple: int) -> int:
+    """Round ``n`` up to the next multiple (register-table row padding)."""
+    return ((n + multiple - 1) // multiple) * multiple
 
 
 #: Lease release (DESIGN.md §3d): a fresh device buffer with the same
@@ -135,11 +165,17 @@ class _PanelSet:
     (DESIGN.md §3c). The set is valid only while the engine's ``version``
     matches ``version`` — ingest/merge donate the register buffer and bump
     the version, so a stale set is dropped, never served.
+
+    ``aux`` holds derived per-hop caches that share the set's lifetime —
+    today the ADS family's cumulative HIP curve rows (``aux["hip"][i]``
+    is C^{i+1}, host float64[n]); they invalidate with the panels and
+    hand off to snapshots the same way (DESIGN.md §13).
     """
 
     version: int
     schedule: str
     panels: list = field(default_factory=list)
+    aux: dict = field(default_factory=dict)
 
 # Normalization/bucketing moved to repro.engine.plans (DESIGN.md §3b);
 # re-exported here for callers that imported them from the engine core.
@@ -173,13 +209,15 @@ class SketchEngine(abc.ABC):
     #: the deeper panels transiently without caching them.
     MAX_CACHED_PANELS = 8
 
-    def __init__(self, regs: jax.Array, n: int, cfg: HLLConfig,
+    def __init__(self, regs: jax.Array, n: int, cfg,
                  edges: np.ndarray | None, impl: str = "ref",
                  plan_cache: plans.PlanCache | None = None,
                  layout: str = "byte"):
         # capability check, once — includes the layout keyword every op
-        # must accept (DESIGN.md §11)
+        # must accept (DESIGN.md §11) and the family coordinate resolved
+        # from the config's type (DESIGN.md §13)
         self.kernels = registry.resolve(impl, cfg, layout=layout)
+        self.family = registry.family(self.kernels.family)
         self._regs = regs
         self.n = int(n)
         self.cfg = cfg
@@ -359,20 +397,23 @@ class SketchEngine(abc.ABC):
     def merge(self, other: "SketchEngine") -> "SketchEngine":
         """Fold another engine's sketch into this one (lane-wise max).
 
-        Register max is HLL's closed union operator (Algorithm 6 MERGE):
-        merging engines that each ingested a sub-multiset of edges is
-        bit-identical to one engine ingesting their union. This is what
-        lets independently accumulated engines — different processes,
-        round-robin substreams, or a loaded checkpoint plus a delta —
-        compose into one.
+        Register max is the sketches' closed union operator (Algorithm 6
+        MERGE): merging engines that each ingested a sub-multiset of
+        edges is bit-identical to one engine ingesting their union. This
+        is what lets independently accumulated engines — different
+        processes, round-robin substreams, or a loaded checkpoint plus a
+        delta — compose into one.
 
-        Requirements (``ValueError`` otherwise): identical ``HLLConfig``
-        (same p/seed/estimator — sketches merged together must share the
-        hash function) and identical vertex count ``n``. Backends may
-        differ; ``other``'s rows are gathered to host and re-placed under
-        this engine's layout. Edge tracking: if both engines track edges
-        the lists concatenate; if either does not, the merged engine
-        stops tracking (its panel now holds unknown contributions).
+        Requirements: the same sketch family on both sides
+        (:class:`repro.ckpt.checkpoint.FamilyMismatch` otherwise — the
+        registers would merge byte-wise but mean different things), then
+        an identical config (same p/seed/estimator — sketches merged
+        together must share the hash function) and identical vertex count
+        ``n`` (``ValueError``). Backends may differ; ``other``'s rows are
+        gathered to host and re-placed under this engine's layout. Edge
+        tracking: if both engines track edges the lists concatenate; if
+        either does not, the merged engine stops tracking (its panel now
+        holds unknown contributions).
 
         Mutates and returns self (donating this engine's panel — bumps
         :attr:`version`); ``other`` is left untouched.
@@ -380,10 +421,16 @@ class SketchEngine(abc.ABC):
         self._check_mutable("merge")
         if not isinstance(other, SketchEngine):
             raise TypeError(f"can only merge SketchEngine, got {type(other)}")
+        if other.family.name != self.family.name:
+            from repro.ckpt.checkpoint import FamilyMismatch
+            raise FamilyMismatch(
+                f"merge: cannot fold a {other.family.name!r}-family engine "
+                f"into a {self.family.name!r}-family engine — identical "
+                f"register bytes, different estimator semantics")
         if other.cfg != self.cfg:
             raise ValueError(
-                f"merge requires identical HLLConfig (same hash family): "
-                f"{self.cfg} != {other.cfg}")
+                f"merge requires an identical sketch config (same hash "
+                f"family): {self.cfg} != {other.cfg}")
         if other.n != self.n:
             raise ValueError(
                 f"merge requires identical vertex universe: n={self.n} vs "
@@ -536,10 +583,12 @@ class SketchEngine(abc.ABC):
         ps = self._panel_set
         if ps is not None and ps.version == self._version:
             # panel-cache handoff: deeper horizons already materialized
-            # at this version keep serving from the snapshot
-            snap._panel_set = _PanelSet(version=ps.version,
-                                        schedule=ps.schedule,
-                                        panels=list(ps.panels))
+            # at this version keep serving from the snapshot (including
+            # derived aux rows, e.g. cached HIP curves)
+            snap._panel_set = _PanelSet(
+                version=ps.version, schedule=ps.schedule,
+                panels=list(ps.panels),
+                aux={k: list(v) for k, v in ps.aux.items()})
         else:
             snap._panel_set = None
         self._snapshot_fixup(snap)
@@ -588,15 +637,29 @@ class SketchEngine(abc.ABC):
               builder=None):
         """Resolve a jitted query plan through the shared LRU plan cache.
 
-        The key is ``(query, bucket, cfg, impl, backend, scope+extra)`` —
-        engines with identical coordinates share compiled programs
-        (DESIGN.md §3b); per-engine state never leaks into a plan body.
+        The key is ``(query, bucket, cfg, impl, backend, family,
+        scope+extra)`` — engines with identical coordinates share
+        compiled programs (DESIGN.md §3b); per-engine state never leaks
+        into a plan body.
         """
         key = plans.PlanKey(query=query, bucket=tuple(bucket), cfg=self.cfg,
                             impl=self.impl, backend=self.backend,
                             layout=self.layout,
-                            extra=self._plan_scope() + tuple(extra))
+                            extra=self._plan_scope() + tuple(extra),
+                            family=self.kernels.family)
         return self._plan_cache.get(key, builder)
+
+    def _require_kind(self, kind: str) -> None:
+        """Gate a query kind on the family's declared query surface."""
+        if kind not in self.family.query_kinds:
+            raise UnsupportedQuery(
+                f"query kind {kind!r} is not served by sketch family "
+                f"{self.family.name!r} (supported kinds: "
+                f"{', '.join(self.family.query_kinds)})")
+
+    def _resolve_iters(self, iters: int | None) -> int | None:
+        """``None`` resolves to the family's iterative-estimator default."""
+        return self.family.default_iters if iters is None else iters
 
     def _estimate_rows(self, regs: jax.Array) -> jax.Array:
         """Per-row cardinality estimates, honoring cfg.estimator and impl.
@@ -619,8 +682,10 @@ class SketchEngine(abc.ABC):
 
         Accepts a 1-D array (returns a float), a list of 1-D arrays
         (ragged batch) or a 2-D array; batches return float arrays [B].
-        Vertex ids outside [0, n) raise ``ValueError``.
+        Vertex ids outside [0, n) raise ``ValueError``; families without
+        a union estimator raise :class:`UnsupportedQuery`.
         """
+        self._require_kind("union")
         sets, scalar = plans.split_sets(vertex_sets, self.n)
         out = self._union_presplit(sets)
         return float(out[0]) if scalar else out
@@ -632,6 +697,7 @@ class SketchEngine(abc.ABC):
         client thread and calls this with the coalesced batch, so the
         single worker thread never re-scans the ids.
         """
+        self._require_kind("union")
         ids, mask = plans.pad_sets(sets)
         rs = self._replicas_current()
         if rs is not None:
@@ -647,17 +713,20 @@ class SketchEngine(abc.ABC):
         return np.asarray(fn(self._regs, ids, mask))[: len(sets)]
 
     def intersection_size(self, pairs, *, method: str = "mle",
-                          iters: int = _NEWTON_ITERS):
+                          iters: int | None = None):
         """|N(x) ∩ N(y)| for one (x, y) pair or a batch (B, 2) of pairs.
 
         ``method="mle"`` is the paper's Ertl maximum-likelihood estimator
-        (the T̃(xy) primitive, same solver default as the
-        ``DegreeSketch.intersection_size`` reference); ``method="ie"`` is
-        the inclusion-exclusion baseline (Eq. 18, can be negative).
-        Vertex ids outside [0, n) raise ``ValueError``.
+        (the T̃(xy) primitive; ``iters=None`` takes the family's Newton
+        solver default); ``method="ie"`` is the inclusion-exclusion
+        baseline (Eq. 18, can be negative). Vertex ids outside [0, n)
+        raise ``ValueError``; families without a pair estimator raise
+        :class:`UnsupportedQuery`.
         """
+        self._require_kind("intersection")
         if method not in ("mle", "ie"):
             raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        iters = self._resolve_iters(iters)
         arr, scalar = plans.split_pairs(pairs, self.n)
         out = self._intersection_presplit(arr, method, iters)
         return float(out[0]) if scalar else out
@@ -668,6 +737,7 @@ class SketchEngine(abc.ABC):
 
         Serving hot path counterpart of :meth:`_union_presplit`.
         """
+        self._require_kind("intersection")
         ids, mask = plans.pad_pairs(arr)
         rs = self._replicas_current()
         if rs is not None:
@@ -688,7 +758,7 @@ class SketchEngine(abc.ABC):
 
     def query_batch(self, *, vertex_sets=None, pairs=None,
                     degrees: bool = False, method: str = "mle",
-                    iters: int = _NEWTON_ITERS) -> dict:
+                    iters: int | None = None) -> dict:
         """Answer a mixed degrees/union/intersection micro-batch at once.
 
         When two or more kinds are requested, the whole batch runs as ONE
@@ -704,14 +774,21 @@ class SketchEngine(abc.ABC):
             :meth:`intersection_size`), or ``None`` to skip.
           degrees: include the full d̃(x) table in the answer.
           method / iters: intersection estimator knobs (one group per
-            batch; callers with mixed methods split batches).
+            batch; callers with mixed methods split batches;
+            ``iters=None`` takes the family's solver default).
 
         Returns a dict with keys among ``"degrees"`` / ``"union"`` /
         ``"intersection"`` — arrays shaped exactly like the per-kind
-        methods' batched returns.
+        methods' batched returns. Kinds the engine's sketch family does
+        not serve raise :class:`UnsupportedQuery`.
         """
         if method not in ("mle", "ie"):
             raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        iters = self._resolve_iters(iters)
+        if vertex_sets is not None:
+            self._require_kind("union")
+        if pairs is not None:
+            self._require_kind("intersection")
         sets = None
         if vertex_sets is not None:
             sets, _ = plans.split_sets(vertex_sets, self.n)
@@ -730,6 +807,10 @@ class SketchEngine(abc.ABC):
         two or more kinds resolve one ``mixed`` plan keyed by the combined
         shape buckets + kinds + estimator coordinates.
         """
+        if sets:
+            self._require_kind("union")
+        if arr is not None and len(arr):
+            self._require_kind("intersection")
         kinds = tuple(k for k, want in (
             ("degrees", want_degrees),
             ("union", bool(sets)),
@@ -866,6 +947,7 @@ class SketchEngine(abc.ABC):
         invalidate it via the :attr:`version` bump.
         """
         t_max = validate_t_max(t_max)
+        self._require_kind("neighborhood")
         sched = self._canonical_schedule(schedule)
         self._require_edges("neighborhood")
         est_fn = self._plan("degrees", builder=lambda: plans.
@@ -877,6 +959,100 @@ class SketchEngine(abc.ABC):
             local[t - 1] = est
             glob[t - 1] = est.sum()
         return local, glob
+
+    # ------------------------------------------- HIP distance queries (§13)
+    def _hip_curve(self, t_max: int, sched: str) -> np.ndarray:
+        """Cumulative batch-HIP curve C^t float64[t_max, n] (ADS family).
+
+        ``C^t[x]`` estimates |{y : d(x,y) <= t}| from the hop panels:
+        C^1 is the plain row estimate of D^1; each later hop adds the
+        HIP increments (summed ``2**prev_j`` over registers the hop
+        grew — the ``hip_delta`` plan) and floors at the plain estimate
+        of D^t, which keeps the curve monotone (histograms stay >= 0)
+        and unbiased-per-observed-change (``core.ads`` derivation).
+
+        Curve rows are cached in the t-hop panel set's ``aux["hip"]``
+        beside the panels they derive from — repeat distance queries on
+        an unchanged engine are pure cache reads, snapshots inherit the
+        rows, and ingest/merge invalidate them via the version bump.
+        Rows beyond :attr:`MAX_CACHED_PANELS` are computed transiently.
+        """
+        panels = self._panels_up_to(t_max, sched)
+        est_fn = self._plan("degrees", builder=lambda: plans.
+                            build_degrees_plan(self.cfg, self.kernels))
+        delta_fn = self._plan("hip_delta", builder=lambda: plans.
+                              build_hip_delta_plan(self.kernels))
+        with self._snap_lock:
+            ps = self._panel_set
+            cached = []
+            if (ps is not None and ps.version == self._version
+                    and ps.schedule == sched):
+                cached = ps.aux.setdefault("hip", [])
+            rows = list(cached[:t_max])
+            while len(rows) < t_max:
+                i = len(rows)  # 0-based hop index: panels[i] is D^{i+1}
+                plain = np.asarray(est_fn(panels[i]),
+                                   np.float64)[: self.n]
+                if i == 0:
+                    cur = plain
+                else:
+                    delta = np.asarray(delta_fn(panels[i - 1], panels[i]),
+                                       np.float64)[: self.n]
+                    cur = np.maximum(rows[i - 1] + delta, plain)
+                rows.append(cur)
+                if len(cached) == i and i < self.MAX_CACHED_PANELS:
+                    cached.append(cur)
+        return np.stack(rows[:t_max])
+
+    def distance_histogram(self, t_max: int, schedule: str = "auto",
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-vertex hop-distance histograms h^t(x) for t = 1..t_max.
+
+        ``h^t(x)`` estimates |{y : d(x,y) = t}| — the per-hop increments
+        of the cumulative HIP curve (ADS family only; other families
+        raise :class:`UnsupportedQuery`). Returns
+        ``(hist float64[t_max, n], glob float64[t_max])`` where ``glob``
+        sums each hop's histogram over the vertices. Served from the
+        same cached D^t panels as :meth:`neighborhood`, so a repeat on
+        an unchanged engine runs zero propagate passes.
+        """
+        t_max = validate_t_max(t_max)
+        self._require_kind("distance_histogram")
+        sched = self._canonical_schedule(schedule)
+        self._require_edges("distance_histogram")
+        curve = self._hip_curve(t_max, sched)
+        hist = self.family.hip_histogram(curve)
+        return hist, hist.sum(axis=1)
+
+    def closeness(self, t_max: int, schedule: str = "auto") -> np.ndarray:
+        """Closeness centralities within a ``t_max``-hop horizon.
+
+        ``c(x) = reach(x) / sum_y d(x, y)`` over the vertices reached
+        within ``t_max`` hops, both terms estimated from the HIP curve
+        (ADS family only). Returns float64[n]; isolated vertices get 0.
+        """
+        t_max = validate_t_max(t_max)
+        self._require_kind("closeness")
+        sched = self._canonical_schedule(schedule)
+        self._require_edges("closeness")
+        return self.family.hip_closeness(self._hip_curve(t_max, sched))
+
+    def effective_diameter(self, t_max: int, q: float = 0.9,
+                           schedule: str = "auto") -> float:
+        """Effective diameter: smallest t where a ``q`` fraction of the
+        reachable pairs within ``t_max`` hops is covered.
+
+        Linearly interpolated between hops (the conventional continuous
+        reading), computed from the global cumulative HIP curve (ADS
+        family only). ``q`` must lie in (0, 1]; ``t_max`` bounds the
+        horizon the quantile is taken against.
+        """
+        t_max = validate_t_max(t_max)
+        self._require_kind("effective_diameter")
+        sched = self._canonical_schedule(schedule)
+        self._require_edges("effective_diameter")
+        glob = self._hip_curve(t_max, sched).sum(axis=1)
+        return float(self.family.hip_effective_diameter(glob, q))
 
     # ----------------------------------------------------- backend hooks
     @abc.abstractmethod
@@ -907,8 +1083,9 @@ class SketchEngine(abc.ABC):
         """Persist the accumulated sketch (registers + config + metadata).
 
         Layout is a ``repro.ckpt`` checkpoint: one .npy per leaf plus a
-        manifest whose ``extra`` dict records the HLLConfig, backend,
-        ingested edge count and plan metadata. Only the n true vertex rows
+        manifest whose ``extra`` dict records the sketch family + config,
+        backend, ingested edge count and plan metadata. Only the n true
+        vertex rows
         are stored — padding is backend-dependent and reconstructed on
         load. Saving is legal *mid-stream*: the panel is a valid sketch of
         everything ingested so far, and a loaded engine resumes ingestion
@@ -929,9 +1106,9 @@ class SketchEngine(abc.ABC):
             "n": self.n,
             "impl": self.impl,
             "layout": self.layout,
+            "family": self.family.name,
             "m_ingested": self.m,
-            "cfg": {"p": self.cfg.p, "seed": self.cfg.seed,
-                    "estimator": self.cfg.estimator},
+            "cfg": self.family.config_dict(self.cfg),
         }
         extra.update(self._save_extra())
         return save_checkpoint(path, step, tree, extra=extra)

@@ -4,8 +4,9 @@ Accumulation and propagation go through the engine's resolved
 :class:`~repro.kernels.registry.KernelSet` (capability-checked at open,
 selecting the "ref" jnp oracles or "pallas" kernels); ingestion uses the
 donated accumulate entry (allocation-free block loop, DESIGN.md §3a);
-triangle queries reuse the ``core.degreesketch`` reference
-implementations (DESIGN.md §3). Query plans come from the shared LRU
+triangle queries route through the engine's sketch family
+(``family.triangle_local``, DESIGN.md §13). Query plans come from the
+shared LRU
 plan cache (DESIGN.md §3b); degrees/union/intersection (and the
 mixed-kind batch) resolve the fused estimation kernels from the same
 ``KernelSet`` (DESIGN.md §10), so ``impl="pallas"`` serves queries
@@ -17,11 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import degreesketch as dsk, hll
-from repro.core.hll import HLLConfig
 from repro.engine import plans
-from repro.engine.base import SketchEngine, bucket
+from repro.engine.base import SketchEngine, bucket, pad_vertices
 from repro.graph import stream as gstream
+from repro.kernels import registry
 
 __all__ = ["LocalEngine"]
 
@@ -33,22 +33,23 @@ class LocalEngine(SketchEngine):
 
     # ------------------------------------------------------ construction
     @classmethod
-    def open(cls, n: int, cfg: HLLConfig, *, impl: str = "ref",
+    def open(cls, n: int, cfg, *, impl: str = "ref",
              layout: str = "byte") -> "LocalEngine":
         """An empty engine over vertex universe [0, n), ready to ingest.
 
         Allocates the zeroed register table uint8[n_pad, w] (n padded to
         a multiple of 8 for the kernels; w is the layout-dependent row
-        width — r bytes, or r/2 packed); every subsequent ``ingest``
-        block folds into that one panel via a donated jitted step.
+        width — r bytes, or r/2 packed) through the config's sketch
+        family; every subsequent ``ingest`` block folds into that one
+        panel via a donated jitted step.
         """
-        n_pad = dsk.pad_vertices(n, 8)
-        regs = hll.empty_table(n_pad, cfg, layout=layout)
+        n_pad = pad_vertices(n, 8)
+        regs = registry.family_of(cfg).empty_table(n_pad, cfg, layout=layout)
         return cls(regs, n, cfg, np.zeros((0, 2), np.int32), impl=impl,
                    layout=layout)
 
     @classmethod
-    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
+    def build(cls, edges: np.ndarray, n: int, cfg, *,
               impl: str = "ref", layout: str = "byte") -> "LocalEngine":
         """Algorithm 1 in one call: ``open(n, cfg)`` + ``ingest(edges)``.
 
@@ -59,15 +60,16 @@ class LocalEngine(SketchEngine):
         return cls.open(n, cfg, impl=impl, layout=layout).ingest(edges)
 
     @classmethod
-    def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
+    def from_regs(cls, regs, n: int, cfg, *,
                   edges: np.ndarray | None = None,
                   impl: str = "ref", layout: str = "byte") -> "LocalEngine":
         """Wrap an existing register table uint8[>=n, w] as a query engine.
 
-        Used by loaders and by workloads that build sketches directly via
-        ``repro.core.hll`` (edge-free engines answer degrees/union/
-        intersection; neighborhood/triangles need ``edges``, whose ids
-        are validated against [0, n)). Row width must match ``layout``
+        Used by loaders and by workloads that build sketch tables
+        directly in ``repro.core`` (edge-free engines answer degrees/
+        union/intersection; neighborhood/triangles/distance queries need
+        ``edges``, whose ids are validated against [0, n)). Row width
+        must match ``layout``
         (``ValueError`` otherwise — a packed panel handed to a byte
         engine would be misread, not caught downstream). The row layout
         matches ``open``'s, so a checkpoint taken mid-stream resumes
@@ -80,7 +82,7 @@ class LocalEngine(SketchEngine):
             raise ValueError(
                 f"register rows have width {regs.shape[1]}, but layout "
                 f"{layout!r} at p={cfg.p} needs width {want}")
-        n_pad = dsk.pad_vertices(max(n, regs.shape[0]), 8)
+        n_pad = pad_vertices(max(n, regs.shape[0]), 8)
         if regs.shape[0] < n_pad:
             regs = jnp.concatenate(
                 [regs, jnp.zeros((n_pad - regs.shape[0], regs.shape[1]),
@@ -137,17 +139,13 @@ class LocalEngine(SketchEngine):
         return fn(regs, src, dst, mask)
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
-        """Algorithms 4/5 on one device (see base class for the contract)."""
+        """Algorithms 4/5 on one device (see base class for the contract).
+
+        Routed through the sketch family (``family.triangle_local``,
+        which unpacks a transient byte-layout view of packed panels);
+        families without a triangle estimator raise ``UnsupportedQuery``.
+        """
+        self._require_kind("triangle")
         edges = self._require_edges("triangle_heavy_hitters")
-        regs = self._regs
-        if self.layout == "packed":
-            # core.degreesketch is byte-layout code: unpack a transient
-            # full-width view (the engine's packed panel is untouched)
-            from repro.kernels import packing
-            regs = packing.unpack_rows(regs)
-        sketch = dsk.DegreeSketch(regs=regs, n=self.n, cfg=self.cfg)
-        if mode == "edge":
-            return dsk.triangle_heavy_hitters(sketch, edges, k, iters=iters)
-        if mode == "vertex":
-            return dsk.vertex_heavy_hitters(sketch, edges, k, iters=iters)
-        raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")
+        return self.family.triangle_local(self._regs, self.n, self.cfg,
+                                          edges, k, mode, iters, self.layout)

@@ -29,12 +29,20 @@ from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["AccessStats", "PlacementPolicy", "remap_ids", "gather_traffic"]
+__all__ = ["AccessStats", "PlacementPolicy", "remap_ids", "gather_traffic",
+           "ID_KINDS", "SCAN_KINDS"]
 
 #: query kinds whose requests carry vertex ids (countable per vertex);
-#: other kinds (degrees, neighborhood, triangle, ingest) scan the whole
-#: table and are counted per request instead.
+#: the gather kinds the hot-vertex policy replicates for.
 ID_KINDS = ("union", "intersection")
+
+#: kinds counted per request: table scans (degrees and the t-hop /
+#: HIP-curve queries, which touch every row) and the serving barriers.
+#: A kind in neither tuple raises — serving a new query kind without
+#: registering it here would silently hide its traffic from placement
+#: decisions (DESIGN.md §12/§13).
+SCAN_KINDS = ("degrees", "neighborhood", "triangle", "distance_histogram",
+              "closeness", "effective_diameter", "ingest", "replicate")
 
 
 class AccessStats:
@@ -56,9 +64,17 @@ class AccessStats:
     def note_ids(self, kind: str, ids) -> None:
         """Count one access per vertex id for ``kind`` (ids may repeat).
 
-        Out-of-range ids are ignored (the serving layer validates before
-        queuing; this keeps the counter robust to direct callers).
+        ``kind`` must be one of :data:`ID_KINDS` (``ValueError``
+        otherwise — an unregistered kind must fail loudly, not leak out
+        of the placement model). Out-of-range ids are ignored (the
+        serving layer validates before queuing; this keeps the counter
+        robust to direct callers).
         """
+        if kind not in ID_KINDS:
+            raise ValueError(
+                f"unknown id-carrying access kind {kind!r}; register it in "
+                f"placement.ID_KINDS (known: {ID_KINDS}) or count it via "
+                f"note_query")
         arr = np.asarray(ids).ravel()
         if arr.size == 0:
             return
@@ -70,8 +86,18 @@ class AccessStats:
         self._totals[kind] = self._totals.get(kind, 0) + int(ok.size)
 
     def note_query(self, kind: str, count: int = 1) -> None:
-        """Count ``count`` requests of a kind that carries no vertex ids
-        (degrees / neighborhood / triangle scan the whole table)."""
+        """Count ``count`` requests of a kind that carries no vertex ids.
+
+        ``kind`` must be one of :data:`SCAN_KINDS` (``ValueError``
+        otherwise): a query kind added to the serving surface without a
+        placement registration would otherwise drop its traffic on the
+        floor silently, starving the hot-vertex policy of signal.
+        """
+        if kind not in SCAN_KINDS:
+            raise ValueError(
+                f"unknown access kind {kind!r}; register it in "
+                f"placement.SCAN_KINDS (known: {SCAN_KINDS}) or, if its "
+                f"requests carry vertex ids, count it via note_ids")
         self._totals[kind] = self._totals.get(kind, 0) + int(count)
 
     def counts(self, kinds=None) -> np.ndarray:

@@ -1,8 +1,13 @@
 """Backend-independent query planning: normalization, bucketing, plan cache.
 
 A *query plan* is a jitted callable specialized to a (query kind, shape
-bucket, HLLConfig, kernel impl, backend) combination; this module (DESIGN.md
-§3b) owns everything about plans that is independent of any one engine:
+bucket, sketch config, kernel impl, backend, family) combination; this
+module (DESIGN.md §3b) owns everything about plans that is independent of
+any one engine. It is sketch-family-agnostic (DESIGN.md §13): everything
+family-specific — estimator tails, pair MLE math — is reached through the
+engine's resolved :class:`~repro.kernels.registry.KernelSet` and the
+family registry, never by importing ``repro.core`` symbols (enforced by
+``tools/check_layering.py``). Concretely:
 
 * **Input normalization** — :func:`normalize_sets` / :func:`normalize_pairs`
   turn ragged client input into padded, masked, power-of-two-bucketed host
@@ -43,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hll, intersection
+from repro.kernels import registry
 
 __all__ = [
     "bucket", "split_sets", "pad_sets", "split_pairs", "pad_pairs",
@@ -54,6 +59,7 @@ __all__ = [
     "build_degrees_plan", "build_union_plan",
     "build_intersection_plan", "build_mixed_plan", "build_merge_plan",
     "build_propagate_plan", "build_replica_gather_plan",
+    "build_hip_delta_plan",
 ]
 
 
@@ -280,19 +286,24 @@ class PlanKey:
     """Identity of a compiled query plan.
 
     Two engines produce bit-identical answers from the same registers iff
-    they agree on all five coordinates, so the cache is shared exactly at
-    this granularity:
+    they agree on all of these coordinates, so the cache is shared exactly
+    at this granularity:
 
     Attributes:
       query: query kind ("degrees" | "union" | "intersection" | ...).
       bucket: the padded/bucketed input shape the plan was built for.
-      cfg: the ``HLLConfig`` (hashable frozen dataclass) — or ``None``
+      cfg: the sketch config (hashable frozen dataclass) — or ``None``
         for plans whose body never consults it.
       impl: kernel implementation name ("ref" | "pallas" | ...).
       backend: engine backend ("local" | "sharded").
       layout: register-panel layout the plan's panels use ("byte" |
         "packed", DESIGN.md §11) — a packed plan gathers half-width
         rows, so layouts must never share a compiled program.
+      family: sketch-family registry coordinate ("hll" | "ads",
+        DESIGN.md §13) — families interpret the same registers through
+        different estimators, so they never share a compiled program
+        (configs differ by type anyway; the explicit coordinate keeps
+        the cache key self-describing for config-free plans).
       extra: any further static specialization (method/iters for the MLE,
         shard count for mesh-closed plans, ...).
     """
@@ -304,6 +315,7 @@ class PlanKey:
     backend: str = "local"
     layout: str = "byte"
     extra: tuple = ()
+    family: str = "hll"
 
 
 class PlanCache:
@@ -400,10 +412,14 @@ def _union_body(regs, ids, mask, cfg, kernels):
 
 
 def _intersection_body(regs, pairs, mask, cfg, kernels, method, iters):
-    """Shared fused-intersection body: stats kernel + estimator tail."""
+    """Shared fused-intersection body: stats kernel + estimator tail.
+
+    The estimator tail is the *family's* (``estimate_from_pair_stats``,
+    resolved by registry name) — the plan body never imports family math.
+    """
     stats, sz = kernels.intersection_stats(regs, pairs, cfg)
-    est = intersection.estimate_from_pair_stats(stats, sz, cfg, method,
-                                                iters)
+    fam = registry.family(kernels.family)
+    est = fam.estimate_from_pair_stats(stats, sz, cfg, method, iters)
     return jnp.where(mask, est, 0.0)
 
 
@@ -535,6 +551,20 @@ def build_merge_plan(layout: str = "byte"):
         record_trace("merge")
         return packing.merge_rows(mine, theirs, layout=layout)
     return jax.jit(fn, donate_argnums=(0,))
+
+
+def build_hip_delta_plan(kernels):
+    """Plan: batch-HIP per-row increments between two hop panels.
+
+    Takes ``(prev, cur)`` — the D^{t-1} and D^t register panels — and
+    returns float32[N] summed inverse change probabilities (the ADS
+    family's ``hip_delta`` op; DESIGN.md §13). The engine folds these
+    into the cached cumulative HIP curve beside the t-hop panel cache.
+    """
+    def fn(prev, cur):
+        record_trace("hip_delta")
+        return kernels.hip_delta(prev, cur)
+    return jax.jit(fn)
 
 
 def build_propagate_plan(kernels):

@@ -25,7 +25,6 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.hll import HLLConfig
 from repro.distributed import sketch_dist as sd
 from repro.engine.base import SketchEngine, bucket
 from repro.graph import stream as gstream
@@ -118,7 +117,7 @@ class ShardedEngine(SketchEngine):
         return jax.make_mesh((shards,), (_AXIS,))
 
     @classmethod
-    def open(cls, n: int, cfg: HLLConfig, *, shards: int | None = None,
+    def open(cls, n: int, cfg, *, shards: int | None = None,
              impl: str = "ref", layout: str = "byte") -> "ShardedEngine":
         """An empty sharded engine over [0, n), ready to ingest.
 
@@ -138,7 +137,7 @@ class ShardedEngine(SketchEngine):
                    mesh=mesh, shards=shards, layout=layout)
 
     @classmethod
-    def build(cls, edges: np.ndarray, n: int, cfg: HLLConfig, *,
+    def build(cls, edges: np.ndarray, n: int, cfg, *,
               shards: int | None = None, impl: str = "ref",
               layout: str = "byte") -> "ShardedEngine":
         """Algorithm 1, distributed, in one call: ``open`` + ``ingest``.
@@ -151,7 +150,7 @@ class ShardedEngine(SketchEngine):
                         layout=layout).ingest(edges)
 
     @classmethod
-    def from_regs(cls, regs, n: int, cfg: HLLConfig, *,
+    def from_regs(cls, regs, n: int, cfg, *,
                   edges: np.ndarray | None = None, shards: int | None = None,
                   impl: str = "ref", layout: str = "byte") -> "ShardedEngine":
         """Re-host an unsharded row table uint8[>=n, w] onto a fresh mesh.
@@ -236,7 +235,12 @@ class ShardedEngine(SketchEngine):
             f"{schedule!r}")
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
-        """Algorithms 4/5 over the mesh (see base class for the contract)."""
+        """Algorithms 4/5 over the mesh (see base class for the contract).
+
+        Families without a triangle estimator raise ``UnsupportedQuery``
+        before any mesh work.
+        """
+        self._require_kind("triangle")
         if mode not in ("edge", "vertex"):
             raise ValueError(f"mode must be 'edge' or 'vertex', got {mode!r}")
         return sd.dist_triangle_heavy_hitters(

@@ -45,6 +45,7 @@ FALLBACK: dict[str, dict[str, int]] = {
     "union_estimate": {"set_block": 8},
     "intersection_stats": {"pair_block": 64},
     "ertl_stats": {"pair_block": 128},
+    "hip_delta": {"row_block": 256},
 }
 
 #: candidate grid per op; the sweep times each and keeps the fastest.
@@ -55,6 +56,7 @@ SWEEPS: dict[str, list[dict[str, int]]] = {
     "union_estimate": [{"set_block": b} for b in (4, 8, 16)],
     "intersection_stats": [{"pair_block": b} for b in (16, 32, 64, 128)],
     "ertl_stats": [{"pair_block": b} for b in (64, 128, 256)],
+    "hip_delta": [{"row_block": b} for b in (64, 128, 256, 512)],
 }
 
 _CACHE: dict[tuple, dict[str, int]] = {}
@@ -122,6 +124,11 @@ def _synthetic_inputs(op: str, p: int, layout: str, params: dict[str, int]):
         return cfg, (regs, rows, keys, mask)
     if op == "estimate":
         return cfg, (regs,)
+    if op == "hip_delta":
+        grown = jnp.asarray(
+            np.maximum(np.asarray(regs),
+                       rng.integers(0, 4, regs.shape).astype(np.uint8)))
+        return cfg, (regs, grown)
     if op == "union_estimate":
         b, lanes = 32, 16
         ids = jnp.asarray(rng.integers(0, n, (b, lanes)), jnp.int32)
@@ -164,6 +171,10 @@ def _drive(op: str, p: int, impl: str, layout: str,
             regs, pairs = args
             out = ops.ertl_stats(regs[pairs[:, 0]], regs[pairs[:, 1]], cfg,
                                  impl=impl, layout=layout, **params)
+        elif op == "hip_delta":
+            prev, cur = args
+            out = ops.hip_delta(prev, cur, impl=impl, layout=layout,
+                                **params)
         else:
             raise KeyError(f"no autotune driver for op {op!r}")
         return jax.block_until_ready(out)

@@ -3,7 +3,10 @@
 Handles padding to block multiples, the padding-index parking conventions
 the kernels rely on, and impl selection through the ``kernels.registry``
 (the ``impl: str`` if/else dispatch this module used to hard-code is now
-data: ``ref`` and ``pallas`` are ordinary ``(op, impl)`` registrations):
+data: ``ref`` and ``pallas`` are ordinary ``(family, op, impl)``
+registrations — the ADS family re-registers the HLL accumulate/
+propagate/estimate bodies verbatim, since k-partition ADS rows share
+the register geometry, and adds the family-specific ``hip_delta`` op):
 
 * ``impl="pallas"`` — pl.pallas_call kernels. Off-TPU they run in
   interpret mode (the TPU lowering is the target; interpret executes the
@@ -36,13 +39,14 @@ from repro.kernels import autotune, packing, ref, registry
 from repro.kernels.hll_accumulate import hll_accumulate as _acc_kernel
 from repro.kernels.hll_propagate import hll_propagate as _prop_kernel
 from repro.kernels.hll_estimate import hll_estimate_stats as _est_kernel
+from repro.kernels.hip_delta import hip_delta_rows as _hip_kernel
 from repro.kernels.ertl_stats import ertl_stats as _ertl_kernel
 from repro.kernels.union_estimate import union_estimate_stats as _union_kernel
 from repro.kernels.intersection_stats import (
     intersection_stats as _inter_kernel)
 
 __all__ = ["accumulate", "accumulate_donated", "propagate", "estimate",
-           "ertl_stats", "union_estimate", "intersection_stats"]
+           "ertl_stats", "union_estimate", "intersection_stats", "hip_delta"]
 
 
 def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
@@ -69,6 +73,7 @@ def _panel_p(regs: jax.Array, layout: str) -> int:
 
 # --------------------------------------------------------------- accumulate
 @registry.register("accumulate", "ref")
+@registry.register("accumulate", "ref", family="ads")
 def _accumulate_ref(regs, rows, keys, mask, *, cfg, layout="byte",
                     edge_block=None):
     buckets, rhos = bucket_rho(keys, cfg.p, cfg.seed)
@@ -83,6 +88,7 @@ def _accumulate_ref(regs, rows, keys, mask, *, cfg, layout="byte",
 
 
 @registry.register("accumulate", "pallas")
+@registry.register("accumulate", "pallas", family="ads")
 def _accumulate_pallas(regs, rows, keys, mask, *, cfg, layout="byte",
                        edge_block=None):
     edge_block = _blk("accumulate", "edge_block", edge_block)
@@ -100,7 +106,7 @@ def _accumulate_pallas(regs, rows, keys, mask, *, cfg, layout="byte",
 def accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
                cfg: HLLConfig, mask: jax.Array | None = None,
                impl: str = "pallas", edge_block: int | None = None,
-               layout: str = "byte") -> jax.Array:
+               layout: str = "byte", family: str = "hll") -> jax.Array:
     """Insert keys[e] into sketch regs[rows[e]] (Algorithm 1 INSERT).
 
     The bucket/rho hash split happens inside the registered impl (fused
@@ -111,18 +117,20 @@ def accumulate(regs: jax.Array, rows: jax.Array, keys: jax.Array,
     edge_block = autotune.resolve_block("accumulate", "edge_block",
                                         edge_block, p=cfg.p, impl=impl,
                                         layout=layout)
-    fn = registry.lookup("accumulate", impl)
+    fn = registry.lookup("accumulate", impl, family)
     return fn(regs, rows, keys, mask, cfg=cfg, layout=layout,
               edge_block=edge_block)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
-                   static_argnames=("cfg", "impl", "edge_block", "layout"))
+                   static_argnames=("cfg", "impl", "edge_block", "layout",
+                                    "family"))
 def accumulate_donated(regs: jax.Array, rows: jax.Array, keys: jax.Array,
                        mask: jax.Array, *, cfg: HLLConfig,
                        impl: str = "pallas",
                        edge_block: int | None = None,
-                       layout: str = "byte") -> jax.Array:
+                       layout: str = "byte",
+                       family: str = "hll") -> jax.Array:
     """Donating :func:`accumulate`: the ingestion hot-path entry.
 
     The register panel ``regs`` is donated — XLA reuses its buffer for the
@@ -135,11 +143,12 @@ def accumulate_donated(regs: jax.Array, rows: jax.Array, keys: jax.Array,
     (block shape, cfg, impl, layout) — callers pad blocks to shape buckets.
     """
     return accumulate(regs, rows, keys, cfg, mask=mask, impl=impl,
-                      edge_block=edge_block, layout=layout)
+                      edge_block=edge_block, layout=layout, family=family)
 
 
 # ---------------------------------------------------------------- propagate
 @registry.register("propagate", "ref")
+@registry.register("propagate", "ref", family="ads")
 def _propagate_ref(regs, src, dst, mask, *, layout="byte", edge_block=None):
     m = jnp.ones(src.shape, bool) if mask is None else mask
     if layout == "packed":
@@ -151,6 +160,7 @@ def _propagate_ref(regs, src, dst, mask, *, layout="byte", edge_block=None):
 
 
 @registry.register("propagate", "pallas")
+@registry.register("propagate", "pallas", family="ads")
 def _propagate_pallas(regs, src, dst, mask, *, layout="byte",
                       edge_block=None):
     edge_block = _blk("propagate", "edge_block", edge_block)
@@ -163,7 +173,7 @@ def _propagate_pallas(regs, src, dst, mask, *, layout="byte",
 def propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
               mask: jax.Array | None = None, impl: str = "pallas",
               edge_block: int | None = None,
-              layout: str = "byte") -> jax.Array:
+              layout: str = "byte", family: str = "hll") -> jax.Array:
     """One Algorithm 2 merge pass over an edge block."""
     if mask is not None:
         src = jnp.where(mask, src, 0)
@@ -171,12 +181,13 @@ def propagate(regs: jax.Array, src: jax.Array, dst: jax.Array,
     edge_block = autotune.resolve_block("propagate", "edge_block", edge_block,
                                         p=_panel_p(regs, layout), impl=impl,
                                         layout=layout)
-    fn = registry.lookup("propagate", impl)
+    fn = registry.lookup("propagate", impl, family)
     return fn(regs, src, dst, mask, layout=layout, edge_block=edge_block)
 
 
 # ----------------------------------------------------------------- estimate
 @registry.register("estimate", "ref")
+@registry.register("estimate", "ref", family="ads")
 def _estimate_stats_ref(regs, *, layout="byte", row_block=None):
     if layout == "packed":
         regs = packing.unpack_rows(regs)
@@ -184,6 +195,7 @@ def _estimate_stats_ref(regs, *, layout="byte", row_block=None):
 
 
 @registry.register("estimate", "pallas")
+@registry.register("estimate", "pallas", family="ads")
 def _estimate_stats_pallas(regs, *, layout="byte", row_block=None):
     row_block = _blk("estimate", "row_block", row_block)
     n = regs.shape[0]
@@ -195,18 +207,20 @@ def _estimate_stats_pallas(regs, *, layout="byte", row_block=None):
 
 def estimate(regs: jax.Array, cfg: HLLConfig, impl: str = "pallas",
              row_block: int | None = None,
-             layout: str = "byte") -> jax.Array:
+             layout: str = "byte", family: str = "hll") -> jax.Array:
     """Flajolet + linear-counting estimate per sketch row (uint8[N, w]).
 
     The fused kernels produce the (s, z) harmonic statistics; the final
     Flajolet/linear-counting combination happens here (O(N) scalar work).
     Other estimators are handled above this seam — see
-    ``registry.KernelSet.estimate_rows`` for the explicit fallback.
+    ``registry.KernelSet.estimate_rows`` for the explicit fallback. The
+    combination only reads ``cfg.r``, so it serves the ADS family's
+    plain (floor) estimates identically.
     """
     row_block = autotune.resolve_block("estimate", "row_block", row_block,
                                        p=cfg.p, impl=impl, layout=layout)
-    s, z = registry.lookup("estimate", impl)(regs, layout=layout,
-                                             row_block=row_block)
+    s, z = registry.lookup("estimate", impl, family)(regs, layout=layout,
+                                                     row_block=row_block)
     return hll._combine_flajolet(s, z, cfg)
 
 
@@ -233,7 +247,7 @@ def _union_estimate_pallas(regs, ids, mask, *, layout="byte", set_block=None):
 def union_estimate(regs: jax.Array, ids: jax.Array, mask: jax.Array,
                    cfg: HLLConfig, impl: str = "pallas",
                    set_block: int | None = None,
-                   layout: str = "byte") -> jax.Array:
+                   layout: str = "byte", family: str = "hll") -> jax.Array:
     """Fused batched |∪ N(x)| over a padded (ids, mask) set panel.
 
     One pass per set row: gather member sketches, lane-wise max-merge,
@@ -245,9 +259,9 @@ def union_estimate(regs: jax.Array, ids: jax.Array, mask: jax.Array,
     set_block = autotune.resolve_block("union_estimate", "set_block",
                                        set_block, p=cfg.p, impl=impl,
                                        layout=layout)
-    s, z = registry.lookup("union_estimate", impl)(regs, ids, mask,
-                                                   layout=layout,
-                                                   set_block=set_block)
+    s, z = registry.lookup("union_estimate", impl, family)(regs, ids, mask,
+                                                           layout=layout,
+                                                           set_block=set_block)
     return hll.estimate_from_stats(s, z, cfg)
 
 
@@ -275,7 +289,8 @@ def _intersection_stats_pallas(regs, pa, pb, q, *, layout="byte",
 
 def intersection_stats(regs: jax.Array, pairs: jax.Array, cfg: HLLConfig,
                        impl: str = "pallas", pair_block: int | None = None,
-                       layout: str = "byte") -> tuple[jax.Array, jax.Array]:
+                       layout: str = "byte",
+                       family: str = "hll") -> tuple[jax.Array, jax.Array]:
     """Fused per-pair statistics for T̃(xy) over padded (B, 2) pair lanes.
 
     Gathers both endpoint sketches per pair and emits the Eq. 19 count
@@ -288,7 +303,7 @@ def intersection_stats(regs: jax.Array, pairs: jax.Array, cfg: HLLConfig,
     pair_block = autotune.resolve_block("intersection_stats", "pair_block",
                                         pair_block, p=cfg.p, impl=impl,
                                         layout=layout)
-    fn = registry.lookup("intersection_stats", impl)
+    fn = registry.lookup("intersection_stats", impl, family)
     return fn(regs, pairs[:, 0], pairs[:, 1], cfg.q, layout=layout,
               pair_block=pair_block)
 
@@ -315,10 +330,47 @@ def _ertl_stats_pallas(a, b, q, *, layout="byte", pair_block=None):
 
 def ertl_stats(a: jax.Array, b: jax.Array, cfg: HLLConfig,
                impl: str = "pallas", pair_block: int | None = None,
-               layout: str = "byte") -> jax.Array:
+               layout: str = "byte", family: str = "hll") -> jax.Array:
     """Eq. (19) statistics for paired sketch rows uint8[E, w]."""
     pair_block = autotune.resolve_block("ertl_stats", "pair_block",
                                         pair_block, p=cfg.p, impl=impl,
                                         layout=layout)
-    fn = registry.lookup("ertl_stats", impl)
+    fn = registry.lookup("ertl_stats", impl, family)
     return fn(a, b, cfg.q, layout=layout, pair_block=pair_block)
+
+
+# ---------------------------------------------------------------- hip_delta
+@registry.register("hip_delta", "ref", family="ads")
+def _hip_delta_ref(prev, cur, *, layout="byte", row_block=None):
+    return ref.hip_delta_ref(prev, cur)
+
+
+@registry.register("hip_delta", "pallas", family="ads")
+def _hip_delta_pallas(prev, cur, *, layout="byte", row_block=None):
+    row_block = _blk("hip_delta", "row_block", row_block)
+    n = prev.shape[0]
+    # padding rows are equal in both panels (no growth), contributing 0
+    prev_p = _pad_to(prev, row_block, 0)
+    cur_p = _pad_to(cur, row_block, 0)
+    out = _hip_kernel(prev_p, cur_p, row_block=row_block,
+                      interpret=registry.interpret_mode())
+    return out[:n]
+
+
+def hip_delta(prev: jax.Array, cur: jax.Array, impl: str = "pallas",
+              row_block: int | None = None, layout: str = "byte",
+              family: str = "ads") -> jax.Array:
+    """Batch-HIP per-row increments between hop panels uint8[N, r].
+
+    ``sum_j [cur_j > prev_j] * 2**prev_j`` per row (``core.ads.hip_delta``
+    semantics) — the summed inverse change probabilities of every
+    register a propagate pass grew. ADS-family op; byte layout only
+    (packed lanes saturate and corrupt the 2**x weights, DESIGN.md §13).
+    """
+    if layout != "byte":
+        raise ValueError(f"hip_delta requires byte layout, got {layout!r}")
+    row_block = autotune.resolve_block("hip_delta", "row_block", row_block,
+                                       p=_panel_p(prev, layout), impl=impl,
+                                       layout=layout)
+    fn = registry.lookup("hip_delta", impl, family)
+    return fn(prev, cur, layout=layout, row_block=row_block)

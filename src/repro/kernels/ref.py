@@ -12,7 +12,21 @@ import jax.numpy as jnp
 __all__ = [
     "hll_accumulate_ref", "hll_propagate_ref", "hll_estimate_ref",
     "ertl_stats_ref", "union_estimate_ref", "intersection_stats_ref",
+    "hip_delta_ref",
 ]
+
+
+def hip_delta_ref(prev: jax.Array, cur: jax.Array) -> jax.Array:
+    """Batch-HIP increments: sum_j [cur_j > prev_j] * 2^prev_j per row.
+
+    ADS-family oracle (repro.core.ads.hip_delta semantics): the summed
+    inverse change probabilities of every register a hop grew, evaluated
+    against the pre-hop value. prev/cur: uint8[N, r] byte-layout panels
+    with cur >= prev element-wise -> float32[N].
+    """
+    grew = cur > prev
+    inv_p = jnp.exp2(prev.astype(jnp.float32))
+    return jnp.sum(jnp.where(grew, inv_p, 0.0), axis=-1)
 
 
 def hll_accumulate_ref(regs: jax.Array, rows: jax.Array, buckets: jax.Array,

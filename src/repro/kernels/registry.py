@@ -1,11 +1,21 @@
-"""Kernel registry: ``(op, impl)`` entries resolved into capability-checked sets.
+"""Kernel registry: ``(family, op, impl)`` entries resolved into checked sets.
 
 Replaces the stringly-typed ``impl: str`` if/else dispatch that used to
 live inline in ``kernels/ops.py``. Implementations *register* themselves
-under an ``(op, impl)`` pair (``ref`` and ``pallas`` are ordinary
-registrations in ``ops.py``, not special cases); callers resolve entries
-through :func:`lookup`, whose error names the registered alternatives
-instead of silently falling through a branch.
+under a ``(family, op, impl)`` triple (``ref`` and ``pallas`` are
+ordinary registrations in ``ops.py``, not special cases); callers
+resolve entries through :func:`lookup`, whose error names the registered
+alternatives instead of silently falling through a branch.
+
+The **sketch family** is the third registry coordinate (DESIGN.md §13):
+a :class:`SketchFamily` names the config class, the ops a complete
+implementation must provide, the register layouts the family's
+semantics tolerate, and the query kinds its estimators can answer.
+Families register through :func:`register_family` (the built-ins —
+``hll`` and ``ads`` — live in ``repro.core.families``); the engine/
+serve/plan layers above resolve everything family-specific through this
+module, never by importing ``repro.core`` symbols directly (the
+layering gate in ``tools/check_layering.py`` enforces exactly that).
 
 Engines resolve a whole :class:`KernelSet` once at open/load time via
 :func:`resolve`: a missing op fails *up front* with the registered impls
@@ -31,10 +41,13 @@ import jax
 from repro.kernels.packing import LAYOUTS, validate_layout
 
 __all__ = ["OPS", "LAYOUTS", "register", "lookup", "impls", "resolve",
-           "KernelSet", "interpret_mode"]
+           "KernelSet", "interpret_mode", "SketchFamily", "register_family",
+           "family", "families", "family_of"]
 
-#: op names a complete kernel implementation provides (the §4 hot paths,
-#: including the §10 fused query-estimation ops).
+#: op names a complete **hll** kernel implementation provides (the §4 hot
+#: paths, including the §10 fused query-estimation ops). Kept as the
+#: module-level tuple for backward compatibility; each family carries its
+#: own op tuple (``SketchFamily.ops``).
 OPS = ("accumulate", "propagate", "estimate", "ertl_stats",
        "union_estimate", "intersection_stats")
 
@@ -43,14 +56,148 @@ OPS = ("accumulate", "propagate", "estimate", "ertl_stats",
 #: rejects it up front.
 MASKED_OPS = ("accumulate", "propagate", "union_estimate")
 
-_REGISTRY: dict[tuple[str, str], object] = {}
+_REGISTRY: dict[tuple[str, str, str], object] = {}
+_FAMILIES: dict[str, "SketchFamily"] = {}
 _BOOTSTRAPPED = False
 
 
+class SketchFamily:
+    """One sketch family: config + register semantics + query surface.
+
+    The protocol the engine stack programs against (DESIGN.md §13).
+    Subclasses (``repro.core.families``) bind the family-specific math —
+    config (de)serialization, empty-table construction, estimator
+    fallbacks, pair/triangle estimation — so ``engine/``, ``serve/`` and
+    the plan builders never import ``repro.core`` symbols directly.
+
+    Class attributes every family defines:
+      name: registry coordinate ("hll" | "ads" | ...).
+      config_cls: the frozen config dataclass (``p``/``seed``/
+        ``estimator`` fields at minimum).
+      ops: op names a complete kernel implementation must register under
+        this family for :func:`resolve` to accept it.
+      layouts: register-panel layouts the family's semantics tolerate
+        (ADS is byte-only: 4-bit saturation corrupts HIP inverse
+        probabilities).
+      query_kinds: engine/server query kinds the family's estimators
+        answer; anything else raises ``engine.UnsupportedQuery``.
+      default_estimator: estimator assumed when resolving without a cfg.
+      default_iters: iteration default for iterative pair estimators
+        (``None`` when the family has none).
+    """
+
+    name: str = ""
+    config_cls: type = None
+    ops: tuple = ()
+    layouts: tuple = ("byte",)
+    query_kinds: tuple = ()
+    default_estimator: str = "flajolet"
+    default_iters: int | None = None
+
+    def default_config(self):
+        """A default-constructed config for this family."""
+        return self.config_cls()
+
+    def config_dict(self, cfg) -> dict:
+        """JSON-ready config fields for checkpoint manifests."""
+        return {"p": cfg.p, "seed": cfg.seed, "estimator": cfg.estimator}
+
+    def config_from_dict(self, d: dict):
+        """Rebuild a config from :meth:`config_dict` output."""
+        return self.config_cls(**d)
+
+    def empty_table(self, n: int, cfg, layout: str = "byte"):
+        """Zeroed register table for ``n`` sketches under ``layout``."""
+        raise NotImplementedError
+
+    def resolve_fallback(self, estimator: str) -> str | None:
+        """Reason row estimation cannot use the fused kernel, or None."""
+        return None
+
+    def fallback_estimate(self, regs, cfg, layout: str):
+        """Row estimates through the family's reference path (fallbacks)."""
+        raise NotImplementedError(
+            f"family {self.name!r} has no estimate fallback path")
+
+    def estimate_from_pair_stats(self, stats, sz, cfg, method: str,
+                                 iters: int):
+        """Pairwise intersection estimates from fused pair statistics."""
+        raise NotImplementedError(
+            f"family {self.name!r} does not answer intersection queries")
+
+    def triangle_local(self, regs, n: int, cfg, edges, k: int, mode: str,
+                       iters: int, layout: str):
+        """Local-backend triangle heavy hitters over a register panel."""
+        raise NotImplementedError(
+            f"family {self.name!r} does not answer triangle queries")
+
+    def hip_histogram(self, curve):
+        """Per-hop distance histogram from a cumulative HIP curve."""
+        raise NotImplementedError(
+            f"family {self.name!r} does not answer distance queries")
+
+    def hip_closeness(self, curve):
+        """Closeness centralities from a cumulative HIP curve."""
+        raise NotImplementedError(
+            f"family {self.name!r} does not answer distance queries")
+
+    def hip_effective_diameter(self, glob, q: float):
+        """Effective diameter from the global cumulative HIP curve."""
+        raise NotImplementedError(
+            f"family {self.name!r} does not answer distance queries")
+
+
+def register_family(fam: SketchFamily) -> SketchFamily:
+    """Register a :class:`SketchFamily` instance under its ``name``.
+
+    Re-registering the same name with a different instance is an error —
+    family names are a persistence coordinate (checkpoint manifests).
+    """
+    existing = _FAMILIES.get(fam.name)
+    if existing is not None and type(existing) is not type(fam):
+        raise ValueError(f"sketch family {fam.name!r} is already registered")
+    _FAMILIES[fam.name] = fam
+    return fam
+
+
+def family(name: str) -> SketchFamily:
+    """Resolve a registered family by name; the error lists known names."""
+    _ensure_builtins()
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise KeyError(
+            f"no sketch family registered under {name!r}; known families: "
+            f"{families()}") from None
+
+
+def families() -> list[str]:
+    """Sorted names of every registered sketch family."""
+    _ensure_builtins()
+    return sorted(_FAMILIES)
+
+
+def family_of(cfg) -> SketchFamily:
+    """The family whose config class ``cfg`` is an instance of.
+
+    The reverse mapping engines use to go from a user-supplied config to
+    the family coordinate without ever naming a config class themselves.
+    """
+    _ensure_builtins()
+    for fam in _FAMILIES.values():
+        if type(cfg) is fam.config_cls:
+            return fam
+    known = {f.name: f.config_cls.__name__ for f in _FAMILIES.values()}
+    raise TypeError(
+        f"no sketch family registered for config {type(cfg).__name__}; "
+        f"known families: {known}")
+
+
 def _ensure_builtins() -> None:
-    """Import ``kernels.ops`` once so the built-in impls self-register."""
+    """Import the built-in impls/families once so they self-register."""
     global _BOOTSTRAPPED
     if not _BOOTSTRAPPED:
+        from repro.core import families as _families  # noqa: F401
         from repro.kernels import ops  # noqa: F401  (registers ref/pallas)
         _BOOTSTRAPPED = True  # only after success: a failed import must
         # resurface on retry, not be masked by an empty-registry error
@@ -66,14 +213,17 @@ def interpret_mode() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def register(op: str, impl: str):
-    """Decorator registering ``fn`` as the ``impl`` implementation of ``op``.
+def register(op: str, impl: str, family: str = "hll"):
+    """Decorator registering ``fn`` under ``(family, op, impl)``.
 
-    Re-registering the same ``(op, impl)`` with a different function is an
-    error — impl names are the unit of selection and must stay unambiguous.
+    Re-registering the same triple with a different function is an error
+    — impl names are the unit of selection and must stay unambiguous.
+    The same function may register under several families (ADS shares
+    the HLL accumulate/propagate/estimate bodies: identical register
+    geometry, different estimators on top).
     """
     def deco(fn):
-        key = (op, impl)
+        key = (family, op, impl)
         if key in _REGISTRY and _REGISTRY[key] is not fn:
             raise ValueError(f"kernel {key} is already registered")
         _REGISTRY[key] = fn
@@ -81,41 +231,43 @@ def register(op: str, impl: str):
     return deco
 
 
-def lookup(op: str, impl: str):
-    """Resolve one ``(op, impl)`` entry; the error lists registered impls."""
+def lookup(op: str, impl: str, family: str = "hll"):
+    """Resolve one ``(family, op, impl)`` entry; errors list alternatives."""
     _ensure_builtins()
     try:
-        return _REGISTRY[(op, impl)]
+        return _REGISTRY[(family, op, impl)]
     except KeyError:
         raise KeyError(
-            f"no kernel registered for op={op!r} impl={impl!r}; registered "
-            f"impls for {op!r}: {impls(op)}") from None
+            f"no kernel registered for family={family!r} op={op!r} "
+            f"impl={impl!r}; registered impls for {op!r}: "
+            f"{impls(op, family)}") from None
 
 
-def impls(op: str) -> list[str]:
-    """Sorted impl names registered for ``op``."""
+def impls(op: str, family: str = "hll") -> list[str]:
+    """Sorted impl names registered for ``op`` under ``family``."""
     _ensure_builtins()
-    return sorted(i for (o, i) in _REGISTRY if o == op)
+    return sorted(i for (f, o, i) in _REGISTRY if o == op and f == family)
 
 
 @dataclass(frozen=True)
 class KernelSet:
-    """A capability-checked bundle of kernels for one ``impl``.
+    """A capability-checked bundle of kernels for one ``(family, impl)``.
 
     Resolved once per engine (at open/load) by :func:`resolve`; hashable
     and value-comparable, so it can ride inside plan-cache keys. Methods
     delegate to the ``kernels.ops`` glue (padding, hashing, donation)
-    with ``impl`` fixed.
+    with ``impl``/``family`` fixed.
 
     Attributes:
       impl: registered implementation name ("ref" | "pallas" | ...).
-      estimator: the HLLConfig estimator this set was resolved for.
+      estimator: the config estimator this set was resolved for.
       estimate_fallback: ``None`` when the fused estimate kernel serves
         ``estimator``; otherwise the human-readable reason row estimation
-        routes through the jnp reference instead (explicit, not silent).
+        routes through the family's reference path (explicit, not silent).
       layout: register-panel layout this set operates on ("byte" |
         "packed", DESIGN.md §11) — threaded into every op call so a
         packed engine never hands a half-width panel to byte-layout code.
+      family: sketch-family registry coordinate ("hll" | "ads", §13).
 
     Block-size arguments default to ``None``, which resolves through the
     autotune cache (``kernels.autotune``): the per-``(device_kind, p,
@@ -127,13 +279,14 @@ class KernelSet:
     estimator: str = "flajolet"
     estimate_fallback: str | None = None
     layout: str = "byte"
+    family: str = "hll"
 
     def accumulate(self, regs, rows, keys, cfg, mask=None, edge_block=None):
         """Algorithm 1 INSERT over an edge block (see ``ops.accumulate``)."""
         from repro.kernels import ops
         return ops.accumulate(regs, rows, keys, cfg, mask=mask,
                               impl=self.impl, edge_block=edge_block,
-                              layout=self.layout)
+                              layout=self.layout, family=self.family)
 
     def accumulate_donated(self, regs, rows, keys, mask, *, cfg,
                            edge_block=None):
@@ -146,19 +299,21 @@ class KernelSet:
         from repro.kernels import ops
         return ops.accumulate_donated(regs, rows, keys, mask, cfg=cfg,
                                       impl=self.impl, edge_block=edge_block,
-                                      layout=self.layout)
+                                      layout=self.layout, family=self.family)
 
     def propagate(self, regs, src, dst, mask=None, edge_block=None):
         """One Algorithm 2 merge pass (see ``ops.propagate``)."""
         from repro.kernels import ops
         return ops.propagate(regs, src, dst, mask=mask, impl=self.impl,
-                             edge_block=edge_block, layout=self.layout)
+                             edge_block=edge_block, layout=self.layout,
+                             family=self.family)
 
     def ertl_stats(self, a, b, cfg, pair_block=None):
         """Eq. (19) pair statistics (see ``ops.ertl_stats``)."""
         from repro.kernels import ops
         return ops.ertl_stats(a, b, cfg, impl=self.impl,
-                              pair_block=pair_block, layout=self.layout)
+                              pair_block=pair_block, layout=self.layout,
+                              family=self.family)
 
     def union_estimate(self, regs, ids, mask, cfg, set_block=None):
         """Fused batched union estimates (see ``ops.union_estimate``).
@@ -169,67 +324,96 @@ class KernelSet:
         """
         from repro.kernels import ops
         return ops.union_estimate(regs, ids, mask, cfg, impl=self.impl,
-                                  set_block=set_block, layout=self.layout)
+                                  set_block=set_block, layout=self.layout,
+                                  family=self.family)
 
     def intersection_stats(self, regs, pairs, cfg, pair_block=None):
         """Fused per-pair T̃(xy) statistics (see ``ops.intersection_stats``).
 
         Returns ``(stats float32[B, 5, q+2], sz float32[B, 3, 2])`` for
-        ``intersection.estimate_from_pair_stats`` to consume.
+        the family's ``estimate_from_pair_stats`` to consume.
         """
         from repro.kernels import ops
         return ops.intersection_stats(regs, pairs, cfg, impl=self.impl,
                                       pair_block=pair_block,
-                                      layout=self.layout)
+                                      layout=self.layout, family=self.family)
+
+    def hip_delta(self, prev, cur, row_block=None):
+        """Batch-HIP per-row increments between hop panels (ADS family).
+
+        Returns float32[N] of summed inverse change probabilities
+        (``core.ads.hip_delta`` semantics; see ``ops.hip_delta``).
+        """
+        from repro.kernels import ops
+        return ops.hip_delta(prev, cur, impl=self.impl, row_block=row_block,
+                             layout=self.layout, family=self.family)
 
     def estimate_rows(self, regs, cfg):
         """Per-row cardinality estimates honoring ``cfg.estimator``.
 
         Routes through the fused s/z kernel when it supports the
         estimator; otherwise takes the fallback recorded at resolve time
-        (``estimate_fallback`` says why) through the jnp reference. The
-        decision was made once, at :func:`resolve` — this method never
-        silently picks a path the engine did not sign up for. The jnp
-        reference is byte-layout code, so a packed panel unpacks first —
-        handing it half-width rows would estimate garbage registers.
+        (``estimate_fallback`` says why) through the family's reference
+        path. The decision was made once, at :func:`resolve` — this
+        method never silently picks a path the engine did not sign up
+        for.
         """
-        from repro.core import hll
-        from repro.kernels import ops, packing
+        from repro.kernels import ops
         if self.estimate_fallback is not None:
-            if self.layout == "packed":
-                regs = packing.unpack_rows(regs)
-            return hll.estimate(regs, cfg)
-        return ops.estimate(regs, cfg, impl=self.impl, layout=self.layout)
+            return family(self.family).fallback_estimate(
+                regs, cfg, self.layout)
+        return ops.estimate(regs, cfg, impl=self.impl, layout=self.layout,
+                            family=self.family)
 
 
-def resolve(impl: str, cfg=None, layout: str = "byte") -> KernelSet:
-    """Capability-check ``impl`` against every op and bundle a KernelSet.
+def resolve(impl: str, cfg=None, layout: str = "byte",
+            family: str | None = None) -> KernelSet:
+    """Capability-check ``impl`` against a family's ops; bundle a KernelSet.
 
     Raises ``ValueError`` (naming the registered impls) if ``impl`` does
-    not provide every op in :data:`OPS` — engines call this at open/load
-    so an unknown or partial impl fails before any accumulation work.
-    ``cfg`` (an ``HLLConfig``) determines estimator capability: the fused
-    estimate kernel implements only the Flajolet combination, so other
-    estimators record an explicit fallback reason. ``layout`` selects the
-    register-panel representation ("byte" | "packed"); every registered
-    op must accept a ``layout`` keyword so a packed engine cannot reach
-    an impl that would misread half-width panels.
+    not provide every op the family requires — engines call this at
+    open/load so an unknown or partial impl fails before any
+    accumulation work. ``family`` defaults to the family of ``cfg``
+    (``"hll"`` when neither is given); ``cfg`` determines estimator
+    capability via the family's ``resolve_fallback``. ``layout`` selects
+    the register-panel representation ("byte" | "packed"); it must be
+    one the family's semantics tolerate (ADS is byte-only, DESIGN.md
+    §13), and every registered op must accept a ``layout`` keyword so a
+    packed engine cannot reach an impl that would misread half-width
+    panels.
     """
     _ensure_builtins()
     validate_layout(layout)
-    missing = [op for op in OPS if (op, impl) not in _REGISTRY]
+    if family is None:
+        fam = family_of(cfg) if cfg is not None else _FAMILIES["hll"]
+    else:
+        fam = _FAMILIES.get(family)
+        if fam is None:
+            raise KeyError(f"no sketch family registered under {family!r}; "
+                           f"known families: {families()}")
+        if cfg is not None and type(cfg) is not fam.config_cls:
+            raise TypeError(
+                f"config {type(cfg).__name__} does not belong to sketch "
+                f"family {fam.name!r} (expects {fam.config_cls.__name__})")
+    if layout not in fam.layouts:
+        raise ValueError(
+            f"sketch family {fam.name!r} supports layouts {fam.layouts}, "
+            f"not {layout!r} (DESIGN.md §13: ADS inverse probabilities "
+            f"need full-width registers)")
+    missing = [op for op in fam.ops if (fam.name, op, impl) not in _REGISTRY]
     if missing:
-        known = sorted({i for (_, i) in _REGISTRY})
+        known = sorted({i for (f, _, i) in _REGISTRY if f == fam.name})
         raise ValueError(
             f"impl must be a fully registered kernel implementation; "
-            f"{impl!r} lacks {missing} (registered impls: {known})")
+            f"{impl!r} lacks {missing} for family {fam.name!r} "
+            f"(registered impls: {known})")
     # capability: the shape-bucketed plans (DESIGN.md §3c, §10) hand every
     # impl of a MASKED_OPS op a padding mask — an impl that cannot accept
     # one would silently merge padding edges/lanes, so it fails here.
     # Likewise every op receives the panel layout; an impl without the
     # keyword would treat packed bytes as byte-layout registers.
-    for op in OPS:
-        sig = inspect.signature(_REGISTRY[(op, impl)])
+    for op in fam.ops:
+        sig = inspect.signature(_REGISTRY[(fam.name, op, impl)])
         has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
                          for p in sig.parameters.values())
         if op in MASKED_OPS:
@@ -246,12 +430,9 @@ def resolve(impl: str, cfg=None, layout: str = "byte") -> KernelSet:
                 f"{op} impl {impl!r} does not accept a 'layout' argument; "
                 f"engines thread the register-panel layout through every "
                 f"op (DESIGN.md §11; signature: {sig})")
-    estimator = getattr(cfg, "estimator", "flajolet") if cfg else "flajolet"
-    fallback = None
-    if estimator != "flajolet":
-        fallback = (
-            f"fused estimate kernel implements only the Flajolet s/z "
-            f"combination; estimator {estimator!r} uses the jnp reference "
-            f"(repro.core.hll.estimate)")
+    estimator = (getattr(cfg, "estimator", fam.default_estimator)
+                 if cfg else fam.default_estimator)
+    fallback = fam.resolve_fallback(estimator)
     return KernelSet(impl=impl, estimator=estimator,
-                     estimate_fallback=fallback, layout=layout)
+                     estimate_fallback=fallback, layout=layout,
+                     family=fam.name)

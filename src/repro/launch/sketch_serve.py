@@ -40,19 +40,24 @@ import time
 import numpy as np
 
 from repro import engine
-from repro.core.hll import HLLConfig
 from repro.engine import base, placement, plans
 from repro.graph import generators as gen
+from repro.kernels import registry
 from repro.serve import ContinuousServer, QueryServer, RotationPolicy
 from repro.serve.loadgen import ZipfSampler
 
 
 def _client(server, edges: np.ndarray, n: int, requests: int,
             max_batch: int, t_max: int, seed: int, errors: list,
-            sampler=None) -> None:
+            sampler=None, kinds=("union", "intersection", "degrees",
+                                 "neighborhood")) -> None:
     """One client: mixed queries with jittering (power-law) batch sizes.
 
-    ``sampler`` (a :class:`repro.serve.loadgen.ZipfSampler`) switches the
+    ``kinds`` is the query mix, drawn uniformly per request — the launcher
+    derives it from the engine family's serveable kinds (DESIGN.md §13),
+    so an ADS run exercises the HIP distance queries instead of the
+    set-algebra kinds its family does not answer. ``sampler`` (a
+    :class:`repro.serve.loadgen.ZipfSampler`) switches the
     union/intersection vertex ids from uniform/edge-derived draws to a
     Zipfian hot-vertex stream — the workload shape the placement policy
     targets (DESIGN.md §12).
@@ -66,8 +71,7 @@ def _client(server, edges: np.ndarray, n: int, requests: int,
     try:
         for i in range(requests):
             batch = int(rng.integers(1, max_batch + 1))
-            kind = ("union", "intersection", "degrees",
-                    "neighborhood")[int(rng.integers(4))]
+            kind = kinds[int(rng.integers(len(kinds)))]
             if kind == "union":
                 sets = [draw(int(rng.integers(1, 8)))
                         for _ in range(batch)]
@@ -81,6 +85,12 @@ def _client(server, edges: np.ndarray, n: int, requests: int,
             elif kind == "neighborhood":
                 # jittering horizons coalesce onto one panel set per epoch
                 server.neighborhood(int(rng.integers(1, t_max + 1)))
+            elif kind == "distance_histogram":
+                server.distance_histogram(int(rng.integers(1, t_max + 1)))
+            elif kind == "closeness":
+                server.closeness(t_max)
+            elif kind == "effective_diameter":
+                server.effective_diameter(t_max, q=0.9)
             else:
                 server.degrees()
     except Exception as e:  # noqa: BLE001 — surface in the main thread
@@ -93,7 +103,11 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--scale", type=int, default=10,
                     help="rmat scale: n ~ 2**scale vertices")
     ap.add_argument("--deg", type=int, default=8, help="rmat average degree")
-    ap.add_argument("--p", type=int, default=8, help="HLL prefix bits")
+    ap.add_argument("--p", type=int, default=8,
+                    help="sketch prefix bits (r = 2**p registers)")
+    ap.add_argument("--family", default=None,
+                    help="sketch family (hll | ads); default honors "
+                         "REPRO_FAMILY, else hll (DESIGN.md §13)")
     ap.add_argument("--backend", default="local",
                     choices=("local", "sharded"))
     ap.add_argument("--shards", type=int, default=None)
@@ -129,17 +143,27 @@ def main(argv: list[str] | None = None) -> None:
         args.scale, args.clients = 8, 3
         args.requests, args.max_batch, args.ingest_blocks = 8, 16, 2
 
+    fam = registry.family(args.family or engine.default_family())
+    cfg = fam.config_cls(p=args.p)
+    # the mixed-kind fused program is a serving construct, not a client
+    # query; triangle is left to its dedicated launcher
+    kinds = tuple(k for k in fam.query_kinds if k not in ("mixed",
+                                                          "triangle"))
+    if args.replicate and "union" not in fam.query_kinds:
+        ap.error(f"--replicate probes union/intersection answers, which "
+                 f"family {fam.name!r} does not serve")
+
     edges = gen.rmat(args.scale, args.deg, seed=0)
     n = int(edges.max()) + 1
     hold = len(edges) // 4 if args.ingest_blocks else 0  # live-ingest tail
-    eng = engine.open(n, HLLConfig(p=args.p), backend=args.backend,
+    eng = engine.open(n, cfg, backend=args.backend,
                       shards=args.shards, impl=args.impl)
     eng.ingest(edges[: len(edges) - hold])
     mode = "continuous (snapshot rotation)" if args.continuous else \
         "epoch barrier"
     print(f"graph: n={n} m={len(edges)} (serving with {hold} edges held "
-          f"back for live ingest); backend={args.backend} impl={args.impl} "
-          f"mode={mode}")
+          f"back for live ingest); family={fam.name} backend={args.backend} "
+          f"impl={args.impl} mode={mode}")
 
     plans.reset_trace_counts()
     t0 = time.monotonic()
@@ -153,7 +177,7 @@ def main(argv: list[str] | None = None) -> None:
         threads = [threading.Thread(
             target=_client,
             args=(server, edges, n, args.requests, args.max_batch,
-                  args.t_max, 17 + c, errors, sampler))
+                  args.t_max, 17 + c, errors, sampler, kinds))
             for c in range(args.clients)]
         for t in threads:
             t.start()
@@ -214,7 +238,7 @@ def main(argv: list[str] | None = None) -> None:
     if args.continuous:
         # rotation must never change an answer: post-flush served answers
         # are bit-identical to a direct engine call on the full edge set
-        direct = engine.build(edges, n, HLLConfig(p=args.p),
+        direct = engine.build(edges, n, cfg,
                               backend=args.backend, shards=args.shards,
                               impl=args.impl)
         assert np.array_equal(served_deg, np.asarray(direct.degrees())), \
@@ -232,6 +256,7 @@ def main(argv: list[str] | None = None) -> None:
           f"clients in {wall:.2f}s ({stats['requests_total'] / wall:.1f} "
           f"req/s), final epoch={stats['epoch']}")
     for kind in ("degrees", "union", "intersection", "neighborhood",
+                 "distance_histogram", "closeness", "effective_diameter",
                  "triangle"):
         s = stats.get(kind)
         if not s:
@@ -264,7 +289,10 @@ def main(argv: list[str] | None = None) -> None:
     if rep_line:
         print(f"OK: {rep_line}")
     if args.stats:
-        print(json.dumps(stats, indent=2, default=str))
+        # stats() sanitizes to native types (serve.server.to_native), so a
+        # plain dumps works — no default=str silently stringifying numpy
+        # scalars into values a consumer can't parse back
+        print(json.dumps(stats, indent=2))
 
 
 if __name__ == "__main__":

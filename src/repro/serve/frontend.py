@@ -35,12 +35,11 @@ from collections import deque
 
 import numpy as np
 
-from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import placement, plans
 from repro.engine.base import validate_t_max
 from repro.serve.server import (_LATENCY_WINDOW, _KindStats, _Request,
                                 _note_served, _segments, note_access,
-                                ServerClosed, serve_segment)
+                                ServerClosed, serve_segment, to_native)
 from repro.serve.snapshot import RotationPolicy, SnapshotSlot
 
 __all__ = ["ContinuousServer", "Overloaded", "DeadlineExceeded"]
@@ -352,11 +351,16 @@ class ContinuousServer:
         return self._submit("union", (sets, scalar), deadline).wait()
 
     def intersection_size(self, pairs, *, method: str = "mle",
-                          iters: int = _NEWTON_ITERS,
+                          iters: int | None = None,
                           deadline: float | None = None):
-        """Batched T̃(xy) — contract of the engine method."""
+        """Batched T̃(xy) — contract of the engine method.
+
+        ``iters=None`` resolves to the family default on the calling
+        thread (see ``QueryServer.intersection_size``).
+        """
         if method not in ("mle", "ie"):
             raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        iters = self._eng._resolve_iters(iters)
         arr, scalar = plans.split_pairs(pairs, self._eng.n)
         return self._submit("intersection", (arr, scalar, method, iters),
                             deadline).wait()
@@ -374,6 +378,32 @@ class ContinuousServer:
         t_max = validate_t_max(t_max)
         key = self._eng._canonical_schedule(schedule)
         return self._submit("neighborhood", (t_max, schedule, key),
+                            deadline).wait()
+
+    def distance_histogram(self, t_max: int, schedule: str = "auto", *,
+                           deadline: float | None = None):
+        """HIP distance histograms — coalesced per schedule (DESIGN.md §13)."""
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)
+        return self._submit("distance_histogram", (t_max, schedule, key),
+                            deadline).wait()
+
+    def closeness(self, t_max: int, schedule: str = "auto", *,
+                  deadline: float | None = None):
+        """HIP closeness centralities — deduped per ``(t_max, schedule)``."""
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)
+        return self._submit("closeness", (t_max, schedule, key),
+                            deadline).wait()
+
+    def effective_diameter(self, t_max: int, q: float = 0.9,
+                           schedule: str = "auto", *,
+                           deadline: float | None = None):
+        """HIP effective diameter — deduped per ``(t_max, q, schedule)``."""
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)
+        return self._submit("effective_diameter",
+                            (t_max, float(q), schedule, key),
                             deadline).wait()
 
     # -------------------------------------------------------------- reader
@@ -481,7 +511,8 @@ class ContinuousServer:
             k: v - self._trace_base.get(k, 0) for k, v in now_traces.items()
             if v - self._trace_base.get(k, 0) > 0}
         out["plan_cache"] = self._eng.plan_cache.stats()
-        return out
+        out["family"] = self._eng.family.name
+        return to_native(out)
 
     def reset_stats(self) -> None:
         """Zero the query-side statistics window (see ``QueryServer``).

@@ -51,11 +51,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.intersection import _NEWTON_ITERS
 from repro.engine import placement, plans
 from repro.engine.base import validate_t_max
 
-__all__ = ["QueryServer", "ServerClosed", "note_access"]
+__all__ = ["QueryServer", "ServerClosed", "note_access", "to_native"]
 
 _LATENCY_WINDOW = 8192  # per-kind latency samples kept for the stats
 
@@ -69,6 +68,28 @@ _FUSABLE = ("degrees", "union", "intersection")
 #: keeps the histogram meaningful across the 1000x spread between a
 #: cached-plan hit and a first-compile outlier.
 _HIST_EDGES_MS = tuple(0.25 * 2 ** k for k in range(17)) + (float("inf"),)
+
+
+def to_native(obj):
+    """Recursively convert numpy scalars/arrays into native Python types.
+
+    The stats boundary: every ``stats()`` snapshot passes through here so
+    the dicts hold only ``int``/``float``/``str``/``list``/``dict`` and
+    serialize with a plain ``json.dumps`` — no ``default=str`` escape
+    hatch silently stringifying ``np.int64`` counters into unparseable
+    ``"123"`` values (the bug that motivated this sanitizer). Unknown
+    types pass through untouched so a genuinely unserializable value
+    still fails loudly at the json layer.
+    """
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, dict):
+        return {k: to_native(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [to_native(v) for v in obj]
+    return obj
 
 
 class ServerClosed(RuntimeError):
@@ -160,8 +181,11 @@ def note_access(access: placement.AccessStats, seg: list[_Request]) -> None:
 
     Union/intersection requests count one access per queried vertex id
     (the gather kinds the placement policy replicates for); table-scan
-    kinds (degrees / neighborhood / triangle) and barriers count one
-    access per request. Called on the single serving thread right after
+    kinds (degrees, neighborhood / triangle, and the HIP distance
+    queries) and barriers count one access per request — every serveable
+    kind must be registered in ``placement.ID_KINDS`` or ``SCAN_KINDS``,
+    so an unregistered kind raises here instead of losing its traffic
+    silently. Called on the single serving thread right after
     each segment is served — the cheap, lock-free aggregation point the
     hot-vertex placement decision reads from (DESIGN.md §12). Shared by
     the epoch-barrier worker and the continuous frontend's reader.
@@ -253,7 +277,7 @@ def _serve_fused(eng, seg: list[_Request], epoch: int) -> int:
     pairs = (np.concatenate([r.payload[0] for r in fused_inter], axis=0)
              if fused_inter else None)
     method, iters = (next(iter(groups)) if fused_inter
-                     else ("mle", _NEWTON_ITERS))
+                     else ("mle", eng._resolve_iters(None)))
     fused = deg + uni + fused_inter
     launches = 0
     try:
@@ -367,12 +391,80 @@ def _serve_neighborhood(eng, run: list[_Request], epoch: int) -> None:
             r.epoch = epoch
 
 
+def _serve_distance_histogram(eng, run: list[_Request], epoch: int) -> None:
+    """HIP distance histograms, coalesced like :func:`_serve_neighborhood`.
+
+    Requests sharing a canonical schedule run ONE engine call at the
+    deepest horizon — the per-hop histogram is a pure prefix quantity
+    (hop t's row never depends on deeper hops), so each request's
+    ``t``-prefix is bit-identical to a direct call at its own ``t_max``.
+    """
+    groups: OrderedDict[str, list[_Request]] = OrderedDict()
+    for r in run:
+        groups.setdefault(r.payload[2], []).append(r)  # canonical sched
+    for reqs in groups.values():
+        t_big = max(r.payload[0] for r in reqs)
+        try:
+            hist, glob = eng.distance_histogram(
+                t_big, schedule=reqs[0].payload[1])
+        except Exception as e:  # noqa: BLE001
+            _fail(reqs, e)
+            continue
+        for r in reqs:
+            t = r.payload[0]
+            r.result = (hist[:t], glob[:t])
+            r.epoch = epoch
+
+
+def _serve_closeness(eng, run: list[_Request], epoch: int) -> None:
+    """Closeness centralities, deduped per ``(t_max, schedule)`` group.
+
+    Closeness at horizon ``t`` folds the whole curve up to ``t`` into one
+    scalar per vertex, so distinct horizons are distinct answers — but
+    groups at different depths still share the engine's cached panels and
+    HIP curve rows, so the deepest group pays and the rest ride.
+    """
+    groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+    for r in run:
+        groups.setdefault((r.payload[0], r.payload[2]), []).append(r)
+    for reqs in groups.values():
+        try:
+            out = eng.closeness(reqs[0].payload[0],
+                                schedule=reqs[0].payload[1])
+        except Exception as e:  # noqa: BLE001
+            _fail(reqs, e)
+            continue
+        for r in reqs:
+            r.result, r.epoch = out, epoch
+
+
+def _serve_effective_diameter(eng, run: list[_Request], epoch: int) -> None:
+    """Effective diameters, deduped per ``(t_max, q, schedule)`` group."""
+    groups: OrderedDict[tuple, list[_Request]] = OrderedDict()
+    for r in run:
+        groups.setdefault((r.payload[0], r.payload[1], r.payload[3]),
+                          []).append(r)
+    for reqs in groups.values():
+        t_max, q = reqs[0].payload[0], reqs[0].payload[1]
+        try:
+            out = eng.effective_diameter(t_max, q=q,
+                                         schedule=reqs[0].payload[2])
+        except Exception as e:  # noqa: BLE001
+            _fail(reqs, e)
+            continue
+        for r in reqs:
+            r.result, r.epoch = out, epoch
+
+
 _SERVE_BY_KIND = {
     "degrees": _serve_degrees,
     "union": _serve_union,
     "intersection": _serve_intersection,
     "triangle": _serve_triangle,
     "neighborhood": _serve_neighborhood,
+    "distance_histogram": _serve_distance_histogram,
+    "closeness": _serve_closeness,
+    "effective_diameter": _serve_effective_diameter,
 }
 
 
@@ -497,14 +589,17 @@ class QueryServer:
         return self._submit("union", (sets, scalar)).wait()
 
     def intersection_size(self, pairs, *, method: str = "mle",
-                          iters: int = _NEWTON_ITERS):
+                          iters: int | None = None):
         """Batched T̃(xy) — same contract as the engine method.
 
-        Requests sharing ``(method, iters)`` coalesce into one fused pair
-        batch; others are served in the same drain, separately compiled.
+        ``iters=None`` resolves to the engine family's default estimator
+        iteration count on the calling thread, so requests leaving the
+        default coalesce into one ``(method, iters)`` group; others are
+        served in the same drain, separately compiled.
         """
         if method not in ("mle", "ie"):
             raise ValueError(f"method must be 'mle' or 'ie', got {method!r}")
+        iters = self._eng._resolve_iters(iters)
         arr, scalar = plans.split_pairs(pairs, self._eng.n)
         return self._submit("intersection",
                             (arr, scalar, method, iters)).wait()
@@ -530,6 +625,44 @@ class QueryServer:
         t_max = validate_t_max(t_max)
         key = self._eng._canonical_schedule(schedule)  # validates schedule
         return self._submit("neighborhood", (t_max, schedule, key)).wait()
+
+    def distance_histogram(self, t_max: int, schedule: str = "auto"):
+        """Per-vertex HIP distance histograms (ADS family, DESIGN.md §13).
+
+        Same contract as ``SketchEngine.distance_histogram``; coalesced
+        like :meth:`neighborhood` — concurrent requests sharing a
+        canonical schedule are answered by one engine call at the deepest
+        horizon and each receives its ``t``-prefix, bit-identical to a
+        direct call. Raises ``UnsupportedQuery`` (in the client) when the
+        engine's family has no HIP estimator.
+        """
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)
+        return self._submit("distance_histogram",
+                            (t_max, schedule, key)).wait()
+
+    def closeness(self, t_max: int, schedule: str = "auto"):
+        """HIP closeness centralities float64[n] at horizon ``t_max``.
+
+        Same contract as ``SketchEngine.closeness``; identical
+        ``(t_max, schedule)`` requests in a batch dedupe into one engine
+        call, and different horizons share the cached HIP curve rows.
+        """
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)
+        return self._submit("closeness", (t_max, schedule, key)).wait()
+
+    def effective_diameter(self, t_max: int, q: float = 0.9,
+                           schedule: str = "auto"):
+        """HIP effective diameter (quantile ``q``) probed to ``t_max`` hops.
+
+        Same contract as ``SketchEngine.effective_diameter``; identical
+        ``(t_max, q, schedule)`` requests dedupe into one engine call.
+        """
+        t_max = validate_t_max(t_max)
+        key = self._eng._canonical_schedule(schedule)
+        return self._submit("effective_diameter",
+                            (t_max, float(q), schedule, key)).wait()
 
     def ingest(self, edge_block) -> int:
         """Fold an edge block into the sketch; returns the new epoch.
@@ -593,8 +726,11 @@ class QueryServer:
         (``plan_traces`` — programs traced since this server was created,
         the O(log N) quantity — plus the shared-cache hit/miss stats),
         the per-vertex ``access`` counters (totals per kind + the hottest
-        vertices, DESIGN.md §12) and ``replicated`` (the installed
-        hot-vertex replica count).
+        vertices, DESIGN.md §12), the engine's sketch ``family`` name
+        (DESIGN.md §13) and ``replicated`` (the installed hot-vertex
+        replica count). The snapshot is passed through :func:`to_native`,
+        so every value is a native Python type and ``json.dumps`` works
+        without a ``default=`` escape hatch.
         """
         with self._cv:
             out: dict = {"epoch": self._epoch,
@@ -615,9 +751,10 @@ class QueryServer:
             if v - self._trace_base.get(k, 0) > 0}
         out["plan_cache"] = self._eng.plan_cache.stats()
         out["access"] = self._access.snapshot()
+        out["family"] = self._eng.family.name
         rep = self._eng.replicated_ids
         out["replicated"] = 0 if rep is None else int(len(rep))
-        return out
+        return to_native(out)
 
     def reset_stats(self) -> None:
         """Zero the serving-statistics window (counters, latencies, rate).

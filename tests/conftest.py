@@ -1,4 +1,4 @@
-"""Session configuration: kernel-impl / register-layout CI matrix.
+"""Session configuration: kernel-impl / layout / sketch-family CI matrix.
 
 The CI matrix runs tier-1 per kernel implementation — the default jnp
 ``ref`` oracles and ``REPRO_IMPL=pallas``, which flips
@@ -6,11 +6,14 @@ The CI matrix runs tier-1 per kernel implementation — the default jnp
 ``impl=`` exercises the Pallas kernel bodies (interpret mode off-TPU) —
 and additionally with ``REPRO_LAYOUT=packed``, which flips
 ``repro.engine.default_layout()`` so the same engines run on 4-bit packed
-register panels (DESIGN.md §11). This conftest threads both flags through
-pytest: the selected (impl, layout) cell is validated against the kernel
-registry up front (a typo fails the session immediately, naming the
-registered impls/layouts) and reported in the test header so a log always
-says which leg it is.
+register panels (DESIGN.md §11). ``REPRO_FAMILY`` (DESIGN.md §13) flips
+``repro.engine.default_family()`` the same way; the CI ads smoke leg
+runs the family-portable subset (``tests/test_ads.py``) under
+``REPRO_FAMILY=ads``. This conftest threads all three flags through
+pytest: the selected (impl, layout, family) cell is validated against
+the kernel registry up front (a typo fails the session immediately,
+naming the registered coordinates) and reported in the test header so a
+log always says which leg it is.
 """
 import os
 
@@ -18,14 +21,16 @@ from repro.kernels import registry
 
 REPRO_IMPL = os.environ.get("REPRO_IMPL", "ref")
 REPRO_LAYOUT = os.environ.get("REPRO_LAYOUT", "byte")
+REPRO_FAMILY = os.environ.get("REPRO_FAMILY", "hll")
 
 
 def pytest_configure(config):
-    """Fail fast (naming the registered cells) on unknown impl/layout."""
-    registry.resolve(REPRO_IMPL, layout=REPRO_LAYOUT)
+    """Fail fast (naming the registered cells) on unknown coordinates."""
+    registry.resolve(REPRO_IMPL, layout=REPRO_LAYOUT, family=REPRO_FAMILY)
 
 
 def pytest_report_header(config):
-    """Show which kernel impl/layout this session's default engines use."""
+    """Show which kernel impl/layout/family this session defaults to."""
     return (f"repro kernel impl: {REPRO_IMPL} (set REPRO_IMPL=ref|pallas); "
-            f"register layout: {REPRO_LAYOUT} (set REPRO_LAYOUT=byte|packed)")
+            f"register layout: {REPRO_LAYOUT} (set REPRO_LAYOUT=byte|packed); "
+            f"sketch family: {REPRO_FAMILY} (set REPRO_FAMILY=hll|ads)")

@@ -1,0 +1,295 @@
+"""ADS (All-Distances Sketch / HIP) family: math, engine, serving, ckpt.
+
+The acceptance contract of the sketch-family abstraction (DESIGN.md §13):
+
+* the HIP estimators are correct against the exact BFS oracle within the
+  documented tolerance, on both backends;
+* the three distance query kinds serve end-to-end through the
+  micro-batch frontend bit-identically to direct engine calls;
+* cross-family queries and checkpoint restores fail with typed errors
+  (``UnsupportedQuery`` / ``FamilyMismatch``) naming the families,
+  never a silent misread of register bytes;
+* same-family checkpoints round-trip bit-identically on both backends
+  (and both layouts for HLL — ADS is byte-layout only, rejected
+  otherwise, because 4-bit packing would saturate the 2^register HIP
+  weights).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import ads
+from repro.core.hll import HLLConfig
+from repro.ckpt.checkpoint import FamilyMismatch
+from repro.engine.base import UnsupportedQuery
+from repro.graph import exact, generators as gen
+from repro.kernels import registry
+from repro.serve import ContinuousServer, QueryServer
+
+IMPL = os.environ.get("REPRO_IMPL", "ref")
+
+T_MAX = 3
+
+
+@pytest.fixture(scope="module")
+def graph():
+    """One small power-law graph + its exact BFS curve (module-cached)."""
+    edges = gen.rmat(8, 8, seed=5)
+    n = int(edges.max()) + 1
+    return edges, n, exact.neighborhood_truth(n, edges, T_MAX)
+
+
+def _ads_engine(edges, n, backend="local"):
+    """ADS engine under the session impl; layout pinned to byte (the only
+    ADS layout), so the packed CI leg still runs this file."""
+    return engine.build(edges, n, ads.ADSConfig(p=8), backend=backend,
+                        impl=IMPL, layout="byte", family="ads")
+
+
+# ------------------------------------------------------------- core math
+def test_hip_delta_matches_definition():
+    """Register j rising x -> y contributes 2^x (the HIP unbiased term)."""
+    prev = np.array([[0, 3, 7], [2, 2, 2]], np.uint8)
+    cur = np.array([[1, 3, 9], [2, 5, 1]], np.uint8)
+    out = np.asarray(ads.hip_delta(prev, cur))
+    # row 0: regs 0 (2^0) and 2 (2^7) rose; row 1: reg 1 rose (2^2);
+    # reg 2 *fell* (illegal under max-merge, must contribute nothing)
+    assert out.tolist() == [2 ** 0 + 2 ** 7, 2 ** 2]
+
+
+def test_hip_curve_is_monotone_and_histogram_nonnegative(graph):
+    edges, n, _ = graph
+    eng = _ads_engine(edges, n)
+    hist, glob = eng.distance_histogram(T_MAX)
+    assert hist.shape == (T_MAX, n) and glob.shape == (T_MAX,)
+    assert (hist >= 0).all() and (glob >= 0).all()
+    assert np.allclose(glob, hist.sum(axis=1))
+
+
+def test_effective_diameter_quantile_validation(graph):
+    edges, n, _ = graph
+    eng = _ads_engine(edges, n)
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            eng.effective_diameter(2, q=bad)
+
+
+# --------------------------------------------- accuracy vs the BFS oracle
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+def test_hip_accuracy_within_documented_tolerance(graph, backend):
+    """DESIGN.md §13: global curve MRE < 2·rel_std(p), per-vertex <
+    3·rel_std(p), effective diameter within half a hop of the exact
+    curve's interpolation."""
+    edges, n, truth = graph
+    eng = _ads_engine(edges, n, backend=backend)
+    hist, glob = eng.distance_histogram(T_MAX)
+    curve = np.cumsum(np.asarray(hist, np.float64), axis=0)
+    est_glob = np.cumsum(np.asarray(glob, np.float64))
+    truth_glob = truth.sum(axis=1).astype(np.float64)
+    tol = ads.rel_std(8)
+    global_mre = np.mean(np.abs(est_glob - truth_glob)
+                         / np.maximum(truth_glob, 1.0))
+    assert global_mre < 2 * tol, global_mre
+    mask = truth > 0
+    pervertex = np.mean(np.abs(curve[mask] - truth[mask]) / truth[mask])
+    assert pervertex < 3 * tol, pervertex
+    eff = eng.effective_diameter(T_MAX, q=0.9)
+    eff_exact = ads.effective_diameter_from_curve(truth_glob, q=0.9)
+    assert abs(eff - eff_exact) < 0.5, (eff, eff_exact)
+
+
+def test_closeness_matches_curve_definition(graph):
+    """closeness = reach / sum(t * h^t), computed from the same curve."""
+    edges, n, _ = graph
+    eng = _ads_engine(edges, n)
+    hist, _ = eng.distance_histogram(T_MAX)
+    close = eng.closeness(T_MAX)
+    curve = np.cumsum(np.asarray(hist, np.float64), axis=0)
+    expect = ads.closeness_from_curve(curve)
+    assert np.array_equal(np.asarray(close), expect)
+
+
+# --------------------------------------------------------------- serving
+def test_distance_kinds_serve_bit_identically(graph):
+    edges, n, _ = graph
+    direct = _ads_engine(edges, n)
+    h0, g0 = direct.distance_histogram(T_MAX)
+    c0 = direct.closeness(T_MAX)
+    d0 = direct.effective_diameter(T_MAX, q=0.9)
+    with QueryServer(_ads_engine(edges, n)) as srv:
+        srv.pause()  # force the requests into one coalesced drain
+        import threading
+        results = {}
+        def ask(name, fn):
+            results[name] = fn()
+        threads = [
+            threading.Thread(target=ask, args=(
+                "h", lambda: srv.distance_histogram(T_MAX))),
+            threading.Thread(target=ask, args=(
+                "h1", lambda: srv.distance_histogram(1))),
+            threading.Thread(target=ask, args=(
+                "c", lambda: srv.closeness(T_MAX))),
+            threading.Thread(target=ask, args=(
+                "d", lambda: srv.effective_diameter(T_MAX, q=0.9))),
+        ]
+        for t in threads:
+            t.start()
+        srv.resume()
+        for t in threads:
+            t.join()
+    h, g = results["h"]
+    assert np.array_equal(np.asarray(h), np.asarray(h0))
+    assert np.array_equal(np.asarray(g), np.asarray(g0))
+    # the t=1 request got the prefix of the same coalesced call
+    h1, g1 = results["h1"]
+    assert np.array_equal(np.asarray(h1), np.asarray(h0)[:1])
+    assert np.array_equal(np.asarray(g1), np.asarray(g0)[:1])
+    assert np.array_equal(np.asarray(results["c"]), np.asarray(c0))
+    assert results["d"] == d0
+
+
+def test_distance_kinds_serve_continuously(graph):
+    """The snapshot-rotating frontend serves the same three kinds."""
+    edges, n, _ = graph
+    direct = _ads_engine(edges, n)
+    with ContinuousServer(_ads_engine(edges, n)) as srv:
+        h, g = srv.distance_histogram(T_MAX)
+        assert np.array_equal(np.asarray(h),
+                              np.asarray(direct.distance_histogram(T_MAX)[0]))
+        assert np.array_equal(np.asarray(srv.closeness(T_MAX)),
+                              np.asarray(direct.closeness(T_MAX)))
+        assert (srv.effective_diameter(T_MAX)
+                == direct.effective_diameter(T_MAX))
+
+
+def test_stats_schema_is_native_and_json_clean(graph):
+    """Satellite: stats() holds only native types; json.dumps needs no
+    default= hook (the --stats emission bug this PR fixes)."""
+    edges, n, _ = graph
+    def check(node, path="stats"):
+        assert not isinstance(node, (np.generic, np.ndarray)), path
+        if isinstance(node, dict):
+            for k, v in node.items():
+                assert isinstance(k, str), path
+                check(v, f"{path}.{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                check(v, f"{path}[{i}]")
+        else:
+            assert node is None or isinstance(node, (bool, int, float, str)), \
+                (path, type(node))
+    with QueryServer(_ads_engine(edges, n)) as srv:
+        srv.distance_histogram(2)
+        st = srv.stats()
+        check(st)
+        json.dumps(st)
+        assert st["family"] == "ads"
+    with ContinuousServer(engine.build(edges, n, HLLConfig(p=8),
+                                       impl=IMPL, layout="byte")) as srv:
+        srv.degrees()
+        st = srv.stats()
+        check(st)
+        json.dumps(st)
+        assert st["family"] == "hll"
+
+
+# ----------------------------------------------------- family boundaries
+def test_cross_family_queries_raise_typed(graph):
+    edges, n, _ = graph
+    hll_eng = engine.build(edges, n, HLLConfig(p=8), impl=IMPL,
+                           layout="byte")
+    ads_eng = _ads_engine(edges, n)
+    for call in (lambda: hll_eng.distance_histogram(2),
+                 lambda: hll_eng.closeness(2),
+                 lambda: hll_eng.effective_diameter(2)):
+        with pytest.raises(UnsupportedQuery, match="hll"):
+            call()
+    for call in (lambda: ads_eng.union_size([np.array([0, 1])]),
+                 lambda: ads_eng.intersection_size(edges[:2]),
+                 lambda: ads_eng.triangle_heavy_hitters(4)):
+        with pytest.raises(UnsupportedQuery, match="ads"):
+            call()
+
+
+def test_served_cross_family_queries_raise_in_the_client(graph):
+    edges, n, _ = graph
+    with QueryServer(_ads_engine(edges, n)) as srv:
+        with pytest.raises(UnsupportedQuery):
+            srv.union_size([np.array([0, 1])])
+    with QueryServer(engine.build(edges, n, HLLConfig(p=8), impl=IMPL,
+                                  layout="byte")) as srv:
+        with pytest.raises(UnsupportedQuery):
+            srv.closeness(2)
+
+
+def test_ads_rejects_packed_layout(graph):
+    edges, n, _ = graph
+    with pytest.raises(ValueError, match="layout"):
+        engine.build(edges, n, ads.ADSConfig(p=8), layout="packed",
+                     family="ads")
+    assert registry.family("ads").layouts == ("byte",)
+
+
+def test_default_family_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FAMILY", raising=False)
+    assert engine.default_family() == "hll"
+    monkeypatch.setenv("REPRO_FAMILY", "ads")
+    assert engine.default_family() == "ads"
+    eng = engine.open(16)
+    assert eng.family.name == "ads"
+
+
+# ------------------------------------------------------------ checkpoints
+def test_cross_family_restore_raises_naming_both(graph, tmp_path):
+    edges, n, _ = graph
+    ads_dir = str(tmp_path / "ads_ck")
+    hll_dir = str(tmp_path / "hll_ck")
+    _ads_engine(edges, n).save(ads_dir)
+    engine.build(edges, n, HLLConfig(p=8), impl=IMPL,
+                 layout="byte").save(hll_dir)
+    with pytest.raises(FamilyMismatch, match="(?s)hll.*ads|ads.*hll"):
+        engine.load(ads_dir, family="hll")
+    with pytest.raises(FamilyMismatch, match="(?s)hll.*ads|ads.*hll"):
+        engine.load(hll_dir, family="ads")
+
+
+def test_cross_family_merge_raises(graph):
+    edges, n, _ = graph
+    hll_eng = engine.build(edges, n, HLLConfig(p=8), impl=IMPL,
+                           layout="byte")
+    with pytest.raises(FamilyMismatch):
+        hll_eng.merge(_ads_engine(edges, n))
+
+
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+def test_ads_checkpoint_roundtrip_bit_identical(graph, tmp_path, backend):
+    edges, n, _ = graph
+    eng = _ads_engine(edges, n, backend=backend)
+    h0, g0 = eng.distance_histogram(T_MAX)
+    path = str(tmp_path / f"ck_{backend}")
+    eng.save(path)
+    back = engine.load(path, family="ads")  # assertion form: must match
+    assert back.family.name == "ads" and back.cfg == eng.cfg
+    h1, g1 = back.distance_histogram(T_MAX)
+    assert np.array_equal(np.asarray(h0), np.asarray(h1))
+    assert np.array_equal(np.asarray(g0), np.asarray(g1))
+
+
+@pytest.mark.parametrize("backend", ["local", "sharded"])
+@pytest.mark.parametrize("layout", ["byte", "packed"])
+def test_hll_checkpoint_roundtrip_bit_identical(graph, tmp_path, backend,
+                                                layout):
+    """HLL round-trips unchanged on every (backend, layout) cell — the
+    family refactor must leave existing checkpoints bit-identical."""
+    edges, n, _ = graph
+    eng = engine.build(edges, n, HLLConfig(p=8), backend=backend,
+                       impl=IMPL, layout=layout)
+    d0 = np.asarray(eng.degrees())
+    path = str(tmp_path / f"ck_{backend}_{layout}")
+    eng.save(path)
+    back = engine.load(path)
+    assert back.family.name == "hll"
+    assert np.array_equal(d0, np.asarray(back.degrees()))

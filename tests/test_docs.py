@@ -1,10 +1,12 @@
 """Doc-coverage gate: public ``repro.engine``/``serve``/``kernels`` surface.
 
 Every public module, class, method and function under ``repro.engine``,
-``repro.serve`` and ``repro.kernels`` must carry a docstring — this is
-the same contract CI enforces with ``interrogate --fail-under 100
-src/repro/engine src/repro/serve src/repro/kernels``, duplicated here
-with stdlib ``inspect`` so the tier-1 run needs no extra dependency.
+``repro.serve`` and ``repro.kernels`` — plus the sketch-family modules
+``repro.core.ads`` and ``repro.core.families`` (the second family landed
+by the DESIGN.md §13 refactor) — must carry a docstring. This is the
+same contract CI enforces with ``interrogate --fail-under 100``,
+duplicated here with stdlib ``inspect`` so the tier-1 run needs no extra
+dependency.
 """
 import importlib
 import inspect
@@ -16,7 +18,8 @@ import repro.engine
 import repro.kernels
 import repro.serve
 
-MODULES = ["repro.engine", "repro.serve", "repro.kernels"] + [
+MODULES = ["repro.engine", "repro.serve", "repro.kernels",
+           "repro.core.ads", "repro.core.families"] + [
     f"repro.engine.{m.name}"
     for m in pkgutil.iter_modules(repro.engine.__path__)] + [
     f"repro.serve.{m.name}"
@@ -65,7 +68,10 @@ def test_public_methods_document_args_or_semantics():
     assert "bucket" in SketchEngine.ingest.__doc__  # compile-cache behavior
     assert "donated" in SketchEngine.ingest.__doc__
     assert "max" in SketchEngine.merge.__doc__.lower()  # merge semantics
-    assert "HLLConfig" in SketchEngine.merge.__doc__  # shape/config check
+    # merge documents the family gate without naming any family's config
+    # (the layering gate bans that vocabulary in engine/ outright)
+    assert "FamilyMismatch" in SketchEngine.merge.__doc__
+    assert "config" in SketchEngine.merge.__doc__
     import repro.engine as eng
     assert "n" in (eng.open.__doc__ or "")
     assert "bit-identical" in (eng.build.__doc__ or "")

@@ -1,0 +1,57 @@
+"""The family-layering gate (tools/check_layering.py) passes — and works.
+
+Tier-1 runs the same scan CI runs as a step, so a family-specific symbol
+leaking back into ``repro.engine``/``repro.serve`` fails the ordinary
+test suite too, not just the CI step (DESIGN.md §13).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(REPO, "tools", "check_layering.py")
+
+sys.path.insert(0, os.path.join(REPO, "tools"))
+import check_layering  # noqa: E402
+
+
+def test_engine_and_serve_are_family_agnostic():
+    """The live tree has zero violations (names them all on failure)."""
+    bad = check_layering.scan(REPO)
+    assert not bad, "\n".join(f"{p}:{n}: {l}" for p, n, l in bad)
+
+
+def test_gate_catches_an_import_leak(tmp_path):
+    """A planted ``from repro.core import hll`` is detected and located."""
+    d = tmp_path / "src" / "repro" / "engine"
+    d.mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "serve").mkdir(parents=True)
+    (d / "leak.py").write_text(
+        "from repro.core import hll  # planted\n"
+        "x = 1\n")
+    bad = check_layering.scan(str(tmp_path))
+    assert len(bad) == 1
+    path, lineno, line = bad[0]
+    assert path.endswith("leak.py") and lineno == 1
+    assert "repro.core" in line
+
+
+@pytest.mark.parametrize("symbol", check_layering.BANNED)
+def test_gate_catches_banned_vocabulary(tmp_path, symbol):
+    """Each banned symbol is caught even inside a docstring."""
+    d = tmp_path / "src" / "repro" / "serve"
+    d.mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "engine").mkdir(parents=True)
+    (d / "doc.py").write_text(f'"""Pass a {symbol} here."""\n')
+    bad = check_layering.scan(str(tmp_path))
+    assert len(bad) == 1 and bad[0][1] == 1
+
+
+def test_cli_exit_status():
+    """The CI invocation exits 0 on the live tree."""
+    proc = subprocess.run([sys.executable, TOOL], capture_output=True,
+                          text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "layering gate passed" in proc.stdout

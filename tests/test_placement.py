@@ -305,3 +305,27 @@ def test_mixed_replica_batch_method_knobs(graph):
         np.testing.assert_array_equal(got["intersection"],
                                       want["intersection"])
         np.testing.assert_array_equal(got["union"], want["union"])
+
+
+def test_access_stats_reject_unknown_kinds():
+    """An unregistered kind raises instead of silently dropping counts.
+
+    Regression guard for the family refactor (DESIGN.md §13): the three
+    HIP distance kinds are registered SCAN_KINDS, anything else is a
+    loud ValueError naming the registries — a new query kind wired into
+    serving without a placement registration must fail the first time it
+    is counted, not starve the hot-vertex policy quietly.
+    """
+    acc = AccessStats(8)
+    for kind in placement.SCAN_KINDS:
+        acc.note_query(kind)  # every served kind is registered
+    assert set(("distance_histogram", "closeness",
+                "effective_diameter")) <= set(placement.SCAN_KINDS)
+    with pytest.raises(ValueError, match="unknown access kind"):
+        acc.note_query("nope")
+    with pytest.raises(ValueError, match="note_ids"):
+        acc.note_query("union")  # id-carrying kinds go via note_ids
+    with pytest.raises(ValueError, match="unknown id-carrying"):
+        acc.note_ids("degrees", [1, 2])
+    # nothing leaked into the counters from the raising calls
+    assert acc.totals() == {k: 1 for k in placement.SCAN_KINDS}

@@ -249,15 +249,16 @@ def test_resolve_checks_propagate_mask_capability():
         raise AssertionError("never called")
 
     impl = "test-maskless"
-    for op in registry.OPS:
-        registry._REGISTRY[(op, impl)] = (
+    fam = registry.family("hll")
+    for op in fam.ops:
+        registry._REGISTRY[(fam.name, op, impl)] = (
             maskless_propagate if op == "propagate" else maskless_op)
     try:
         with pytest.raises(ValueError, match="mask"):
             registry.resolve(impl)
     finally:
-        for op in registry.OPS:
-            registry._REGISTRY.pop((op, impl), None)
+        for op in fam.ops:
+            registry._REGISTRY.pop((fam.name, op, impl), None)
 
 
 def test_resolve_records_beta_estimator_fallback(graph):

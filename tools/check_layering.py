@@ -1,0 +1,75 @@
+"""Layering gate: the engine and serving layers are family-agnostic.
+
+The sketch-family abstraction (DESIGN.md §13) moves every
+family-specific symbol — configs, estimator constants, the HLL/ADS math
+— behind the :class:`repro.kernels.registry.SketchFamily` protocol. This
+gate makes the boundary enforceable: no module under ``src/repro/engine``
+or ``src/repro/serve`` may
+
+* import from ``repro.core`` (any submodule — that package IS the
+  family-specific math), or
+* mention a family-specific symbol (``HLLConfig``, ``ADSConfig``,
+  ``_NEWTON_ITERS``) anywhere in its text, docstrings included — a
+  docstring promising "pass an HLLConfig" is a layering leak just like
+  an import, because it re-couples callers to one family.
+
+Run from the repo root (CI does)::
+
+    python tools/check_layering.py
+
+Exit status is the number of violations; each prints as
+``path:line: <text>``. The gate is intentionally a dumb text scan — an
+AST walk would miss docstrings and comments, and the point is that the
+*vocabulary* of the upper layers stays family-free.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+#: directories (relative to the repo root) that must stay family-agnostic
+GATED_DIRS = ("src/repro/engine", "src/repro/serve")
+
+#: an import of the family-math package, however spelled
+_IMPORT = re.compile(r"^\s*(from|import)\s+repro\.core\b")
+
+#: family-specific vocabulary banned outright (code, comments, docstrings)
+BANNED = ("HLLConfig", "ADSConfig", "_NEWTON_ITERS")
+
+
+def scan(root: str) -> list[tuple[str, int, str]]:
+    """All violations under ``root``'s gated dirs as (path, lineno, line)."""
+    bad: list[tuple[str, int, str]] = []
+    for rel in GATED_DIRS:
+        base = os.path.join(root, rel)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                with open(path, encoding="utf-8") as f:
+                    for lineno, line in enumerate(f, start=1):
+                        if _IMPORT.match(line) or any(
+                                sym in line for sym in BANNED):
+                            bad.append((os.path.relpath(path, root),
+                                        lineno, line.rstrip()))
+    return bad
+
+
+def main() -> None:
+    """CLI entry: print violations, exit non-zero when any exist."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bad = scan(root)
+    for path, lineno, line in bad:
+        print(f"{path}:{lineno}: {line}")
+    if bad:
+        print(f"{len(bad)} layering violation(s): engine/serve must stay "
+              f"family-agnostic (no repro.core imports, none of "
+              f"{', '.join(BANNED)}; see DESIGN.md §13)")
+        sys.exit(1)
+    print("layering gate passed: engine/serve are family-agnostic")
+
+
+if __name__ == "__main__":
+    main()

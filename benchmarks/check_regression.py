@@ -80,6 +80,17 @@ SUITES = [
         "guard": ("curve_accuracy", 0.0),  # analytic: no jitter floor
     },
     {
+        "file": "BENCH_failover.json",
+        "key": ("graph", "hosts"),
+        "metric": "resume_efficiency",  # 1 - blocks_replayed/blocks_total:
+        # pure function of checkpoint cadence + fault position (device
+        # "modeled"), so any drop means recovery replayed more of the
+        # stream — checkpoints stopped covering it (recovery_ms and the
+        # propagate timings in the same file are informational only)
+        "higher_is_better": True,
+        "guard": ("blocks_total", 1.0),  # deterministic: no jitter floor
+    },
+    {
         "file": "BENCH_load.json",
         "key": ("graph", "loop"),
         "metric": "p99_speedup",  # barrier/continuous p99: machine-neutral

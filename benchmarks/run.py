@@ -32,10 +32,10 @@ def main() -> None:
     small = not args.full
 
     from benchmarks import (
-        bench_ads, bench_density, bench_heavyhitters, bench_intersection,
-        bench_kernels, bench_load, bench_neighborhood, bench_queryfusion,
-        bench_scaling, bench_serve, bench_shard, bench_theorem1,
-        roofline_report,
+        bench_ads, bench_density, bench_failover, bench_heavyhitters,
+        bench_intersection, bench_kernels, bench_load, bench_neighborhood,
+        bench_queryfusion, bench_scaling, bench_serve, bench_shard,
+        bench_theorem1, roofline_report,
     )
 
     def _out(default_path: str) -> str | None:
@@ -60,6 +60,8 @@ def main() -> None:
             small=small, quick=args.quick, out=_out(bench_shard.OUT)),
         "ads": lambda: bench_ads.run(
             small=small, quick=args.quick, out=_out(bench_ads.OUT)),
+        "failover": lambda: bench_failover.run(
+            small=small, quick=args.quick, out=_out(bench_failover.OUT)),
     }
     suites = {
         **json_suites,

@@ -25,9 +25,7 @@ This module holds the SPMD *primitives* (:func:`build_plan`,
 :func:`dist_triangle_heavy_hitters`); the public query surface that
 composes them — and the only entry point callers should use — is
 ``repro.engine.SketchEngine`` (DESIGN.md §3), which owns the
-Mesh/axis/plan and caches jitted query plans. (The PR-1 deprecation shims
-``dist_neighborhood`` / the warning wrapper around the heavy-hitter driver
-have been removed.)
+Mesh/axis/plan and caches jitted query plans.
 
 The jitted shard_map programs here are cached through the shared
 query-plan cache (``repro.engine.plans``, DESIGN.md §3b) keyed by the
@@ -413,13 +411,73 @@ def _propagate_allgather_rep(mesh: Mesh, axis: str, plan: DistPlan,
         jnp.asarray(plan.rep_gids))
 
 
+def _ring_loop(buf0, out0, ring_dst, ring_src, ring_mask, *, axis: str,
+               num: int, layout: str, overlap: bool):
+    """Shared P-step ring body; plain or double-buffered (overlap) form.
+
+    Both forms scatter-max block ``(i - s) mod P`` at step s, so the
+    sequential register-max order — and therefore the result — is
+    bit-identical. The plain form permutes ``buf`` *after* consuming it;
+    the overlap form keeps two in-flight buffers and issues the permute
+    that fetches block s+1 *before* the scatter consuming block s, so
+    XLA can run the collective-permute concurrently with the scatter
+    (classic latency-hiding decomposition; cf. the redco mesh idiom in
+    SNIPPETS.md). Peak memory rises from 2 to 3 register panels/device.
+    """
+    i = jax.lax.axis_index(axis)
+    perm = [(j, (j + 1) % num) for j in range(num)]
+
+    def apply_block(s, buf, out):
+        b = (i - s) % num  # block id currently held in buf
+        dst = jax.lax.dynamic_index_in_dim(ring_dst[0], b, keepdims=False)
+        src = jax.lax.dynamic_index_in_dim(ring_src[0], b, keepdims=False)
+        msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b, keepdims=False)
+        gathered = jnp.where(msk[:, None], buf[src], jnp.uint8(0))
+        return packing.scatter_max_rows(out, dst, gathered, layout=layout)
+
+    if not overlap:
+        def step(s, carry):
+            buf, out = carry
+            out = apply_block(s, buf, out)
+            buf = jax.lax.ppermute(buf, axis, perm)
+            return buf, out
+
+        _, out = jax.lax.fori_loop(0, num, step, (buf0, out0))
+        return out
+
+    if num == 1:  # single shard: no neighbor to prefetch from
+        return apply_block(0, buf0, out0)
+
+    # Prologue: start fetching block 1's buffer before any compute.
+    nxt0 = jax.lax.ppermute(buf0, axis, perm)
+
+    def step(s, carry):
+        buf, nxt, out = carry
+        # Issue the permute for step s+2's buffer first so it overlaps
+        # the scatter below (no data dependence between them).
+        new_nxt = jax.lax.ppermute(nxt, axis, perm)
+        out = apply_block(s, buf, out)
+        return nxt, new_nxt, out
+
+    buf, _, out = jax.lax.fori_loop(0, num - 1, step, (buf0, nxt0, out0))
+    # Epilogue: the last block needs no trailing permute.
+    return apply_block(num - 1, buf, out)
+
+
 def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
-                        regs: jax.Array, layout: str = "byte") -> jax.Array:
+                        regs: jax.Array, layout: str = "byte",
+                        overlap: bool = False) -> jax.Array:
     """One Algorithm 2 pass; ring schedule (beyond-paper optimization).
 
     Step s: shard i holds register block (i - s) mod P in ``buf`` and
     scatter-maxes the edges whose source lies in that block; the next
     permute overlaps the current scatter. Peak memory O(2 n r / P)/device.
+    ``overlap=True`` selects the explicitly double-buffered schedule
+    (engine ``schedule="ring_overlap"``): the permute fetching the next
+    block is issued *before* the scatter consuming the current one, at
+    the cost of a third in-flight buffer — see :func:`_ring_loop`. Both
+    forms are bit-identical (same sequential scatter-max order) and are
+    cached under distinct plan keys.
 
     Replica-aware plans (DESIGN.md §12) seed the output with a shard-local
     pre-pass over the replicated source rows (gathered fresh from D^{t-1}
@@ -429,32 +487,15 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
     replica-free schedule (register max commutes).
     """
     if plan.has_replicas:
-        return _propagate_ring_rep(mesh, axis, plan, regs, layout)
+        return _propagate_ring_rep(mesh, axis, plan, regs, layout,
+                                   overlap=overlap)
     num = plan.num_shards
 
     def build():
         def body(regs_local, ring_dst, ring_src, ring_mask):
-            i = jax.lax.axis_index(axis)
-            perm = [(j, (j + 1) % num) for j in range(num)]
-
-            def step(s, carry):
-                buf, out = carry
-                b = (i - s) % num  # block id currently held in buf
-                dst = jax.lax.dynamic_index_in_dim(ring_dst[0], b,
-                                                   keepdims=False)
-                src = jax.lax.dynamic_index_in_dim(ring_src[0], b,
-                                                   keepdims=False)
-                msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b,
-                                                   keepdims=False)
-                gathered = jnp.where(msk[:, None], buf[src], jnp.uint8(0))
-                out = packing.scatter_max_rows(out, dst, gathered,
-                                               layout=layout)
-                buf = jax.lax.ppermute(buf, axis, perm)
-                return buf, out
-
-            _, out = jax.lax.fori_loop(0, num, step,
-                                       (regs_local, regs_local))
-            return out
+            return _ring_loop(regs_local, regs_local, ring_dst, ring_src,
+                              ring_mask, axis=axis, num=num, layout=layout,
+                              overlap=overlap)
 
         return jax.jit(_shard_map(
             body, mesh=mesh,
@@ -463,7 +504,7 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
             out_specs=P(axis, None)))
 
     f = _jit_cached(
-        "dist_propagate_ring",
+        "dist_propagate_ring_overlap" if overlap else "dist_propagate_ring",
         (plan.n_pad, plan.num_shards, plan.ring_dst_local.shape[2]),
         None, "ref", (axis, layout), build)
     return f(
@@ -474,7 +515,8 @@ def dist_propagate_ring(mesh: Mesh, axis: str, plan: DistPlan,
 
 
 def _propagate_ring_rep(mesh: Mesh, axis: str, plan: DistPlan,
-                        regs: jax.Array, layout: str) -> jax.Array:
+                        regs: jax.Array, layout: str,
+                        overlap: bool = False) -> jax.Array:
     """Replica-aware ring pass (see :func:`dist_propagate_ring`)."""
     num = plan.num_shards
 
@@ -485,30 +527,11 @@ def _propagate_ring_rep(mesh: Mesh, axis: str, plan: DistPlan,
 
             def body(regs_local, ring_dst, ring_src, ring_mask, rep_dst,
                      rep_slot, rep_mask, rep_rows):
-                i = jax.lax.axis_index(axis)
-                perm = [(j, (j + 1) % num) for j in range(num)]
                 out0 = _rep_prepass(regs_local, rep_dst[0], rep_slot[0],
                                     rep_mask[0], rep_rows, layout)
-
-                def step(s, carry):
-                    buf, out = carry
-                    b = (i - s) % num
-                    dst = jax.lax.dynamic_index_in_dim(ring_dst[0], b,
-                                                       keepdims=False)
-                    src = jax.lax.dynamic_index_in_dim(ring_src[0], b,
-                                                       keepdims=False)
-                    msk = jax.lax.dynamic_index_in_dim(ring_mask[0], b,
-                                                       keepdims=False)
-                    gathered = jnp.where(msk[:, None], buf[src],
-                                         jnp.uint8(0))
-                    out = packing.scatter_max_rows(out, dst, gathered,
-                                                   layout=layout)
-                    buf = jax.lax.ppermute(buf, axis, perm)
-                    return buf, out
-
-                _, out = jax.lax.fori_loop(0, num, step,
-                                           (regs_local, out0))
-                return out
+                return _ring_loop(regs_local, out0, ring_dst, ring_src,
+                                  ring_mask, axis=axis, num=num,
+                                  layout=layout, overlap=overlap)
 
             return _shard_map(
                 body, mesh=mesh,
@@ -523,7 +546,8 @@ def _propagate_ring_rep(mesh: Mesh, axis: str, plan: DistPlan,
         return jax.jit(outer)
 
     f = _jit_cached(
-        "dist_propagate_ring_rep",
+        ("dist_propagate_ring_overlap_rep" if overlap
+         else "dist_propagate_ring_rep"),
         (plan.n_pad, plan.num_shards, plan.ring_dst_local.shape[2],
          plan.rep_dst_local.shape[1], plan.rep_gids.shape[0]),
         None, "ref", (axis, layout), build)

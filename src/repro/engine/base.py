@@ -82,7 +82,9 @@ ENGINE_FORMAT = "degreesketch-engine-v1"
 
 #: Algorithm 2 schedules every backend accepts ("auto" resolves per
 #: backend; the local backend runs one dataflow but still validates).
-SCHEDULES = ("auto", "ring", "allgather")
+#: "ring_overlap" is the double-buffered ring that issues the permute
+#: fetching block s+1 before the scatter consuming block s (DESIGN.md §14).
+SCHEDULES = ("auto", "ring", "ring_overlap", "allgather")
 
 
 class SnapshotFrozen(RuntimeError):
@@ -1079,19 +1081,20 @@ class SketchEngine(abc.ABC):
     def _save_extra(self) -> dict:
         return {}
 
-    def save(self, path: str, step: int = 0) -> str:
-        """Persist the accumulated sketch (registers + config + metadata).
+    def checkpoint_state(self) -> tuple[dict, dict]:
+        """Return the ``(tree, extra)`` pair :meth:`save` would persist.
 
-        Layout is a ``repro.ckpt`` checkpoint: one .npy per leaf plus a
-        manifest whose ``extra`` dict records the sketch family + config,
-        backend, ingested edge count and plan metadata. Only the n true
-        vertex rows
-        are stored — padding is backend-dependent and reconstructed on
-        load. Saving is legal *mid-stream*: the panel is a valid sketch of
-        everything ingested so far, and a loaded engine resumes ingestion
-        where this one stopped (registers and edge list pick up exactly).
+        The hook the failover runtime builds on: ``tree`` leaves are host
+        ``np.ndarray``s (registers sliced to the n true rows, the edge
+        list, the replica id set if placement installed one) and ``extra``
+        is the manifest metadata including the ``m_ingested`` resume
+        cursor. Feeding the pair to ``ckpt.AsyncCheckpointer.save`` takes
+        an engine-format checkpoint *asynchronously* — ``engine.load``
+        restores it at any shard count — which is how the coordinator
+        (``repro.runtime.coordinator``, DESIGN.md §14) overlaps durability
+        with ingest. The snapshot is consistent: call it between ingest
+        blocks, not concurrently with one.
         """
-        from repro.ckpt.checkpoint import save_checkpoint
         edges = self.edges
         tree = {"regs": np.asarray(self._regs)[: self.n]}
         if edges is not None:
@@ -1111,4 +1114,20 @@ class SketchEngine(abc.ABC):
             "cfg": self.family.config_dict(self.cfg),
         }
         extra.update(self._save_extra())
+        return tree, extra
+
+    def save(self, path: str, step: int = 0) -> str:
+        """Persist the accumulated sketch (registers + config + metadata).
+
+        Layout is a ``repro.ckpt`` checkpoint: one .npy per leaf plus a
+        manifest whose ``extra`` dict records the sketch family + config,
+        backend, ingested edge count and plan metadata. Only the n true
+        vertex rows
+        are stored — padding is backend-dependent and reconstructed on
+        load. Saving is legal *mid-stream*: the panel is a valid sketch of
+        everything ingested so far, and a loaded engine resumes ingestion
+        where this one stopped (registers and edge list pick up exactly).
+        """
+        from repro.ckpt.checkpoint import save_checkpoint
+        tree, extra = self.checkpoint_state()
         return save_checkpoint(path, step, tree, extra=extra)

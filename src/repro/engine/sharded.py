@@ -223,16 +223,18 @@ class ShardedEngine(SketchEngine):
         return jax.device_put(full, NamedSharding(self.mesh, P(_AXIS, None)))
 
     def _propagate(self, regs, schedule):
-        if schedule in ("auto", "ring"):
+        if schedule in ("auto", "ring", "ring_overlap"):
             return sd.dist_propagate_ring(self.mesh, self.axis, self.plan,
-                                          regs, layout=self.layout)
+                                          regs, layout=self.layout,
+                                          overlap=(schedule ==
+                                                   "ring_overlap"))
         if schedule == "allgather":
             return sd.dist_propagate_allgather(self.mesh, self.axis,
                                                self.plan, regs,
                                                layout=self.layout)
         raise ValueError(
-            f"schedule must be 'auto', 'ring' or 'allgather', got "
-            f"{schedule!r}")
+            f"schedule must be 'auto', 'ring', 'ring_overlap' or "
+            f"'allgather', got {schedule!r}")
 
     def triangle_heavy_hitters(self, k, *, mode="edge", iters=30):
         """Algorithms 4/5 over the mesh (see base class for the contract).

@@ -1,1 +1,14 @@
-from repro.runtime.ft import FTConfig, StragglerWatchdog, train_loop  # noqa: F401
+"""Fault-tolerant runtime: checkpointed loops, failover coordination.
+
+``repro.runtime.ft`` carries the per-step machinery (async-checkpointed
+``train_loop``, retry policy, warmup-aware ``StragglerWatchdog``);
+``repro.runtime.coordinator`` is the multi-host failover control loop
+(heartbeat/lease eviction, elastic restore, ``m_ingested`` resume) and
+``repro.runtime.faults`` its deterministic fault-injection plan
+(DESIGN.md §14). The coordinator modules import the engine stack, so
+they are exposed lazily — ``from repro.runtime.coordinator import ...``
+— rather than re-exported here.
+"""
+from repro.runtime.ft import (  # noqa: F401
+    FTConfig, StragglerWatchdog, coordinator, train_loop,
+)

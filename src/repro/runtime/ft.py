@@ -10,17 +10,17 @@ Design for 1000+ nodes (DESIGN.md §8), realized at container scale:
   in ckpt/checkpoint.py handles the mesh change).
 * straggler watchdog: per-step wall time vs. an EWMA; steps slower than
   ``straggler_factor`` x EWMA increment a counter and invoke a callback
-  (at scale: trigger backup-task dispatch / drop the slow host).
+  (at scale: trigger backup-task dispatch / drop the slow host). The
+  first ``warmup`` observations are excluded — cold-compile steps would
+  otherwise seed (or trip) the EWMA and over-fire on step 2.
 * async checkpointing overlaps serialization with compute.
 
-The multi-host *coordinator* itself (detect a lost host, restore from
-the async checkpoint at a smaller shard count, resume ingest mid-stream)
-is NOT implemented here — :func:`coordinator` is an explicit stub so
-nothing silently pretends otherwise. The single-process pieces it would
-compose already exist: elastic S -> S' restore is
-``engine.load(..., shards=S2)`` (DESIGN.md §12) and mid-stream resume is
-the ``m_ingested`` plumbing in ckpt/checkpoint.py. See ROADMAP item 4
-("Multi-host scale-out with overlap and failover").
+The multi-host *coordinator* (detect a lost host, evict it, restore the
+newest async checkpoint at a smaller shard count via
+``engine.load(..., shards=S2)``, resume ingest from the ``m_ingested``
+cursor) lives in :mod:`repro.runtime.coordinator` (DESIGN.md §14);
+:func:`coordinator` here delegates to it so the historical entry point
+keeps working.
 """
 from __future__ import annotations
 
@@ -35,41 +35,65 @@ __all__ = ["FTConfig", "StragglerWatchdog", "coordinator", "train_loop"]
 
 
 def coordinator(*args, **kwargs):
-    """Multi-host failover coordinator — intentionally not implemented.
+    """Multi-host failover coordinator — delegates to the real loop.
 
-    ROADMAP item 4 scopes the real thing: a ``jax.distributed`` control
-    loop that detects a lost host, evicts it, restores the newest async
-    checkpoint onto the surviving mesh via the elastic reshard path
-    (``engine.load(..., shards=S2)``, DESIGN.md §12), and resumes ingest
-    from the checkpoint's ``m_ingested`` cursor. Until that lands, this
-    stub raises so callers fail loudly instead of training without the
-    failover they asked for.
+    ROADMAP item 4 landed as :func:`repro.runtime.coordinator.coordinator`
+    (heartbeat/lease loss detection, eviction, elastic restore of the
+    newest complete async checkpoint, ``m_ingested`` resume — DESIGN.md
+    §14). This historical entry point forwards verbatim and returns its
+    ``(engine, stats)`` pair. Imported lazily to keep ``repro.runtime``
+    importable without pulling the engine stack.
     """
-    raise NotImplementedError(
-        "multi-host failover coordination is not implemented yet "
-        "(ROADMAP item 4); the elastic reshard restore it needs is "
-        "available today as engine.load(..., shards=S2)")
+    from repro.runtime.coordinator import coordinator as _real
+    return _real(*args, **kwargs)
 
 
 @dataclass
 class FTConfig:
+    """Fault-tolerance knobs shared by ``train_loop`` and the coordinator.
+
+    ``ckpt_dir``/``ckpt_every``/``keep`` shape the async checkpoint
+    stream (the coordinator counts ``ckpt_every`` in ingest *blocks*,
+    ``train_loop`` in steps); ``max_retries`` bounds transient-failure
+    retries per step; the ``straggler_*``/``ewma_alpha``/``warmup_steps``
+    trio parameterizes :class:`StragglerWatchdog`.
+    """
+
     ckpt_dir: str = "checkpoints"
     ckpt_every: int = 50
     keep: int = 3
     max_retries: int = 2
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.2
+    warmup_steps: int = 1
 
 
 @dataclass
 class StragglerWatchdog:
+    """Flags steps slower than ``factor`` x an EWMA of recent step times.
+
+    The first ``warmup`` observations are ignored outright — neither
+    judged nor folded into the EWMA. Without that, a fast bookkeeping
+    step followed by the cold-compile step seeds a tiny EWMA and the
+    watchdog over-fires on step 2 (the regression the warmup default
+    guards; see tests/test_failover.py). Straggler samples are likewise
+    kept out of the EWMA so one slow host can't drag the baseline up and
+    mask the next one.
+    """
+
     factor: float = 3.0
     alpha: float = 0.2
+    warmup: int = 1
     ewma: float | None = None
     straggler_steps: int = 0
+    seen: int = 0
     on_straggler: object = None
 
     def observe(self, dt: float) -> bool:
+        """Record one step's wall time; True iff it counts as a straggler."""
+        self.seen += 1
+        if self.seen <= self.warmup:
+            return False
         is_straggler = False
         if self.ewma is not None and dt > self.factor * self.ewma:
             self.straggler_steps += 1
@@ -96,7 +120,8 @@ def train_loop(*, step_fn, params, opt_state, corpus, num_steps: int,
 
     ckpt = AsyncCheckpointer(ft.ckpt_dir, keep=ft.keep)
     watchdog = StragglerWatchdog(factor=ft.straggler_factor,
-                                 alpha=ft.ewma_alpha)
+                                 alpha=ft.ewma_alpha,
+                                 warmup=ft.warmup_steps)
     start = 0
     last = latest_step(ft.ckpt_dir)
     if last is not None:

@@ -76,7 +76,7 @@ class ContinuousServer:
 
     def __init__(self, engine, *, rotation: RotationPolicy | None = None,
                  max_ingest_queue: int = 64, shed_watermark: int = 1024,
-                 latency_window: int = _LATENCY_WINDOW):
+                 latency_window: int = _LATENCY_WINDOW, ft=None, faults=None):
         if max_ingest_queue < 1:
             raise ValueError(
                 f"max_ingest_queue must be >= 1, got {max_ingest_queue}")
@@ -84,6 +84,32 @@ class ContinuousServer:
             raise ValueError(
                 f"shed_watermark must be >= 1, got {shed_watermark}")
         self._eng = engine
+        # failover-aware writer (DESIGN.md §14): with an
+        # ft=runtime.ft.FTConfig the writer checkpoints the engine every
+        # ft.ckpt_every applied blocks through the async checkpointer and
+        # survives a writer-host loss (runtime.faults.HostLost) by
+        # restoring the newest complete manifest and replaying the
+        # buffered entries the checkpoint does not cover — the m_ingested
+        # cursor decides exactly which, so nothing is applied twice.
+        self._ft = ft
+        self._faults = faults
+        self._ckpt = None
+        self._entry_index = 0  # fault-plan block index (applied entries)
+        self._ckpt_blocks = 0  # ingest entries since the last checkpoint
+        self._ckpt_step = 0
+        self._replay_old: list = []  # covered by the in-flight checkpoint
+        self._replay_new: list = []  # not yet in any initiated checkpoint
+        self._runtime = {"heartbeats_seen": 0, "evictions": 0,
+                         "recoveries": 0, "last_recovery_ms": None,
+                         "checkpoints_written": 0}
+        if ft is not None:
+            from repro.ckpt.checkpoint import AsyncCheckpointer
+            self._ckpt = AsyncCheckpointer(ft.ckpt_dir, keep=ft.keep)
+            # make the handover state durable so recovery always has a
+            # manifest to restore (step 0 = the engine as given to us)
+            tree, extra = engine.checkpoint_state()
+            self._ckpt.save(self._ckpt_step, tree, extra=extra)
+            self._runtime["checkpoints_written"] += 1
         self._rotation = rotation or RotationPolicy()
         self._max_ingest_queue = int(max_ingest_queue)
         self._shed_watermark = int(shed_watermark)
@@ -283,13 +309,10 @@ class ContinuousServer:
                     self._wq.clear()
                     self._inflight = len(batch)
                     self._wcv.notify_all()  # free backpressured producers
+                self._runtime["heartbeats_seen"] += 1  # one beat per drain
                 applied = 0
                 for tag, payload in batch:
-                    if tag == "ingest":
-                        self._eng.ingest(payload)
-                        applied += 1
-                    else:
-                        self._eng.replicate(payload)
+                    applied += self._apply_entry(tag, payload)
                 now = time.monotonic()
                 with self._wcv:
                     self._inflight = 0
@@ -317,6 +340,118 @@ class ContinuousServer:
         self._slot.swap(self._eng.snapshot())
         self._blocks_pending = 0
         self._oldest_pending_t = None
+
+    # ------------------------------------------------- failover (writer)
+    def _apply_entry(self, tag: str, payload) -> int:
+        """Apply one writer entry; recover through injected host losses.
+
+        Returns 1 for a first-time-applied ingest block (the
+        ``ingest_blocks_applied`` increment), 0 otherwise. Without an
+        ``ft`` config any exception propagates and kills the writer as
+        before; with one, a ``runtime.faults.HostLost`` triggers
+        :meth:`_recover_writer` and the entry is retried on the restored
+        engine (the fault plan fires each kill once per visit, so the
+        retry makes progress).
+        """
+        from repro.runtime.faults import HostLost
+        while True:
+            try:
+                if self._faults is not None:
+                    before = set(self._faults.killed)
+                    self._faults.tick(self._entry_index)
+                    lost = self._faults.killed - before
+                    if lost:
+                        raise HostLost(min(lost), self._entry_index)
+                m_before = self._eng.m
+                if tag == "ingest":
+                    self._eng.ingest(payload)
+                else:
+                    self._eng.replicate(payload)
+                break
+            except HostLost as e:
+                if self._ft is None:
+                    raise
+                self._recover_writer(e)
+        if self._ft is not None:
+            self._replay_new.append(
+                (self._entry_index, tag, payload, m_before))
+            self._entry_index += 1
+            if tag == "ingest":
+                self._ckpt_blocks += 1
+                if self._ckpt_blocks >= self._ft.ckpt_every:
+                    self._take_checkpoint()
+        return 1 if tag == "ingest" else 0
+
+    def _take_checkpoint(self) -> None:
+        """Initiate an async engine checkpoint and rotate replay buffers.
+
+        ``AsyncCheckpointer.save`` waits for the previous write first, so
+        initiating step N proves step N-1 is complete — which is exactly
+        when the segment covered only by N-1 becomes safe to drop. The
+        surviving two segments always span every entry the newest
+        *complete* manifest might miss.
+        """
+        self._ckpt_step += 1
+        tree, extra = self._eng.checkpoint_state()
+        self._ckpt.save(self._ckpt_step, tree, extra=extra)
+        self._runtime["checkpoints_written"] += 1
+        self._ckpt_blocks = 0
+        self._replay_old = self._replay_new
+        self._replay_new = []
+
+    def _recover_writer(self, err) -> None:
+        """Restore the newest complete checkpoint and replay past it.
+
+        Replay is *exact*: a buffered ingest entry is reapplied only if
+        its pre-apply ``m`` cursor is at or beyond the restored engine's
+        ``m_ingested`` (entries below it are already inside the
+        checkpoint; reapplying would duplicate edge rows). Replicate
+        entries are idempotent and always reapplied. Replay consults the
+        fault plan with the entries' original indices, so a second
+        injected failure lands *during* recovery and restarts it — the
+        double-failure case — bounded by the (finite) fault plan.
+        """
+        from repro.ckpt.checkpoint import latest_step
+        from repro.runtime.faults import HostLost
+        t0 = time.monotonic()
+        self._faults.killed.discard(err.host)  # the host process restarts
+        while True:
+            self._ckpt.wait()  # an in-flight write may complete and win
+            step = latest_step(self._ft.ckpt_dir)
+            from repro import engine as engine_mod
+            eng = engine_mod.load(self._ft.ckpt_dir, step=step)
+            try:
+                for entry in self._replay_old + self._replay_new:
+                    self._replay_one(eng, *entry)
+                break
+            except HostLost as e2:
+                self._runtime["recoveries"] += 1
+                self._faults.killed.discard(e2.host)
+        self._eng = eng
+        self._runtime["recoveries"] += 1
+        self._runtime["last_recovery_ms"] = (time.monotonic() - t0) * 1e3
+
+    def _replay_one(self, eng, idx: int, tag: str, payload,
+                    m_before: int) -> None:
+        """Re-drive one buffered entry against a restored engine.
+
+        ``m_before`` was the engine's ``m_ingested`` cursor when the
+        entry first applied; an ingest block whose cursor is below the
+        restored engine's is already inside the checkpoint and is
+        skipped, keeping the edge list duplicate-free.
+        """
+        from repro.runtime.faults import HostLost
+        if self._faults is not None:
+            before = set(self._faults.killed)
+            self._faults.tick(idx)
+            lost = self._faults.killed - before
+            if lost:
+                raise HostLost(min(lost), idx)
+        if tag == "ingest":
+            if m_before >= eng.m:
+                eng.ingest(payload)
+        else:
+            eng.replicate(payload)
 
     # ------------------------------------------------------------- clients
     def _submit(self, kind: str, payload: tuple,
@@ -484,7 +619,10 @@ class ContinuousServer:
         written against ``QueryServer`` can read either server's stats.
         ``access`` (per-vertex hot-set counters from the reader) and
         ``replicated`` (installed replica count) match ``QueryServer``'s
-        keys too (DESIGN.md §12).
+        keys too (DESIGN.md §12). ``runtime`` reports the failover-aware
+        writer's counters (heartbeats seen — one per queue drain —
+        evictions, recoveries, last recovery ms, checkpoints written;
+        DESIGN.md §14), all zero/None when no ``ft`` config is set.
         """
         with self._rcv:
             out: dict = {"queue_depth": len(self._rq)}
@@ -501,6 +639,7 @@ class ContinuousServer:
         with self._wcv:
             out["ingest_queue_depth"] = len(self._wq) + self._inflight
             out["ingest_blocks_applied"] = self._blocks_applied
+            out["runtime"] = dict(self._runtime)
         out["snapshot"] = self._slot.stats(writer_version=self._eng.version)
         out["epoch"] = out["snapshot"]["version"]
         out["access"] = self._access.snapshot()

@@ -493,6 +493,12 @@ class QueryServer:
         self._fused_batches = 0
         self._latency_window = int(latency_window)
         self._trace_base = plans.trace_counts()  # delta baseline for stats
+        # runtime block schema parity with ContinuousServer (DESIGN.md
+        # §14): the epoch-barrier server has no failover writer, so only
+        # the worker's drain heartbeats ever move
+        self._runtime = {"heartbeats_seen": 0, "evictions": 0,
+                         "recoveries": 0, "last_recovery_ms": None,
+                         "checkpoints_written": 0}
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="sketch-query-server")
         self._worker.start()
@@ -730,11 +736,16 @@ class QueryServer:
         (DESIGN.md §13) and ``replicated`` (the installed hot-vertex
         replica count). The snapshot is passed through :func:`to_native`,
         so every value is a native Python type and ``json.dumps`` works
-        without a ``default=`` escape hatch.
+        without a ``default=`` escape hatch. ``runtime`` mirrors the
+        continuous frontend's failover counters (DESIGN.md §14) —
+        here only ``heartbeats_seen`` (worker queue drains) moves; the
+        epoch-barrier server has no failover-aware writer to evict or
+        recover.
         """
         with self._cv:
             out: dict = {"epoch": self._epoch,
-                         "queue_depth": len(self._queue)}
+                         "queue_depth": len(self._queue),
+                         "runtime": dict(self._runtime)}
             total = 0
             for kind, s in self._stats.items():
                 out[kind] = s.snapshot()
@@ -798,6 +809,7 @@ class QueryServer:
                         return
                     batch = list(self._queue)
                     self._queue.clear()
+                    self._runtime["heartbeats_seen"] += 1
                 try:
                     self._serve(batch)
                 except Exception as e:  # noqa: BLE001 — never hang clients

@@ -262,8 +262,11 @@ class TestStatsSurface:
                     "requests_per_sec", "fused_batches", "shed_total",
                     "deadline_misses", "plan_traces", "plan_cache",
                     "ingest_queue_depth", "ingest_blocks_applied",
-                    "snapshot"):
+                    "snapshot", "runtime"):
             assert key in st, key
+        for key in ("heartbeats_seen", "evictions", "recoveries",
+                    "last_recovery_ms", "checkpoints_written"):
+            assert key in st["runtime"], key
         for key in ("version", "rotations", "age_seconds",
                     "writer_version", "version_lag"):
             assert key in st["snapshot"], key

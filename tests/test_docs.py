@@ -1,7 +1,8 @@
-"""Doc-coverage gate: public ``repro.engine``/``serve``/``kernels`` surface.
+"""Doc-coverage gate: public engine/serve/kernels/runtime surface.
 
 Every public module, class, method and function under ``repro.engine``,
-``repro.serve`` and ``repro.kernels`` — plus the sketch-family modules
+``repro.serve``, ``repro.kernels`` and ``repro.runtime`` (the failover
+coordinator, DESIGN.md §14) — plus the sketch-family modules
 ``repro.core.ads`` and ``repro.core.families`` (the second family landed
 by the DESIGN.md §13 refactor) — must carry a docstring. This is the
 same contract CI enforces with ``interrogate --fail-under 100``,
@@ -16,16 +17,19 @@ import pytest
 
 import repro.engine
 import repro.kernels
+import repro.runtime
 import repro.serve
 
-MODULES = ["repro.engine", "repro.serve", "repro.kernels",
+MODULES = ["repro.engine", "repro.serve", "repro.kernels", "repro.runtime",
            "repro.core.ads", "repro.core.families"] + [
     f"repro.engine.{m.name}"
     for m in pkgutil.iter_modules(repro.engine.__path__)] + [
     f"repro.serve.{m.name}"
     for m in pkgutil.iter_modules(repro.serve.__path__)] + [
     f"repro.kernels.{m.name}"
-    for m in pkgutil.iter_modules(repro.kernels.__path__)]
+    for m in pkgutil.iter_modules(repro.kernels.__path__)] + [
+    f"repro.runtime.{m.name}"
+    for m in pkgutil.iter_modules(repro.runtime.__path__)]
 
 
 def _public_members(obj, modname):

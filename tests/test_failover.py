@@ -1,0 +1,395 @@
+"""Failover runtime (ISSUE 10): coordinator, fault injection, recovery.
+
+Acceptance contract: kill-host-at-block-k recovers via the elastic
+reshard path + ``m_ingested`` resume with post-recovery answers
+bit-identical to an uninterrupted build — across register layouts and
+sketch families — plus the edge cases: a host lost *during* an async
+checkpoint write restores the previous complete manifest, a double
+failure before recovery completes, and replica ids surviving recovery.
+The warmup-aware straggler watchdog regression and the double-buffered
+``ring_overlap`` propagate schedule land in the same PR and are covered
+here too. The 8-device sharded eviction path (4 hosts -> 3 shards) runs
+as a subprocess smoke (slow marker), the same entry CI drives.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.ads import ADSConfig
+from repro.core.hll import HLLConfig
+from repro.engine import plans
+from repro.engine.base import SCHEDULES
+from repro.graph import generators as gen
+from repro.runtime.coordinator import (ClusterFailed, CoordinatorConfig,
+                                       coordinator)
+from repro.runtime.faults import (DropHeartbeat, FaultInjector, HostLost,
+                                  KillHost, SlowHost)
+from repro.runtime.ft import FTConfig, StragglerWatchdog
+from repro.runtime import ft as ft_mod
+from repro.serve.frontend import ContinuousServer
+
+CFG = HLLConfig(p=6)
+BLOCK = 64
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = gen.rmat(8, 8, seed=11)
+    return edges, int(edges.max()) + 1
+
+
+def _cfg_for(family):
+    return CFG if family == "hll" else ADSConfig(p=6)
+
+
+def _assert_same_answers(a, b, family):
+    """Bit-identity on the family-portable query surface."""
+    np.testing.assert_array_equal(a.degrees(), b.degrees())
+    for sched in ("ring", "ring_overlap"):
+        l1, g1 = a.neighborhood(2, schedule=sched)
+        l2, g2 = b.neighborhood(2, schedule=sched)
+        np.testing.assert_array_equal(l1, l2)
+        np.testing.assert_array_equal(g1, g2)
+    if family == "hll":
+        np.testing.assert_array_equal(a.union_size([[0, 1, 2]]),
+                                      b.union_size([[0, 1, 2]]))
+    else:
+        h1, _ = a.distance_histogram(2)
+        h2, _ = b.distance_histogram(2)
+        np.testing.assert_array_equal(h1, h2)
+
+
+# --------------------------------------------------------------- watchdog
+class TestStragglerWatchdog:
+    def test_warmup_excludes_cold_compile_regression(self):
+        """The seeded-from-step-1 bug: a fast bookkeeping step before the
+        cold compile seeded a tiny EWMA and step 2 falsely fired."""
+        wd = StragglerWatchdog(factor=3.0, alpha=0.2, warmup=1)
+        assert not wd.observe(0.005)  # warmup: ignored outright
+        assert not wd.observe(2.0)    # cold compile seeds the EWMA now
+        assert not wd.observe(0.06)
+        assert wd.straggler_steps == 0
+
+    def test_old_behavior_reproduced_with_warmup_zero(self):
+        wd = StragglerWatchdog(factor=3.0, alpha=0.2, warmup=0)
+        assert not wd.observe(0.005)  # seeds EWMA from the fast step
+        assert wd.observe(2.0)        # ...so the compile step over-fires
+        assert wd.straggler_steps == 1
+
+    def test_genuine_straggler_still_fires_after_warmup(self):
+        wd = StragglerWatchdog(factor=3.0, alpha=0.2, warmup=1)
+        for dt in (1.5, 0.05, 0.05, 0.05):
+            wd.observe(dt)
+        assert wd.straggler_steps == 0
+        assert wd.observe(30.0)
+        assert wd.straggler_steps == 1
+
+    def test_ftconfig_threads_warmup(self):
+        assert FTConfig().warmup_steps == 1
+
+
+# ---------------------------------------------------------- fault injector
+class TestFaultInjector:
+    def test_kill_fires_on_requested_visit_only(self):
+        inj = FaultInjector(faults=(KillHost(host=1, at_block=3,
+                                             at_visit=2),))
+        inj.tick(3)
+        assert not inj.is_dead(1)
+        inj.tick(3)
+        assert inj.is_dead(1)
+        assert len(inj.fired) == 1
+
+    def test_heartbeat_drop_window(self):
+        inj = FaultInjector(faults=(DropHeartbeat(host=0, at_block=2,
+                                                  count=2),))
+        assert inj.heartbeat_visible(0, 1)
+        assert not inj.heartbeat_visible(0, 2)
+        assert not inj.heartbeat_visible(0, 3)
+        assert inj.heartbeat_visible(0, 4)
+        assert inj.heartbeat_visible(1, 2)  # other hosts unaffected
+
+    def test_dead_hosts_never_beat_and_delay_sums(self):
+        inj = FaultInjector(faults=(SlowHost(host=1, at_block=5,
+                                             delay_s=0.2),))
+        inj.fence(0)
+        assert not inj.heartbeat_visible(0, 9)
+        assert inj.delay(1, 5) == pytest.approx(0.2)
+        assert inj.delay(1, 6) == 0.0
+
+
+# ------------------------------------------------------------- coordinator
+@pytest.mark.parametrize("family,layout", [("hll", "byte"),
+                                           ("hll", "packed"),
+                                           ("ads", "byte")])
+def test_kill_host_recovers_bit_identical(graph, family, layout):
+    """Acceptance: kill-at-block-k -> evict -> restore newest complete
+    checkpoint -> m_ingested resume; answers match an uninterrupted
+    build bit-for-bit on every layout/family combination."""
+    edges, n = graph
+    cfg = _cfg_for(family)
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=3, block=BLOCK, ckpt_every=2)
+        inj = FaultInjector(faults=(KillHost(host=2, at_block=5),))
+        eng, stats = coordinator(edges, n, cfg, ft=ft, config=cc,
+                                 faults=inj, family=family, layout=layout)
+        assert stats["recoveries"] == 1
+        assert stats["evictions"] == 1
+        assert stats["hosts_evicted"] == [2]
+        assert stats["hosts_alive"] == 2
+        assert stats["blocks_replayed"] >= 1
+        assert stats["last_recovery_ms"] is not None
+        assert eng.m == len(edges)
+        ref = engine.build(edges, n, cfg, family=family, layout=layout)
+        _assert_same_answers(eng, ref, family)
+
+
+def test_ft_coordinator_entry_point_delegates(graph):
+    """The historical runtime.ft.coordinator stub now runs the real loop."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        eng, stats = ft_mod.coordinator(
+            edges[:256], n, CFG, ft=FTConfig(ckpt_dir=os.path.join(d, "c")),
+            config=CoordinatorConfig(hosts=2, block=BLOCK))
+        assert stats["recoveries"] == 0
+        assert eng.m == 256
+
+
+def test_lease_expiry_evicts_silent_host(graph):
+    """Drop-heartbeat longer than the lease is indistinguishable from
+    death: the silent host is evicted and the run still matches."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=3, block=BLOCK, ckpt_every=2,
+                               lease_blocks=2)
+        inj = FaultInjector(faults=(DropHeartbeat(host=1, at_block=4,
+                                                  count=50),))
+        eng, stats = coordinator(edges, n, CFG, ft=ft, config=cc,
+                                 faults=inj)
+        assert stats["evictions"] == 1
+        assert stats["hosts_evicted"] == [1]
+        assert stats["heartbeats_seen"] > 0
+        _assert_same_answers(eng, engine.build(edges, n, CFG), "hll")
+
+
+def test_short_heartbeat_drop_is_absorbed(graph):
+    """A drop shorter than the lease must NOT evict anybody."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=3, block=BLOCK, lease_blocks=3)
+        inj = FaultInjector(faults=(DropHeartbeat(host=1, at_block=4,
+                                                  count=2),))
+        _, stats = coordinator(edges, n, CFG, ft=ft, config=cc, faults=inj)
+        assert stats["evictions"] == 0
+        assert stats["recoveries"] == 0
+
+
+def test_slow_host_counts_straggler_without_eviction(graph):
+    """An injected straggler trips the (warmup-aware) watchdog but is
+    never evicted — slowness is not loss (DESIGN.md §14)."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=2, block=BLOCK)
+        inj = FaultInjector(faults=(SlowHost(host=0, at_block=10,
+                                             delay_s=1.0),))
+        _, stats = coordinator(edges, n, CFG, ft=ft, config=cc, faults=inj)
+        assert stats["straggler_steps"] >= 1
+        assert stats["evictions"] == 0
+        assert stats["recoveries"] == 0
+
+
+def test_lost_during_async_write_restores_previous_manifest(graph):
+    """A step directory without a manifest (host died mid-write) is
+    invisible to restore: recovery lands on the previous complete one."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "ckpt")
+        # complete checkpoint covering the first two blocks...
+        pre = engine.build(edges[: 2 * BLOCK], n, CFG)
+        pre.save(ck, step=1)
+        # ...and a newer, partially-written one (no manifest.json)
+        os.makedirs(os.path.join(ck, "step_4"))
+        np.save(os.path.join(ck, "step_4", "regs.npy"),
+                np.zeros((4, 4), np.uint8))
+        ft = FTConfig(ckpt_dir=ck, ckpt_every=10_000)  # no new ckpts
+        cc = CoordinatorConfig(hosts=2, block=BLOCK, ckpt_every=10_000)
+        inj = FaultInjector(faults=(KillHost(host=0, at_block=6),))
+        eng, stats = coordinator(edges, n, CFG, ft=ft, config=cc,
+                                 faults=inj)
+        assert stats["recoveries"] == 1
+        # resumed from the *complete* step-1 cursor: blocks 2..5 replayed
+        assert stats["blocks_replayed"] == 4
+        assert eng.m == len(edges)
+        _assert_same_answers(eng, engine.build(edges, n, CFG), "hll")
+
+
+def test_double_failure_before_recovery_completes(graph):
+    """A second host dies while the first recovery is replaying (fault
+    fires on the block's second visit); both get evicted, the run still
+    converges and matches."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=4, block=BLOCK, ckpt_every=3)
+        inj = FaultInjector(faults=(
+            KillHost(host=0, at_block=8),             # owner of block 8
+            KillHost(host=1, at_block=6, at_visit=2),  # dies during replay
+        ))
+        eng, stats = coordinator(edges, n, CFG, ft=ft, config=cc,
+                                 faults=inj)
+        assert stats["recoveries"] == 2
+        assert stats["evictions"] == 2
+        assert sorted(stats["hosts_evicted"]) == [0, 1]
+        assert stats["hosts_alive"] == 2
+        _assert_same_answers(eng, engine.build(edges, n, CFG), "hll")
+
+
+def test_replica_ids_survive_recovery(graph):
+    """A pre-installed hot-row replica set rides the checkpoint leaf
+    (DESIGN.md §12) and is intact on the recovered engine."""
+    edges, n = graph
+    ids = [0, 1, 5, 9]
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=3, block=BLOCK, ckpt_every=2)
+        inj = FaultInjector(faults=(KillHost(host=1, at_block=5),))
+        eng, stats = coordinator(edges, n, CFG, ft=ft, config=cc,
+                                 faults=inj, replicate=ids)
+        assert stats["recoveries"] == 1
+        assert eng.replicated_ids is not None
+        np.testing.assert_array_equal(np.sort(eng.replicated_ids),
+                                      np.array(ids, np.int64))
+        ref = engine.build(edges, n, CFG)
+        _assert_same_answers(eng, ref, "hll")
+
+
+def test_cluster_failed_when_too_few_hosts_survive(graph):
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"))
+        cc = CoordinatorConfig(hosts=2, block=BLOCK, min_hosts=2)
+        inj = FaultInjector(faults=(KillHost(host=0, at_block=3),))
+        with pytest.raises(ClusterFailed):
+            coordinator(edges, n, CFG, ft=ft, config=cc, faults=inj)
+
+
+def test_restart_exact_resume_without_faults(graph):
+    """run() restores the newest checkpoint on entry (restart-exact):
+    a second coordinator over the same dir replays only the tail."""
+    edges, n = graph
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "ckpt")
+        pre = engine.build(edges[: 4 * BLOCK], n, CFG)
+        pre.save(ck, step=3)
+        ft = FTConfig(ckpt_dir=ck)
+        cc = CoordinatorConfig(hosts=2, block=BLOCK)
+        eng, stats = coordinator(edges, n, CFG, ft=ft, config=cc)
+        total_blocks = -(-len(edges) // BLOCK)
+        assert stats["blocks_done"] == total_blocks - 4
+        assert eng.m == len(edges)
+        _assert_same_answers(eng, engine.build(edges, n, CFG), "hll")
+
+
+# ------------------------------------------------- failover-aware writer
+class TestContinuousServerFailover:
+    def test_writer_recovers_and_serves_bit_identical(self, graph):
+        edges, n = graph
+        blocks = np.array_split(edges, 8)
+        with tempfile.TemporaryDirectory() as d:
+            ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"), ckpt_every=2)
+            inj = FaultInjector(faults=(KillHost(host=0, at_block=5),))
+            with ContinuousServer(engine.open(n, CFG), ft=ft,
+                                  faults=inj) as srv:
+                for b in blocks:
+                    srv.ingest(b)
+                srv.replicate([1, 2, 3])
+                srv.flush()
+                deg = srv.degrees()
+                st = srv.stats()
+                m_final = srv.engine.m
+            rt = st["runtime"]
+            assert rt["recoveries"] == 1
+            assert rt["last_recovery_ms"] is not None
+            assert rt["checkpoints_written"] >= 2
+            assert rt["heartbeats_seen"] >= 1
+            # exact replay: no duplicated edge rows after recovery
+            assert m_final == len(edges)
+            ref = engine.build(edges, n, CFG)
+            np.testing.assert_array_equal(np.asarray(deg), ref.degrees())
+
+    def test_writer_double_failure_during_replay(self, graph):
+        edges, n = graph
+        blocks = np.array_split(edges[:1024], 8)
+        with tempfile.TemporaryDirectory() as d:
+            ft = FTConfig(ckpt_dir=os.path.join(d, "ckpt"), ckpt_every=3)
+            inj = FaultInjector(faults=(
+                KillHost(host=0, at_block=6),
+                KillHost(host=0, at_block=4, at_visit=2),
+            ))
+            with ContinuousServer(engine.open(n, CFG), ft=ft,
+                                  faults=inj) as srv:
+                for b in blocks:
+                    srv.ingest(b)
+                srv.flush()
+                st = srv.stats()
+                m_final = srv.engine.m
+            assert st["runtime"]["recoveries"] >= 2
+            assert m_final == 1024
+
+    def test_without_ft_config_counters_stay_zero(self, graph):
+        edges, n = graph
+        with ContinuousServer(engine.build(edges[:256], n, CFG)) as srv:
+            srv.degrees()
+            rt = srv.stats()["runtime"]
+        assert rt["recoveries"] == 0 and rt["checkpoints_written"] == 0
+        assert rt["last_recovery_ms"] is None
+
+
+# ------------------------------------------------------ ring_overlap extras
+def test_ring_overlap_in_schedule_surface(graph):
+    """ring_overlap is a first-class schedule: validated everywhere,
+    bit-identical on the sharded backend, distinct plan-cache entry."""
+    edges, n = graph
+    assert "ring_overlap" in SCHEDULES
+    sh = engine.build(edges, n, CFG, backend="sharded", shards=1)
+    l1, g1 = sh.neighborhood(2, schedule="ring")
+    l2, g2 = sh.neighborhood(2, schedule="ring_overlap")
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(g1, g2)
+    keys = list(plans.global_cache()._entries)
+    assert any(k.query == "dist_propagate_ring_overlap" for k in keys)
+    assert any(k.query == "dist_propagate_ring" for k in keys)
+
+
+def test_local_backend_validates_ring_overlap(graph):
+    edges, n = graph
+    eng = engine.build(edges[:256], n, CFG)
+    l1, g1 = eng.neighborhood(2, schedule="ring")
+    l2, g2 = eng.neighborhood(2, schedule="ring_overlap")
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(g1, g2)
+    with pytest.raises(ValueError):
+        eng.neighborhood(2, schedule="ring_pipelined")
+
+
+# ----------------------------------------------------------- 8-device smoke
+@pytest.mark.slow
+def test_failover_smoke_8dev():
+    """The CI smoke: 4-host sharded mesh, kill one, reshard to 3,
+    answers bit-identical to an uninterrupted 4-shard build."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)  # the smoke forces an 8-device host mesh
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.coordinator", "--smoke"],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "FAILOVER_SMOKE_OK" in res.stdout, res.stdout + "\n" + res.stderr

@@ -40,7 +40,7 @@ def _assert_same_answers(a, b, edges, n):
     np.testing.assert_array_equal(a.union_size(sets), b.union_size(sets))
     np.testing.assert_array_equal(a.intersection_size(edges[:11]),
                                   b.intersection_size(edges[:11]))
-    for schedule in ("ring", "allgather"):
+    for schedule in ("ring", "ring_overlap", "allgather"):
         l1, g1 = a.neighborhood(2, schedule=schedule)
         l2, g2 = b.neighborhood(2, schedule=schedule)
         np.testing.assert_array_equal(l1, l2)

@@ -410,10 +410,15 @@ def test_shutdown_alias_and_stats_schema(graph):
     st = srv.stats()
     for key in ("epoch", "queue_depth", "requests_total", "fused_batches",
                 "shed_total", "deadline_misses", "plan_traces",
-                "plan_cache"):
+                "plan_cache", "runtime"):
         assert key in st, key
     assert st["queue_depth"] == 0
     assert st["shed_total"] == 0 and st["deadline_misses"] == 0
+    for key in ("heartbeats_seen", "evictions", "recoveries",
+                "last_recovery_ms", "checkpoints_written"):
+        assert key in st["runtime"], key
+    assert st["runtime"]["heartbeats_seen"] >= 1  # worker drained queries
+    assert st["runtime"]["evictions"] == 0  # no failover writer here
     for kind in ("degrees", "union"):
         s = st[kind]
         for key in ("requests", "batches", "max_coalesced", "p50_ms",

@@ -1,0 +1,135 @@
+"""Docs-reference linter: no dead DESIGN anchors or module paths in docs.
+
+The operator docs (``docs/*.md``) and the README cite design sections
+as ``DESIGN.md §N`` (or bare ``§N`` in the architecture map) and name
+code as dotted ``repro.*`` paths. Both rot silently: a renumbered
+DESIGN section or a moved module leaves the prose pointing nowhere,
+and no test notices because prose doesn't execute. This gate makes the
+references checkable:
+
+* every ``§N`` token in a linted file must match a ``## §N`` heading
+  that actually exists in DESIGN.md;
+* every dotted ``repro.x[.y...]`` path must resolve — the longest
+  importable module prefix is imported and any remaining segments are
+  followed with ``getattr`` (so ``repro.serve.QueryServer`` and
+  ``repro.runtime.ft.coordinator`` both count, while a path to a
+  deleted module or renamed class fails);
+* every relative markdown link target must exist on disk.
+
+Run from the repo root (CI does)::
+
+    PYTHONPATH=src python tools/check_docs_refs.py
+
+Exit status is the number of dead references; each prints as
+``path:line: <reason>``. Mirrored as a tier-1 test in
+tests/test_docs_refs.py so the ordinary suite fails too.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+#: files linted, relative to the repo root (docs/ is globbed at runtime)
+EXTRA_FILES = ("README.md",)
+
+#: a design-section citation, e.g. §3a, §14 (EN DASH ranges appear as
+#: two tokens, each checked on its own)
+_SECTION = re.compile(r"§\s?([0-9]+[a-z]?)")
+
+#: a DESIGN.md heading that defines a section
+_HEADING = re.compile(r"^##\s+§([0-9]+[a-z]?)\b")
+
+#: a dotted module/attribute path rooted at the package
+_MODPATH = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+#: a relative markdown link: [text](target) — URLs and anchors excluded
+_MDLINK = re.compile(r"\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def known_sections(root: str) -> set[str]:
+    """All ``§N`` identifiers defined as DESIGN.md headings."""
+    out: set[str] = set()
+    with open(os.path.join(root, "DESIGN.md"), encoding="utf-8") as f:
+        for line in f:
+            m = _HEADING.match(line)
+            if m:
+                out.add(m.group(1))
+    return out
+
+
+def _resolve_modpath(path: str) -> bool:
+    """True iff ``repro.x.y...`` names a module, or attrs on one."""
+    parts = path.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def _linted_files(root: str) -> list[str]:
+    docs = os.path.join(root, "docs")
+    files = [os.path.join(root, f) for f in EXTRA_FILES]
+    if os.path.isdir(docs):
+        files += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                  if f.endswith(".md")]
+    return files
+
+
+def scan(root: str) -> list[tuple[str, int, str]]:
+    """All dead references as (relative path, lineno, reason)."""
+    sections = known_sections(root)
+    bad: list[tuple[str, int, str]] = []
+    seen_mod: dict[str, bool] = {}
+    for path in _linted_files(root):
+        rel = os.path.relpath(path, root)
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, start=1):
+                for m in _SECTION.finditer(line):
+                    if m.group(1) not in sections:
+                        bad.append((rel, lineno,
+                                    f"dead DESIGN.md anchor §{m.group(1)}"))
+                for m in _MODPATH.finditer(line):
+                    mod = m.group(0)
+                    if mod not in seen_mod:
+                        seen_mod[mod] = _resolve_modpath(mod)
+                    if not seen_mod[mod]:
+                        bad.append((rel, lineno,
+                                    f"dead module path {mod}"))
+                for m in _MDLINK.finditer(line):
+                    target = m.group(1)
+                    if "://" in target:
+                        continue
+                    if not os.path.exists(os.path.join(base, target)):
+                        bad.append((rel, lineno,
+                                    f"dead link target {target}"))
+    return bad
+
+
+def main() -> None:
+    """CLI entry: print dead references, exit non-zero when any exist."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    bad = scan(root)
+    for rel, lineno, reason in bad:
+        print(f"{rel}:{lineno}: {reason}")
+    if bad:
+        print(f"{len(bad)} dead docs reference(s): update the prose or "
+              f"DESIGN.md (see tools/check_docs_refs.py)")
+        sys.exit(1)
+    print("docs refs gate passed: every §-anchor, module path and link "
+          "resolves")
+
+
+if __name__ == "__main__":
+    main()

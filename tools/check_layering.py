@@ -3,8 +3,8 @@
 The sketch-family abstraction (DESIGN.md §13) moves every
 family-specific symbol — configs, estimator constants, the HLL/ADS math
 — behind the :class:`repro.kernels.registry.SketchFamily` protocol. This
-gate makes the boundary enforceable: no module under ``src/repro/engine``
-or ``src/repro/serve`` may
+gate makes the boundary enforceable: no module under ``src/repro/engine``,
+``src/repro/serve`` or ``src/repro/runtime`` may
 
 * import from ``repro.core`` (any submodule — that package IS the
   family-specific math), or
@@ -29,7 +29,7 @@ import re
 import sys
 
 #: directories (relative to the repo root) that must stay family-agnostic
-GATED_DIRS = ("src/repro/engine", "src/repro/serve")
+GATED_DIRS = ("src/repro/engine", "src/repro/serve", "src/repro/runtime")
 
 #: an import of the family-math package, however spelled
 _IMPORT = re.compile(r"^\s*(from|import)\s+repro\.core\b")
@@ -64,11 +64,11 @@ def main() -> None:
     for path, lineno, line in bad:
         print(f"{path}:{lineno}: {line}")
     if bad:
-        print(f"{len(bad)} layering violation(s): engine/serve must stay "
-              f"family-agnostic (no repro.core imports, none of "
+        print(f"{len(bad)} layering violation(s): engine/serve/runtime must "
+              f"stay family-agnostic (no repro.core imports, none of "
               f"{', '.join(BANNED)}; see DESIGN.md §13)")
         sys.exit(1)
-    print("layering gate passed: engine/serve are family-agnostic")
+    print("layering gate passed: engine/serve/runtime are family-agnostic")
 
 
 if __name__ == "__main__":
